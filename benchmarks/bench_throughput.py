@@ -1,0 +1,81 @@
+"""Paper Fig. 11: attention throughput, dense vs Energon.
+
+Wall-clock on this host (CPU, jit-compiled) across sequence lengths for
+dense / MP-MRF row / MP-MRF block paths, plus the analytic TPU-v5e
+projection from the §IV-D-derived roofline model (the paper's own
+speedup numbers come from its ASIC simulator, so the projection is the
+comparable quantity).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EnergonConfig, energon_attention
+from repro.core import performance_model as pm
+
+
+def _time(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run():
+    rows = []
+    B, H, d = 1, 4, 64
+    for n in (512, 1024, 2048):
+        rng = np.random.default_rng(0)
+        q, k, v = (
+            jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+            for _ in range(3)
+        )
+        impls = {
+            "dense": EnergonConfig(impl="dense"),
+            "mpmrf_row": EnergonConfig(impl="mpmrf_row", min_prune_layer=0),
+            "mpmrf_block": EnergonConfig(
+                impl="mpmrf_block", min_prune_layer=0, pruning_ratio=4.0
+            ),
+        }
+        times = {}
+        for name, cfg in impls.items():
+            fn = jax.jit(
+                lambda q, k, v, c=cfg: energon_attention(q, k, v, c,
+                                                         causal=True)
+            )
+            times[name] = _time(fn, q, k, v)
+        w = pm.AttentionWorkload(
+            batch=B, heads=H, q_len=n, kv_len=n, head_dim=d,
+            pruning_ratio=4.0,
+        )
+        proj = pm.tpu_attention_times(w)
+        rows.append({
+            "n": n,
+            **{f"t_{k}": v for k, v in times.items()},
+            "cpu_speedup_block": times["dense"] / times["mpmrf_block"],
+            "tpu_projected_speedup": proj["speedup"],
+        })
+    return rows
+
+
+def main(emit):
+    rows = run()
+    for r in rows:
+        emit(
+            f"throughput_n{r['n']}_dense", r["t_dense"] * 1e6,
+            "cpu wall-time",
+        )
+        emit(
+            f"throughput_n{r['n']}_mpmrf_block", r["t_mpmrf_block"] * 1e6,
+            f"cpu_speedup={r['cpu_speedup_block']:.2f}x "
+            f"tpu_projected={r['tpu_projected_speedup']:.2f}x",
+        )
+    return rows

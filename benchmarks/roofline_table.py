@@ -1,0 +1,91 @@
+"""§Roofline: assemble the per-(arch × shape × mesh) roofline table from
+the dry-run artifacts (see repro/launch/dryrun.py)."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import List, Optional
+
+from repro.analysis.roofline import RooflineReport, build_report
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_reports(mesh: str = "single") -> List[RooflineReport]:
+    base = os.path.join(ART, mesh)
+    reports = []
+    if not os.path.isdir(base):
+        return reports
+    from repro.analysis.memory_model import hbm_traffic_bytes
+    from repro.configs import shapes_for_arch
+    from repro.configs.registry import get_config
+
+    for name in sorted(os.listdir(base)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(base, name)) as f:
+            a = json.load(f)
+        cfg = get_config(a["arch"])
+        shape_cfg = next(
+            s for s in shapes_for_arch(a["arch"]) if s.name == a["shape"]
+        )
+        # mirror repro.launch.dryrun.microbatches_for without importing
+        # it (the dryrun module force-sets 512 fake devices on import)
+        model_shards = 16  # 'model' axis of both production meshes
+        dp = a["chips"] // model_shards
+        mb = 16 if a["arch"] == "qwen3-moe-235b-a22b" else 8
+        mb = min(mb, max(1, shape_cfg.global_batch // dp))
+        analytic = hbm_traffic_bytes(
+            cfg, shape_cfg, a["chips"], model_shards, mb,
+            opt_factored=True,
+        )["total"]
+        reports.append(build_report(
+            arch=a["arch"],
+            shape=a["shape"],
+            mesh_name=a["mesh"],
+            chips=a["chips"],
+            parsed_flops=a["parsed"]["flops_per_chip"],
+            parsed_traffic_bytes=a["parsed"]["traffic_bytes_per_chip"],
+            parsed_collective_bytes=a["parsed"]["collective_bytes_per_chip"],
+            model_flops=a["model_flops"],
+            raw_flops=a["cost_analysis"].get("flops"),
+            raw_bytes=a["cost_analysis"].get("bytes accessed"),
+            peak_memory_bytes=(
+                a["memory_analysis"].get("temp_size_in_bytes", 0)
+                + a["memory_analysis"].get("argument_size_in_bytes", 0)
+            ),
+            analytic_traffic_bytes=analytic,
+        ))
+    return reports
+
+
+def format_table(reports: List[RooflineReport]) -> str:
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s} "
+        f"{'coll_s':>10s} {'bound':>10s} {'MF/HLO':>7s} {'roofline%':>9s} "
+        f"{'mem GB':>7s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in reports:
+        lines.append(
+            f"{r.arch:22s} {r.shape:12s} {r.compute_s:10.4f} "
+            f"{r.memory_s:10.4f} {r.collective_s:10.4f} {r.dominant:>10s} "
+            f"{r.useful_ratio:7.3f} {100*r.roofline_fraction:8.1f}% "
+            f"{(r.peak_memory_bytes or 0)/2**30:7.2f}"
+        )
+    return "\n".join(lines)
+
+
+def main(emit):
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in load_reports(mesh):
+            emit(
+                f"roofline_{mesh}_{r.arch}_{r.shape}",
+                r.bound_time_s * 1e6,
+                f"bound={r.dominant} frac={r.roofline_fraction:.3f} "
+                f"coll_s={r.collective_s:.3f}",
+            )
+            rows.append(r.to_dict())
+    return rows

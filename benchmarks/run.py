@@ -1,0 +1,59 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract.
+Mapping to the paper (see DESIGN.md §6):
+  bench_pruning_accuracy — Fig. 4 / Fig. 10  (α-sweep, ratio vs quality)
+  bench_topk_coverage    — Table II          (coverage of true top-k)
+  bench_throughput       — Fig. 11           (dense vs Energon speed)
+  bench_perf_model       — §IV-D             (t_load:t_comp, FU:AU balance)
+  bench_dse              — Fig. 15-A         (round-config DSE → 2-4 wins)
+  bench_breakdown        — Fig. 13           (MP-MRF vs ODF contributions)
+  roofline_table         — §Roofline         (dry-run roofline terms)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_breakdown,
+        bench_dse,
+        bench_perf_model,
+        bench_pruning_accuracy,
+        bench_throughput,
+        bench_topk_coverage,
+        roofline_table,
+    )
+
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    suites = [
+        ("perf_model", bench_perf_model),
+        ("throughput", bench_throughput),
+        ("breakdown", bench_breakdown),
+        ("pruning_accuracy", bench_pruning_accuracy),
+        ("topk_coverage", bench_topk_coverage),
+        ("dse", bench_dse),
+        ("roofline", roofline_table),
+    ]
+    failures = []
+    for name, mod in suites:
+        try:
+            mod.main(emit)
+        except Exception as exc:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append((name, str(exc)))
+    if failures:
+        print(f"FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Batched serving with Energon MP-MRF decode attention.
+
+Continuous batching over fixed slots; every decode step filters the KV
+cache with low-bit scores and attends only to survivors (the paper's
+l=1 text-generation pipeline, §IV-D).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+from repro.models import LMModel
+from repro.runtime import Request, ServeLoop
+
+
+def main():
+    cfg = ModelConfig(
+        name="serve-demo", family="dense", num_layers=4, d_model=128,
+        num_heads=8, num_kv_heads=4, head_dim=16, d_ff=256,
+        vocab_size=512, dtype="float32", remat="none",
+        energon=EnergonConfig(impl="mpmrf_row", min_prune_layer=1),
+    )
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    engine = ServeLoop(model, params, batch_slots=8, max_len=160,
+                       eos_token=cfg.vocab_size - 1)
+    rng = np.random.default_rng(0)
+    n_req = 24
+    for uid in range(n_req):
+        prompt = rng.integers(1, cfg.vocab_size - 1, size=12).tolist()
+        engine.submit(Request(
+            uid=uid, prompt=prompt, max_new_tokens=24,
+            temperature=0.8 if uid % 2 else 0.0,
+        ))
+
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.tokens_out) for r in done)
+    print(f"[serve] {len(done)}/{n_req} requests, {total} tokens in "
+          f"{dt:.1f}s ({total/dt:.1f} tok/s, {engine.ticks} ticks)")
+    print(f"[serve] sample continuation (greedy): "
+          f"{done[0].tokens_out[:12]}")
+    assert len(done) == n_req
+
+
+if __name__ == "__main__":
+    main()

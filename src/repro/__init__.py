@@ -1,0 +1,3 @@
+"""repro — Energon (dynamic sparse attention) as a production JAX framework."""
+
+__version__ = "1.0.0"

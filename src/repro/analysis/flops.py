@@ -1,0 +1,69 @@
+"""Analytic FLOP / parameter accounting (exact, from eval_shape).
+
+MODEL_FLOPS follows the standard convention: 6·N·D for training
+(N = non-embedding params, D = tokens) and 2·N_active·D for forward-only
+inference steps; MoE uses active (routed) params only. Used for the
+"useful compute" ratio in §Roofline.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import LMModel
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(p, "key", getattr(p, "name", getattr(p, "idx", p))))
+        for p in path
+    )
+
+
+def param_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Exact counts from the real init under eval_shape (no allocation)."""
+    model = LMModel(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    embedding = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        p = _path_str(path)
+        if "embed/table" in p or "lm_head" in p:
+            embedding += n
+        if "/moe/" in p and "router" not in p:
+            expert += n
+    active = total
+    if cfg.family == "moe" and cfg.num_experts > 0:
+        active = total - expert + expert * cfg.experts_per_token // cfg.num_experts
+    return {
+        "total": total,
+        "embedding": embedding,
+        "non_embedding": total - embedding,
+        "expert": expert,
+        "active": active,
+        "active_non_embedding": active - embedding,
+    }
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS for one step of this (arch × shape) cell."""
+    counts = param_counts(cfg)
+    n_active = counts["active_non_embedding"]
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence (the KV-cache attention FLOPs
+    # are the *attention* workload, not parameter compute — they are
+    # accounted separately in the roofline attention terms).
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,293 @@
+"""Structural cost analysis of compiled (post-SPMD, post-fusion) HLO.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body
+**once**, which under-reports scan-over-layers models by ~L×. This
+parser walks the HLO text instead:
+
+  * dots           → FLOPs from output shape × contracted dims,
+  * fusions        → HBM traffic = operand + output bytes (a good
+                     post-fusion traffic model: each fusion streams its
+                     operands once), FLOPs from dots inside,
+  * collectives    → per-type byte counts from operand shapes,
+  * while loops    → body + condition costs × parsed trip count
+                     (from the loop-bound constant in the condition),
+
+All shapes in the compiled module are **per-device** (post-partitioning),
+so totals are per-chip — exactly what the roofline terms need.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|\w+\[[0-9,]*\][^\s]*)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->\s*.*\{\s*$")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*=\s*(\(.*?\)|\w+\[[0-9,]*\][^\s]*)\s+parameter\((\d+)\)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a shape string (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def shape_dims(shape_str: str) -> Tuple[int, ...]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return ()
+    dims = m.group(2)
+    if not dims:
+        return ()
+    return tuple(int(d) for d in dims.split(","))
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+    shapes: Dict[str, str]  # instr name -> output shape string
+
+
+@dataclasses.dataclass
+class Costs:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
+    collective_ops: List[Tuple[str, str, float, float]] = dataclasses.field(
+        default_factory=list
+    )  # (opcode, name, bytes, multiplier)
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.traffic_bytes += other.traffic_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = (
+                self.collective_bytes.get(k, 0.0) + v * mult
+            )
+        for op, name, b, m in other.collective_ops:
+            self.collective_ops.append((op, name, b, m * mult))
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def _parse_operands(s: str) -> List[str]:
+    out, depth, cur = [], 0, ""
+    for ch in s:
+        if ch == "(" or ch == "{" or ch == "[":
+            depth += 1
+        elif ch == ")" or ch == "}" or ch == "]":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append(cur.strip())
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        out.append(cur.strip())
+    names = []
+    for o in out:
+        m = re.match(r"%([\w.\-]+)", o)
+        names.append(m.group(1) if m else o)
+    return names
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if current is None:
+            m = _COMP_RE.match(stripped)
+            if m and ("->" in stripped):
+                current = Computation(m.group(1), [], {})
+            continue
+        if stripped == "}":
+            comps[current.name] = current
+            current = None
+            continue
+        pm = _PARAM_RE.match(stripped.lstrip("ROOT ").lstrip("%")
+                             if False else stripped)
+        im = _INSTR_RE.match(line)
+        if im:
+            name, shape, opcode, operands, attrs = im.groups()
+            instr = Instruction(
+                name=name, shape=shape, opcode=opcode,
+                operands=_parse_operands(operands), attrs=attrs,
+            )
+            current.instructions.append(instr)
+            current.shapes[name] = shape
+    return comps
+
+
+def _dot_flops(instr: Instruction, comp: Computation) -> float:
+    out_elems = 1
+    for d in shape_dims(instr.shape):
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.attrs)
+    if not m or not instr.operands:
+        return 2.0 * out_elems  # fallback
+    lhs_shape = comp.shapes.get(instr.operands[0])
+    if lhs_shape is None:
+        return 2.0 * out_elems
+    lhs_dims = shape_dims(lhs_shape)
+    contract = 1
+    if m.group(1):
+        for d in m.group(1).split(","):
+            contract *= lhs_dims[int(d)]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: Computation) -> float:
+    """Largest s32 constant in the condition computation ≈ loop bound
+    (jax scans count 0..N-1 with a `compare LT constant(N)`)."""
+    best = 1
+    for instr in cond.instructions:
+        if instr.opcode == "constant" and instr.shape.startswith("s32"):
+            m = re.search(r"constant\((\-?\d+)\)", instr.name) \
+                or re.search(r"\bconstant\((\-?\d+)\)", instr.attrs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return float(best)
+
+
+_TRIP_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count_from_text(cond: Computation, raw_lines: Dict[str, str]) -> float:
+    best = 1
+    for instr in cond.instructions:
+        if instr.opcode == "constant":
+            m = _TRIP_CONST_RE.search(raw_lines.get(instr.name, ""))
+            if m and instr.shape.startswith("s32"):
+                best = max(best, int(m.group(1)))
+    return float(best)
+
+
+def compute_costs(text: str) -> Costs:
+    comps = parse_hlo(text)
+    # raw text per instruction (constants carry their value in operands)
+    raw_lines: Dict[str, str] = {}
+    for line in text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=", line)
+        if m:
+            raw_lines[m.group(1)] = line
+
+    memo: Dict[str, Costs] = {}
+
+    def cost_of(comp_name: str, descend_fusions: bool) -> Costs:
+        key = f"{comp_name}:{descend_fusions}"
+        if key in memo:
+            return memo[key]
+        comp = comps.get(comp_name)
+        c = Costs()
+        if comp is None:
+            memo[key] = c
+            return c
+        for instr in comp.instructions:
+            op = instr.opcode
+            if op == "dot" or op == "convolution":
+                c.flops += _dot_flops(instr, comp)
+                c.traffic_bytes += shape_bytes(instr.shape) + sum(
+                    shape_bytes(comp.shapes.get(o, "")) for o in instr.operands
+                )
+            elif op == "fusion":
+                m = re.search(r"calls=%?([\w.\-]+)", instr.attrs)
+                if m:
+                    inner = cost_of(m.group(1), True)
+                    c.flops += inner.flops
+                    c.add(
+                        Costs(collective_bytes=dict(inner.collective_bytes),
+                              collective_ops=list(inner.collective_ops))
+                    )
+                c.traffic_bytes += shape_bytes(instr.shape) + sum(
+                    shape_bytes(comp.shapes.get(o, "")) for o in instr.operands
+                )
+            elif op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", instr.attrs)
+                mc = re.search(r"condition=%?([\w.\-]+)", instr.attrs)
+                trips = 1.0
+                if mc and mc.group(1) in comps:
+                    trips = _trip_count_from_text(
+                        comps[mc.group(1)], raw_lines
+                    )
+                if mb:
+                    c.add(cost_of(mb.group(1), descend_fusions), trips)
+            elif any(op.startswith(coll) for coll in COLLECTIVE_OPS):
+                base = next(x for x in COLLECTIVE_OPS if op.startswith(x))
+                nbytes = sum(
+                    shape_bytes(comp.shapes.get(o, "")) for o in instr.operands
+                )
+                if nbytes == 0:  # operands may be params: use out shape
+                    nbytes = shape_bytes(instr.shape)
+                c.collective_bytes[base] = (
+                    c.collective_bytes.get(base, 0.0) + nbytes
+                )
+                c.collective_ops.append((base, instr.name, nbytes, 1.0))
+                c.traffic_bytes += nbytes + shape_bytes(instr.shape)
+            elif op in ("call", "conditional", "sort", "scatter", "gather",
+                        "dynamic-slice", "dynamic-update-slice", "custom-call"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w.\-]+)", instr.attrs)
+                if m:
+                    c.add(cost_of(m.group(1), descend_fusions))
+                c.traffic_bytes += shape_bytes(instr.shape) + sum(
+                    shape_bytes(comp.shapes.get(o, "")) for o in instr.operands
+                )
+            elif op in ("parameter", "constant", "get-tuple-element",
+                        "tuple", "bitcast", "copy-start", "copy-done"):
+                continue
+            else:
+                # elementwise / reshape / reduce etc: count output traffic
+                c.traffic_bytes += shape_bytes(instr.shape)
+        memo[key] = c
+        return c
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:  # fall back to last computation
+        entry = list(comps)[-1]
+    return cost_of(entry, False)
+
+
+def costs_from_compiled(compiled) -> Costs:
+    return compute_costs(compiled.as_text())

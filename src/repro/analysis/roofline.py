@@ -1,0 +1,113 @@
+"""Roofline terms per (arch × shape × mesh) from dry-run artifacts.
+
+    compute_term    = per_chip_HLO_FLOPs / peak_FLOP/s
+    memory_term     = per_chip_HLO_bytes / HBM_bw
+    collective_term = per_chip_collective_bytes / ICI_bw
+
+The compiled module is the per-device (post-SPMD) program, so parsed
+costs are already per chip — dividing global numbers by chip count and
+dividing per-chip numbers by per-chip rates are the same thing for a
+balanced program.
+
+Two sources are reported side by side:
+  * ``raw_*``   — XLA's cost_analysis (counts while bodies ONCE — known
+    undercount for scanned stacks, kept for reference);
+  * corrected   — `repro.analysis.hlo_costs` (loop-aware structural
+    parse; used for the bottleneck classification).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+from repro.core.performance_model import (
+    TPU_HBM_BW,
+    TPU_ICI_BW_PER_LINK,
+    TPU_PEAK_FLOPS_BF16,
+)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_per_chip: float
+    useful_ratio: float
+    collective_breakdown: Dict[str, float]
+    raw_flops: Optional[float] = None
+    raw_bytes: Optional[float] = None
+    peak_memory_bytes: Optional[float] = None
+
+    @property
+    def bound_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound set by *useful* model compute: how close
+        the cell is to the 'perfect implementation' roofline where only
+        MODEL_FLOPS at peak throughput remains."""
+        ideal = self.model_flops / self.chips / TPU_PEAK_FLOPS_BF16
+        return ideal / max(self.bound_time_s, 1e-30)
+
+    def to_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["bound_time_s"] = self.bound_time_s
+        d["roofline_fraction"] = self.roofline_fraction
+        return d
+
+
+def build_report(
+    *,
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    chips: int,
+    parsed_flops: float,
+    parsed_traffic_bytes: float,
+    parsed_collective_bytes: Dict[str, float],
+    model_flops: float,
+    raw_flops: Optional[float] = None,
+    raw_bytes: Optional[float] = None,
+    peak_memory_bytes: Optional[float] = None,
+    analytic_traffic_bytes: Optional[float] = None,
+) -> RooflineReport:
+    compute_s = parsed_flops / TPU_PEAK_FLOPS_BF16
+    # Memory term: the analytic per-chip HBM traffic model when provided
+    # (the CPU-backend parsed/XLA traffic numbers over-count TPU traffic
+    # by 1-2 orders of magnitude — fusion differs; see memory_model.py).
+    traffic = (analytic_traffic_bytes if analytic_traffic_bytes is not None
+               else parsed_traffic_bytes)
+    memory_s = traffic / TPU_HBM_BW
+    coll_bytes = sum(parsed_collective_bytes.values())
+    collective_s = coll_bytes / TPU_ICI_BW_PER_LINK
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s,
+    }
+    dominant = max(terms, key=terms.get)
+    hlo_global = parsed_flops * chips
+    return RooflineReport(
+        arch=arch,
+        shape=shape,
+        mesh=mesh_name,
+        chips=chips,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops,
+        hlo_flops_per_chip=parsed_flops,
+        useful_ratio=model_flops / max(hlo_global, 1e-30),
+        collective_breakdown=dict(parsed_collective_bytes),
+        raw_flops=raw_flops,
+        raw_bytes=raw_bytes,
+        peak_memory_bytes=peak_memory_bytes,
+    )

@@ -1,0 +1,10 @@
+"""Checkpoint substrate: atomic + async + elastic restore."""
+
+from repro.checkpoint.checkpointer import (  # noqa: F401
+    AsyncCheckpointer,
+    list_checkpoints,
+    restore_latest,
+    retain,
+    save_checkpoint,
+    step_dir,
+)

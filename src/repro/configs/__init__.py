@@ -1,0 +1,13 @@
+"""Architecture configs (one per assigned arch) + shape matrix."""
+
+from repro.configs.base import (  # noqa: F401
+    ALL_SHAPES,
+    DECODE_32K,
+    LONG_500K,
+    LONG_CONTEXT_ARCHS,
+    PREFILL_32K,
+    TRAIN_4K,
+    ModelConfig,
+    ShapeConfig,
+    shapes_for_arch,
+)

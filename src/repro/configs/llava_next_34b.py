@@ -1,0 +1,35 @@
+"""llava-next-34b [vlm]: 60L d_model=7168 56H (GQA kv=8) d_ff=20480
+vocab=64000 — anyres tiling frontend (STUB: input_specs provides
+precomputed patch embeddings). Backbone ≈ Yi-34B decoder.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20480,
+    vocab_size=64000,
+    rope_theta=5_000_000.0,
+    activation="swiglu",
+    norm="rmsnorm",
+    frontend="vision",
+    energon=EnergonConfig(impl="mpmrf_block", pruning_ratio=4.0),
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=3, d_model=112, num_heads=7, num_kv_heads=1,
+        head_dim=16, d_ff=224, vocab_size=256, dtype="float32",
+        remat="none",
+        energon=EnergonConfig(impl="mpmrf_row", min_prune_layer=1),
+    )

@@ -1,0 +1,33 @@
+"""musicgen-medium [audio]: 48L d_model=1536 24H (MHA kv=24) d_ff=6144
+vocab=2048 — decoder-only over EnCodec tokens (frontend STUB provides
+frame embeddings). [arXiv:2306.05284; hf]"""
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    activation="gelu",
+    norm="layernorm",
+    frontend="audio",
+    energon=EnergonConfig(impl="mpmrf_block", pruning_ratio=4.0),
+)
+
+
+def smoke() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+        head_dim=16, d_ff=128, vocab_size=256, dtype="float32",
+        remat="none",
+        energon=EnergonConfig(impl="mpmrf_row", min_prune_layer=1),
+    )

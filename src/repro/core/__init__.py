@@ -1,0 +1,27 @@
+"""Energon core: dynamic sparse attention via MP-MRF (the paper's contribution)."""
+
+from repro.core.energon_attention import (  # noqa: F401
+    EnergonConfig,
+    energon_attention,
+    energon_decode_attention,
+)
+from repro.core.filtering import (  # noqa: F401
+    FilterResult,
+    MPMRFConfig,
+    causal_valid_mask,
+    eq3_threshold,
+    mpmrf_block_select,
+    mpmrf_row_select,
+    sliding_window_valid_mask,
+)
+from repro.core.quantization import (  # noqa: F401
+    QuantizedTensor,
+    fake_quantize,
+    low_bit_scores,
+    quantize_int16,
+)
+from repro.core.sparse_attention import (  # noqa: F401
+    block_gather_attention,
+    dense_attention,
+    masked_sparse_attention,
+)

@@ -1,0 +1,367 @@
+"""MP-MRF: Mix-Precision Multi-Round Filtering (Energon §III, Alg. 2).
+
+Two granularities are provided:
+
+* ``row``   — the paper-faithful algorithm: every query row independently
+  filters the set of keys over R rounds of increasing bit-width, with the
+  Eq. 3 dynamic threshold. Output is a boolean keep-mask. This is the
+  accuracy oracle and the path used by all paper-reproduction benchmarks.
+* ``block`` — the TPU adaptation: queries/keys are tiled into MXU-aligned
+  blocks and filtering selects *key blocks per query block*. Selection is
+  exposed both as a threshold mask (paper semantics) and as a static
+  top-B block-index table (XLA-friendly; drives the block-sparse
+  attention kernels and makes the pruned FLOPs visible to the compiler).
+
+Result reuse (Fig. 7) is implemented algebraically: the query plane is
+held at the final round's bit-width and round r adds only the K bit-plane
+remainder, shifted onto the previous round's integer accumulator:
+
+    S_r = (S_{r-1} << (l_r - l_{r-1})) + Q_hi · K_rem(l_{r-1}, l_r)
+
+so R rounds cost exactly one full-width integer matmul in total.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as qlib
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class MPMRFConfig:
+    """Configuration of Mix-Precision Multi-Round Filtering.
+
+    Attributes:
+      round_bits: bit-width of each filtering round (paper default 2-4).
+      alphas: Eq. 3 threshold parameter per round, each in (-1, 1).
+        alpha=0 → mean filtering (~50 % pruned per round).
+      granularity: "row" (paper-faithful) or "block" (TPU adaptation).
+      query_block / key_block: tile sizes for block granularity.
+      block_budget: if set, block mode keeps a *static* top-B key blocks
+        per query block (B = block_budget) instead of a dynamic threshold
+        mask — static shapes for XLA, the paper's "adjustable pruning
+        ratio" knob. If None, block mode returns a threshold mask.
+      keep_first: always keep key/block 0 (attention sink; the paper never
+        prunes early layers — this is the per-row analogue safeguard).
+      keep_diagonal: in block mode, always keep the diagonal (local) block.
+      reuse_partial: use Fig. 7 shift-add result reuse across rounds.
+    """
+
+    round_bits: Tuple[int, ...] = (2, 4)
+    alphas: Tuple[float, ...] = (0.0, 0.0)
+    granularity: str = "row"
+    query_block: int = 128
+    key_block: int = 128
+    block_budget: Optional[int] = None
+    keep_first: bool = True
+    keep_diagonal: bool = True
+    reuse_partial: bool = True
+
+    def __post_init__(self):
+        if len(self.round_bits) != len(self.alphas):
+            raise ValueError("round_bits and alphas must have equal length")
+        if any(not (-1.0 < a < 1.0) for a in self.alphas):
+            raise ValueError(f"alphas must be in (-1,1), got {self.alphas}")
+        bits = list(self.round_bits)
+        if bits != sorted(bits) or len(set(bits)) != len(bits):
+            raise ValueError(f"round_bits must be strictly increasing: {bits}")
+        if self.granularity not in ("row", "block"):
+            raise ValueError(f"bad granularity {self.granularity}")
+
+    @property
+    def rounds(self) -> int:
+        return len(self.round_bits)
+
+
+def eq3_threshold(
+    scores: jax.Array, alpha: float, valid: jax.Array
+) -> jax.Array:
+    """Dynamic threshold of Eq. 3 over the last axis.
+
+    Already-pruned / invalid entries are excluded from min/max/mean, per
+    Alg. 2 ("the scores already pruned are ignored").
+
+    Args:
+      scores: ``[..., n]`` real-unit scores.
+      alpha: static float in (-1, 1).
+      valid: ``[..., n]`` bool; True where the score participates.
+
+    Returns:
+      ``[..., 1]`` threshold θ.
+    """
+    count = jnp.maximum(jnp.sum(valid, axis=-1, keepdims=True), 1)
+    s_sum = jnp.sum(jnp.where(valid, scores, 0.0), axis=-1, keepdims=True)
+    mean = s_sum / count
+    if alpha >= 0.0:
+        s_max = jnp.max(
+            jnp.where(valid, scores, NEG_INF), axis=-1, keepdims=True
+        )
+        return alpha * s_max + (1.0 - alpha) * mean
+    s_min = jnp.min(jnp.where(valid, scores, -NEG_INF), axis=-1, keepdims=True)
+    return -alpha * s_min + (1.0 + alpha) * mean
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterResult:
+    """Output of MP-MRF selection.
+
+    Attributes:
+      keep_mask: bool ``[..., n_q, n_k]`` (row) or ``[..., n_qb, n_kb]``
+        (block threshold mode): True = attend.
+      block_indices: int32 ``[..., n_qb, B]`` survivor key-block ids
+        (block budget mode only, else None).
+      survivor_fraction: per-round fraction of keys surviving, stacked
+        ``[R, ...]`` — feeds the pruning-ratio benchmarks.
+      scores: final-round real-unit approximate scores (for diagnostics /
+        top-k coverage analysis).
+    """
+
+    keep_mask: jax.Array
+    block_indices: Optional[jax.Array]
+    survivor_fraction: jax.Array
+    scores: jax.Array
+    block_valid: Optional[jax.Array] = None  # int32 0/1 per budget slot
+
+
+def _multi_round_scores(
+    q16: qlib.QuantizedTensor,
+    k16: qlib.QuantizedTensor,
+    cfg: MPMRFConfig,
+    valid: jax.Array,
+) -> Tuple[jax.Array, jax.Array, Sequence[jax.Array]]:
+    """Run the R filtering rounds of Alg. 2 on real-unit scores.
+
+    Returns (final keep mask, final-round real scores, per-round masks).
+    ``valid`` is the a-priori validity (causality/padding): pruning can
+    only shrink it.
+    """
+    hi_bits = cfg.round_bits[-1]
+    qp = q16.bit_plane(hi_bits)  # Q held at final bit-width (Fig. 7)
+    keep = valid
+    per_round = []
+    acc = None
+    prev_bits = None
+    scores = None
+    for r, (bits, alpha) in enumerate(zip(cfg.round_bits, cfg.alphas)):
+        if cfg.reuse_partial:
+            if acc is None:
+                k_plane = k16.bit_plane(bits)
+                acc = qlib.int_qk_matmul(qp, k_plane)
+            else:
+                k_rem = k16.lsb_remainder(prev_bits, bits)
+                acc = jnp.left_shift(acc, bits - prev_bits) + qlib.int_qk_matmul(
+                    qp, k_rem
+                )
+            prev_bits = bits
+            scores = qlib.rescale_scores(
+                acc, q16.plane_scale(hi_bits), k16.plane_scale(bits)
+            )
+        else:
+            # Independent re-scoring per round (no reuse) — used by the
+            # DSE benchmark to cost the naive alternative.
+            q_r = q16.bit_plane(bits)
+            k_r = k16.bit_plane(bits)
+            scores = qlib.rescale_scores(
+                qlib.int_qk_matmul(q_r, k_r),
+                q16.plane_scale(bits),
+                k16.plane_scale(bits),
+            )
+        theta = eq3_threshold(scores, alpha, keep)
+        # ">=" (not ">") so a constant row keeps its max instead of
+        # emptying the selection (θ == max degenerate case).
+        keep = jnp.logical_and(keep, scores >= theta)
+        per_round.append(keep)
+    return keep, scores, per_round
+
+
+def mpmrf_row_select(
+    q: jax.Array,
+    k: jax.Array,
+    cfg: MPMRFConfig,
+    valid: Optional[jax.Array] = None,
+) -> FilterResult:
+    """Paper-faithful per-row MP-MRF selection (Alg. 2).
+
+    Args:
+      q: ``[..., n_q, d]`` float queries (pre-scaled; the 1/√d of the
+        attention stage does not change threshold selection).
+      k: ``[..., n_k, d]`` float keys.
+      cfg: filtering config.
+      valid: optional bool ``[..., n_q, n_k]`` a-priori validity
+        (causal/padding). Defaults to all-valid.
+
+    Returns:
+      FilterResult with a ``[..., n_q, n_k]`` keep mask.
+    """
+    q16 = qlib.quantize_int16(q, axis=-1)          # per-row scale
+    k16 = qlib.quantize_int16(k, axis=(-2, -1))    # per-head scale
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    if valid is None:
+        valid = jnp.ones(q.shape[:-1] + (n_k,), dtype=bool)
+    keep, scores, per_round = _multi_round_scores(q16, k16, cfg, valid)
+    if cfg.keep_first:
+        first = jnp.zeros_like(keep).at[..., 0].set(True)
+        keep = jnp.logical_or(keep, jnp.logical_and(first, valid))
+    denom = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    frac = jnp.stack(
+        [jnp.sum(m, axis=-1) / denom for m in per_round], axis=0
+    )
+    return FilterResult(
+        keep_mask=keep, block_indices=None, survivor_fraction=frac,
+        scores=scores,
+    )
+
+
+def pool_block_scores(
+    scores: jax.Array, bq: int, bk: int, valid: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Reduce token-level scores ``[..., n_q, n_k]`` to block level.
+
+    Block importance = max over the (bq × bk) tile (an important pair
+    anywhere keeps the block — maximizes top-k coverage, §V-A Table II).
+    Returns (block_scores ``[..., n_qb, n_kb]``, block_valid bool).
+    """
+    *lead, n_q, n_k = scores.shape
+    n_qb, n_kb = n_q // bq, n_k // bk
+    tile = scores.reshape(*lead, n_qb, bq, n_kb, bk)
+    tile_valid = valid.reshape(*lead, n_qb, bq, n_kb, bk)
+    blk = jnp.max(jnp.where(tile_valid, tile, NEG_INF), axis=(-3, -1))
+    blk_valid = jnp.any(tile_valid, axis=(-3, -1))
+    return blk, blk_valid
+
+
+def mpmrf_block_select(
+    q: jax.Array,
+    k: jax.Array,
+    cfg: MPMRFConfig,
+    valid: Optional[jax.Array] = None,
+) -> FilterResult:
+    """Block-granular MP-MRF (TPU adaptation, DESIGN.md §2).
+
+    Filtering rounds run at token level on the integer planes (same cost
+    as one full-width int matmul thanks to result reuse), then scores are
+    pooled to (query-block × key-block) granularity and selection happens
+    per block — either by Eq. 3 threshold (mask) or by a static top-B
+    budget (index table for the block-sparse kernels).
+    """
+    bq, bk = cfg.query_block, cfg.key_block
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    if n_q % bq or n_k % bk:
+        raise ValueError(
+            f"sequence ({n_q},{n_k}) not divisible by blocks ({bq},{bk})"
+        )
+    n_qb, n_kb = n_q // bq, n_k // bk
+    q16 = qlib.quantize_int16(q, axis=-1)
+    k16 = qlib.quantize_int16(k, axis=(-2, -1))
+    if valid is None:
+        valid = jnp.ones(q.shape[:-1] + (n_k,), dtype=bool)
+
+    # Single fused multi-round pass on token scores (reuse makes the total
+    # integer work equal one hi-bit matmul), then block pooling. Threshold
+    # rounds are applied at *block* granularity so round semantics match
+    # what the Pallas kernel does on-chip.
+    hi_bits = cfg.round_bits[-1]
+    qp = q16.bit_plane(hi_bits)
+    acc = None
+    prev_bits = None
+    blk_keep = None
+    blk_scores = None
+    per_round = []
+    for bits, alpha in zip(cfg.round_bits, cfg.alphas):
+        if acc is None:
+            acc = qlib.int_qk_matmul(qp, k16.bit_plane(bits))
+        else:
+            acc = jnp.left_shift(acc, bits - prev_bits) + qlib.int_qk_matmul(
+                qp, k16.lsb_remainder(prev_bits, bits)
+            )
+        prev_bits = bits
+        tok_scores = qlib.rescale_scores(
+            acc, q16.plane_scale(hi_bits), k16.plane_scale(bits)
+        )
+        blk_scores, blk_valid = pool_block_scores(tok_scores, bq, bk, valid)
+        if blk_keep is None:
+            blk_keep = blk_valid
+        theta = eq3_threshold(blk_scores, alpha, blk_keep)
+        blk_keep = jnp.logical_and(blk_keep, blk_scores >= theta)
+        per_round.append(blk_keep)
+
+    # Safeguards: never drop the first (sink) or diagonal (local) block.
+    if cfg.keep_first:
+        blk_keep = blk_keep.at[..., 0].set(blk_valid[..., 0])
+    if cfg.keep_diagonal:
+        qb_ids = jnp.arange(n_qb)
+        # diagonal key block for query block i under equal token counts
+        diag = jnp.minimum((qb_ids * bq) // bk, n_kb - 1)
+        diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
+        blk_keep = jnp.logical_or(blk_keep, jnp.logical_and(diag_mask, blk_valid))
+
+    denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
+    frac = jnp.stack(
+        [jnp.sum(m, axis=-1) / denom for m in per_round], axis=0
+    )
+
+    block_indices = None
+    block_valid = None
+    if cfg.block_budget is not None:
+        b = min(cfg.block_budget, n_kb)
+        # Static top-B selection on final-round block scores, restricted
+        # to surviving blocks. Slots whose score is -inf are padding
+        # (fewer than B survivors) — they carry a 0 validity bit and
+        # point at block 0 so the gather stays in range.
+        sel_scores = jnp.where(blk_keep, blk_scores, NEG_INF)
+        top_vals, block_indices = jax.lax.top_k(sel_scores, b)
+        block_valid = (top_vals > NEG_INF / 2).astype(jnp.int32)
+        block_indices = jnp.where(
+            block_valid > 0, block_indices, 0
+        ).astype(jnp.int32)
+
+    return FilterResult(
+        keep_mask=blk_keep,
+        block_indices=block_indices,
+        survivor_fraction=frac,
+        scores=blk_scores,
+        block_valid=block_valid,
+    )
+
+
+def expand_block_mask(
+    blk_mask: jax.Array, bq: int, bk: int
+) -> jax.Array:
+    """Expand a block keep-mask to token granularity ``[..., n_q, n_k]``."""
+    m = jnp.repeat(blk_mask, bq, axis=-2)
+    return jnp.repeat(m, bk, axis=-1)
+
+
+def causal_valid_mask(n_q: int, n_k: int, offset: int = 0) -> jax.Array:
+    """Causal validity ``[n_q, n_k]``: query i may see keys ≤ i+offset.
+
+    ``offset`` aligns query positions when n_q < n_k (decode / chunked
+    prefill): query row i sits at absolute position ``offset + i``.
+    """
+    qpos = jnp.arange(n_q)[:, None] + offset
+    kpos = jnp.arange(n_k)[None, :]
+    return kpos <= qpos
+
+
+def sliding_window_valid_mask(
+    n_q: int, n_k: int, window, offset: int = 0
+) -> jax.Array:
+    """Causal sliding-window validity (Gemma-style local attention).
+
+    ``window`` may be a Python int or a traced scalar (per-layer window
+    sizes scanned over a stacked layer axis); ``window <= 0`` means
+    unbounded, i.e. plain causal — this lets local and global layers
+    share one scanned code path.
+    """
+    qpos = jnp.arange(n_q)[:, None] + offset
+    kpos = jnp.arange(n_k)[None, :]
+    causal = kpos <= qpos
+    win_ok = jnp.where(window > 0, kpos > qpos - window, True)
+    return jnp.logical_and(causal, win_ok)

@@ -1,0 +1,194 @@
+"""Mixed-precision quantization for MP-MRF (Energon §III-B(4)).
+
+The paper quantizes Q/K **once** to INT16 (symmetric, per-tensor or
+per-head scale) and derives every lower-precision view by *truncating to
+the most-significant bits* of the same integer code.  That single-shot
+quantize + bit-plane view is what makes multi-round filtering cheap: no
+re-quantization between rounds, and round r+1 can reuse round r's partial
+dot products (shift-and-add identity, Fig. 7).
+
+On TPU there is no sub-8-bit datapath, so the *storage* of a bit-plane is
+an int8 (or int32 accumulator) array whose values are the top ``bits`` bits
+of the int16 code, i.e. ``code >> (16 - bits)``.  The arithmetic identity
+the hardware exploits is preserved exactly:
+
+    code == (msb_plane << (16 - bits)) + lsb_remainder
+
+so ``Q·Kᵀ`` decomposes into plane-wise matmuls that can be combined by
+shift-and-add — see :func:`repro.core.filtering.round_rescore`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+INT16_LEVELS = 32767  # symmetric int16 range [-32767, 32767]
+
+Axes = Optional[Union[int, Tuple[int, ...]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedTensor:
+    """An int16-coded tensor plus its dequantization scale.
+
+    Attributes:
+      codes: int16 (stored as int32 for safe shifting on CPU/TPU) integer
+        codes, same shape as the source tensor.
+      scale: float32 scale with broadcastable shape; ``x ≈ codes * scale``.
+      axis: axis (or None) over which the scale was computed, for bookkeeping.
+    """
+
+    codes: jax.Array
+    scale: jax.Array
+    axis: Axes = None
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def dtype(self):
+        return self.codes.dtype
+
+    def dequantize(self) -> jax.Array:
+        return self.codes.astype(jnp.float32) * self.scale
+
+    def bit_plane(self, bits: int) -> jax.Array:
+        """Top ``bits`` bits of the int16 code (MSB truncation, §III-B(4)).
+
+        Arithmetic right shift keeps the sign, exactly like reading only
+        the MSB wires of the ASIC's K-buffer.  Result is a small-magnitude
+        integer in ``[-2**(bits-1), 2**(bits-1)-1]`` (approximately;
+        arithmetic shift of the symmetric code keeps it in range).
+        """
+        if not 1 <= bits <= 16:
+            raise ValueError(f"bits must be in [1,16], got {bits}")
+        return jnp.right_shift(self.codes, 16 - bits)
+
+    def plane_scale(self, bits: int) -> jax.Array:
+        """Scale that dequantizes a ``bits``-bit plane back to real units."""
+        return self.scale * float(2 ** (16 - bits))
+
+    def lsb_remainder(self, hi_bits: int, lo_bits: int) -> jax.Array:
+        """Bits [16-hi_bits-1 : 16-lo_bits] — the refinement plane.
+
+        With ``hi_bits=2, lo_bits=4`` this is the Fig. 7 ``K[1:0]`` plane:
+        the two bits *below* the 2-bit MSB plane, treated as an unsigned
+        remainder so that::
+
+            bit_plane(4) == (bit_plane(2) << 2) + lsb_remainder(2, 4)
+        """
+        if not 1 <= hi_bits < lo_bits <= 16:
+            raise ValueError(f"need 1 <= hi({hi_bits}) < lo({lo_bits}) <= 16")
+        hi = self.bit_plane(hi_bits)
+        lo = self.bit_plane(lo_bits)
+        return lo - jnp.left_shift(hi, lo_bits - hi_bits)
+
+
+def quantize_int16(
+    x: jax.Array,
+    axis: Axes = -1,
+    eps: float = 1e-8,
+) -> QuantizedTensor:
+    """Symmetric int16 quantization with per-slice absmax scale.
+
+    Args:
+      x: float tensor (any float dtype).
+      axis: reduction axis/axes for the absmax scale (kept as size-1 dims).
+        ``None`` → per-tensor scale. The paper quantizes per attention
+        head; callers pass ``-1`` for per-row scales (Q) or ``(-2, -1)``
+        for per-head scales shared across keys (K) — the latter keeps
+        threshold comparisons scale-invariant within a row.
+      eps: numerical floor for the scale.
+
+    Returns:
+      QuantizedTensor with int32-stored codes in [-32767, 32767].
+    """
+    x = x.astype(jnp.float32)
+    if axis is None:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        absmax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(absmax, eps) / INT16_LEVELS
+    codes = jnp.clip(
+        jnp.round(x / scale), -INT16_LEVELS, INT16_LEVELS
+    ).astype(jnp.int32)
+    return QuantizedTensor(codes=codes, scale=scale, axis=axis)
+
+
+def fake_quantize(x: jax.Array, bits: int, axis: Axes = -1) -> jax.Array:
+    """Quantize→truncate→dequantize round trip at ``bits`` precision.
+
+    Used by the reference/oracle paths and the accuracy benchmarks: it
+    reproduces exactly the values the ASIC's ``bits``-bit filter round
+    sees, in float, so XLA can run them through ordinary matmuls.
+    """
+    qt = quantize_int16(x, axis=axis)
+    return qt.bit_plane(bits).astype(jnp.float32) * qt.plane_scale(bits)
+
+
+def low_bit_scores(
+    q: QuantizedTensor,
+    k: QuantizedTensor,
+    bits: int,
+) -> jax.Array:
+    """Approximate attention scores from ``bits``-bit planes.
+
+    Computes ``(Q_plane @ K_planeᵀ)`` in integer domain and rescales to
+    real units. Shapes: q codes ``[..., n_q, d]``, k codes ``[..., n_k, d]``
+    → scores ``[..., n_q, n_k]`` (float32).
+
+    The matmul is expressed with int32 accumulation; on TPU this lowers to
+    int8 MXU passes for bits<=8 (XLA chooses the narrow type), which is the
+    TPU analogue of the paper's INT2/INT4 IPU.
+    """
+    qp = q.bit_plane(bits)
+    kp = k.bit_plane(bits)
+    if bits > 8:
+        # int32 accumulators overflow above 8-bit planes (32767² × d);
+        # the filter rounds never exceed 8 bits — this path exists for
+        # diagnostics/benchmarks and uses f32 accumulation instead.
+        acc = jax.lax.dot_general(
+            qp.astype(jnp.float32),
+            kp.astype(jnp.float32),
+            dimension_numbers=(((qp.ndim - 1,), (kp.ndim - 1,)),
+                               (tuple(range(qp.ndim - 2)),
+                                tuple(range(kp.ndim - 2)))),
+        )
+    else:
+        acc = int_qk_matmul(qp, kp)
+    return rescale_scores(acc, q.plane_scale(bits), k.plane_scale(bits))
+
+
+def int_qk_matmul(qp: jax.Array, kp: jax.Array) -> jax.Array:
+    """Integer-domain ``qp @ kpᵀ`` with int32 accumulation.
+
+    qp: ``[..., n_q, d]`` integer plane, kp: ``[..., n_k, d]`` integer
+    plane → ``[..., n_q, n_k]`` int32 accumulators (the IPU output of
+    Fig. 6 before any rescaling).
+    """
+    batch = tuple(range(qp.ndim - 2))
+    return jax.lax.dot_general(
+        qp,
+        kp,
+        dimension_numbers=(((qp.ndim - 1,), (kp.ndim - 1,)), (batch, batch)),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def rescale_scores(
+    acc: jax.Array, q_scale: jax.Array, k_scale: jax.Array
+) -> jax.Array:
+    """Rescale integer score accumulators to real units.
+
+    ``q_scale`` has keepdims shape ``[..., n_q, 1]`` (or scalar-ish);
+    ``k_scale`` has keepdims shape ``[..., n_k, 1]`` (or scalar-ish) and is
+    transposed onto the key axis of the ``[..., n_q, n_k]`` scores.
+    """
+    if k_scale.ndim >= 2:
+        k_scale = jnp.swapaxes(k_scale, -1, -2)
+    return acc.astype(jnp.float32) * q_scale * k_scale

@@ -1,0 +1,214 @@
+"""High-precision sparse attention — the Energon Attention Unit (§IV-C).
+
+Three implementations with identical semantics on the selected set:
+
+* :func:`masked_sparse_attention` — paper-faithful oracle: softmax over
+  exactly the keys MP-MRF kept, everything else gets probability 0.
+* :func:`block_gather_attention` — TPU/XLA path with *real* FLOP and
+  byte savings: each query block gathers only its B surviving key/value
+  blocks (static shapes) and attends locally. This is On-Demand Fetching
+  (§IV-C) re-expressed so the compiler sees the reduction.
+* the Pallas kernel in ``repro.kernels.block_sparse_attention`` — the
+  TPU-native version where the HBM→VMEM block streaming itself follows
+  the survivor index table.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    valid: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Vanilla scaled-dot-product attention (the no-pruning baseline).
+
+    q ``[..., n_q, d]``, k/v ``[..., n_k, d]``; ``valid`` is a bool
+    ``[..., n_q, n_k]`` mask (causality/padding).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum(
+        "...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if valid is not None:
+        scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum(
+        "...qk,...kd->...qd", probs.astype(v.dtype), v
+    )
+
+
+def masked_sparse_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    keep_mask: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Sparse attention over the MP-MRF selection (Alg. 2 lines 14-18).
+
+    ``keep_mask`` is the token-level bool mask from filtering (already
+    intersected with causal/padding validity). Unselected pairs receive
+    exactly zero probability. High precision (float32 softmax).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum(
+        "...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(keep_mask, scores, NEG_INF)
+    # Stable masked softmax; a fully-masked row (cannot happen when
+    # keep_first is on, but guard anyway) yields zeros, not NaNs.
+    row_max = jnp.max(scores, axis=-1, keepdims=True)
+    exp = jnp.exp(scores - jax.lax.stop_gradient(row_max))
+    exp = jnp.where(keep_mask, exp, 0.0)
+    denom = jnp.sum(exp, axis=-1, keepdims=True)
+    probs = exp / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("...qk,...kd->...qd", probs.astype(v.dtype), v)
+
+
+def block_gather_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_indices: jax.Array,
+    valid: Optional[jax.Array],
+    query_block: int,
+    key_block: int,
+    scale: Optional[float] = None,
+    block_valid: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Block-sparse attention with static block budget (On-Demand Fetch).
+
+    For query block i only the ``B = block_indices.shape[-1]`` selected
+    key/value blocks are gathered and attended. FLOPs drop from
+    ``n_q·n_k·d`` to ``n_q·B·key_block·d`` — visible to XLA/roofline.
+
+    Args:
+      q: ``[..., n_q, d]``; k, v: ``[..., n_k, d]``.
+      block_indices: int32 ``[..., n_qb, B]`` from
+        :func:`repro.core.filtering.mpmrf_block_select`.
+      valid: optional bool ``[..., n_q, n_k]`` token-level validity. The
+        gathered tiles re-apply it so causality survives the gather.
+    """
+    *lead, n_q, d = q.shape
+    n_k = k.shape[-2]
+    bq, bk = query_block, key_block
+    n_qb = n_q // bq
+    budget = block_indices.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qb = q.reshape(*lead, n_qb, bq, d)
+    kb = k.reshape(*lead, n_k // bk, bk, d)
+    vb = v.reshape(*lead, n_k // bk, bk, d)
+
+    # Gather survivor key/value blocks per query block:
+    #   [..., n_qb, B, bk, d]
+    kg = jnp.take_along_axis(
+        kb[..., None, :, :, :],
+        block_indices[..., :, :, None, None],
+        axis=-3,
+    )
+    vg = jnp.take_along_axis(
+        vb[..., None, :, :, :],
+        block_indices[..., :, :, None, None],
+        axis=-3,
+    )
+
+    scores = jnp.einsum(
+        "...iqd,...ibkd->...iqbk", qb, kg,
+        preferred_element_type=jnp.float32,
+    ) * scale
+
+    if valid is not None:
+        vt = valid.reshape(*valid.shape[:-2], n_qb, bq, n_k // bk, bk)
+        vt = vt.swapaxes(-3, -2)  # [..., n_qb, n_kb, bq, bk]
+        vg_mask = jnp.take_along_axis(
+            vt, block_indices[..., :, :, None, None], axis=-3
+        )  # [..., n_qb, B, bq, bk]
+        vg_mask = vg_mask.swapaxes(-3, -2)  # align to scores layout
+        scores = jnp.where(vg_mask, scores, NEG_INF)
+    if block_valid is not None:
+        # padding slots (top-k filled with -inf survivors) never attend
+        bv = (block_valid > 0)[..., :, None, :, None]  # [.., n_qb,1,B,1]
+        scores = jnp.where(bv, scores, NEG_INF)
+
+    flat = scores.reshape(*scores.shape[:-2], budget * bk)
+    row_max = jnp.max(flat, axis=-1, keepdims=True)
+    exp = jnp.exp(flat - jax.lax.stop_gradient(row_max))
+    exp = jnp.where(flat <= NEG_INF / 2, 0.0, exp)
+    denom = jnp.maximum(jnp.sum(exp, axis=-1, keepdims=True), 1e-30)
+    probs = (exp / denom).reshape(scores.shape)
+
+    out = jnp.einsum(
+        "...iqbk,...ibkd->...iqd", probs.astype(v.dtype), vg
+    )
+    return out.reshape(*lead, n_q, d)
+
+
+def decode_sparse_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    keep_mask: jax.Array,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-query sparse attention over a KV cache (serve path, l=1).
+
+    q ``[..., 1, d]``; caches ``[..., n_k, d]``; keep_mask
+    ``[..., 1, n_k]`` already includes cache-length validity. This is the
+    paper's text-generation case (§IV-D, l = 1) where MP-MRF shines: the
+    filter is one low-bit mat-vec, attention touches only survivors.
+    """
+    return masked_sparse_attention(q, k_cache, v_cache, keep_mask, scale)
+
+
+def merge_partial_attention(
+    outs: jax.Array,
+    maxes: jax.Array,
+    sums: jax.Array,
+    axis: int = 0,
+) -> jax.Array:
+    """Log-sum-exp merge of flash-style partial attention results.
+
+    Used for sequence/context-parallel attention: every shard computes
+    (partial out, running max, running denom) over its local keys; the
+    merge is exact. Shapes: outs ``[S, ..., n_q, d]``, maxes/sums
+    ``[S, ..., n_q, 1]`` with S shards stacked on ``axis``.
+    """
+    g_max = jnp.max(maxes, axis=axis, keepdims=True)
+    corr = jnp.exp(maxes - g_max)
+    num = jnp.sum(outs * corr, axis=axis)
+    den = jnp.sum(sums * corr, axis=axis)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def partial_attention_stats(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    keep_mask: jax.Array,
+    scale: Optional[float] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-shard flash statistics for :func:`merge_partial_attention`."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    scores = jnp.einsum(
+        "...qd,...kd->...qk", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(keep_mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    exp = jnp.where(keep_mask, jnp.exp(scores - m), 0.0)
+    s = jnp.sum(exp, axis=-1, keepdims=True)
+    out = jnp.einsum("...qk,...kd->...qd", exp.astype(v.dtype), v)
+    return out, m, s

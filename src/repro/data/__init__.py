@@ -1,0 +1,3 @@
+"""Data substrate: synthetic corpora + sharded checkpointable pipeline."""
+
+from repro.data.pipeline import PrefetchIterator, TokenDataset  # noqa: F401

@@ -1,0 +1,9 @@
+"""Distribution layer: sharding rules, pipeline PP, compression, elastic."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    batch_shardings,
+    cache_shardings,
+    constrain_activations,
+    data_axes,
+    param_shardings,
+)

@@ -1,0 +1,47 @@
+"""Elastic scaling: resume any checkpoint on any mesh.
+
+Checkpoints store *logical* (unsharded, host-RAM numpy) arrays, so
+resharding to a new topology is: build the new mesh → derive the new
+sharding pytree from the same logical rules → `jax.device_put` each
+array with its new NamedSharding. A 512-chip job can resume on 256
+chips (or 8) without format changes; only throughput changes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+
+
+def reshard_params(params_host: Any, mesh: Mesh) -> Any:
+    """Host (numpy) params → device arrays sharded for ``mesh``."""
+    shardings = shd.param_shardings(params_host, mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(a), s), params_host, shardings
+    )
+
+
+def gather_params(params: Any) -> Any:
+    """Device params (any sharding) → host numpy pytree (logical layout)."""
+    return jax.tree.map(lambda a: np.asarray(jax.device_get(a)), params)
+
+
+def mesh_fingerprint(mesh: Optional[Mesh]) -> str:
+    if mesh is None:
+        return "unsharded"
+    return "x".join(
+        f"{name}={size}" for name, size in zip(mesh.axis_names, mesh.devices.shape)
+    )
+
+
+def validate_elastic_resume(
+    params_host: Any, old_fingerprint: str, new_mesh: Mesh
+) -> bool:
+    """A resume is always valid shape-wise (logical layout); we only log
+    the topology change. Returns True when topology changed."""
+    return mesh_fingerprint(new_mesh) != old_fingerprint

@@ -1,0 +1,410 @@
+"""Logical-axis sharding rules → NamedSharding for every param/input.
+
+One rule table maps parameter names (disambiguated by pytree path) to
+logical axes, and one mesh map binds logical axes to mesh axes:
+
+    embed   → data    (FSDP / ZeRO-3: weights gathered per layer)
+    heads   → model   (Megatron tensor parallelism; GSPMD pads uneven
+                       head counts like 40/16 — see EXPERIMENTS §Dry-run)
+    mlp     → model
+    vocab   → model   (sharded embedding + LM head)
+    experts → model   (expert parallelism)
+    kv_heads → replicated (small GQA projections)
+
+Data parallelism runs over ('pod', 'data') when the pod axis exists.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name → trailing-dim logical axes (path-context dependent for qkv).
+_ATTN_RULES = {
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None),
+    "wo": ("heads", None, "embed"),
+}
+_SSM_RULES = {
+    # mLSTM qkv: ZeRO over data only. Sharding their head_dim over
+    # 'model' makes every backward dx an all-reduce (126 GB/chip/step
+    # measured); heads (4) cannot input-shard over 16 — the activation-
+    # level padded head constraint in mlstm_seq carries the TP instead.
+    "wq": ("embed", None, None),
+    "wk": ("embed", None, None),
+    "wv": ("embed", None, None),
+    "w_up": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+    "w_in": ("embed", "mlp"),
+    "w_out": ("mlp", "embed"),
+    # sLSTM is inherently sequential: any model-sharded dim in the
+    # recurrence all-reduces per TIMESTEP (966 GB/chip/step measured).
+    # Its matrices are small — replicate over 'model', ZeRO over 'data'.
+    "w_x": ("embed", None),
+    "r_h": (None, None, None, None),
+    "conv": (None, "mlp"),
+    "w_if": ("mlp", None),
+}
+_GENERIC_RULES = {
+    # Embedding table: vocab TP-sharded, features replicated. The lookup
+    # goes through the explicit shard_map gather in
+    # `repro.models.layers.embed_tokens` (local masked gather + psum) —
+    # XLA's auto-partitioned gather on a sharded table either replicates
+    # the table or mis-compiles (verifier failure observed), so we don't
+    # let it try. Tied logits then contract the replicated feature dim
+    # locally and emerge vocab-sharded with zero collectives.
+    "table": ("vocab", None),
+    # LM head: d_model replicated, vocab TP-sharded → logits come out
+    # vocab-sharded with zero collectives in the head matmul.
+    "w": (None, "vocab"),
+    # MoE router stays replicated: it is tiny (d×E) and every model
+    # shard must compute identical routing decisions in the shard_map
+    # expert-parallel path.
+    "router": (None, None),
+    # dense MLP (2D) / MoE (3D) disambiguated by rank below.
+    "w_up": ("embed", "mlp"),
+    "w_gate": ("embed", "mlp"),
+    "w_down": ("mlp", "embed"),
+}
+_MOE_RULES = {
+    "w_up": ("experts", "embed", None),
+    "w_gate": ("experts", "embed", None),
+    "w_down": ("experts", None, "embed"),
+}
+_MOE_SERVE_RULES = {  # 2D expert TP: experts→model × d_ff→data
+    "w_up": ("experts", None, "expert_ff"),
+    "w_gate": ("experts", None, "expert_ff"),
+    "w_down": ("experts", "expert_ff", None),
+}
+_REPLICATED = {"scale", "bias", "b_if", "a_log", "dt_bias", "d_skip"}
+
+MESH_MAP = {
+    "embed": "data",
+    "embed_tp": "model",
+    "heads": "model",
+    "kv_heads": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,      # serve profile: → "data" (2D expert TP)
+    None: None,
+}
+
+# ---------------------------------------------------------------------------
+# Rules profile: "train" ZeRO-shards weights over 'data' (gathered per
+# µbatch — amortized over the huge training token count); "serve" keeps
+# weights fully resident (no per-step gathers — a decode step would pay
+# a full ZeRO gather per layer for ONE token otherwise, measured 10
+# GB/step on the 235B config) and 2D-shards MoE expert FFNs
+# (experts→model × d_ff→data).
+# ---------------------------------------------------------------------------
+
+_RULES_PROFILE = "train"
+
+
+def set_rules_profile(profile: str) -> None:
+    global _RULES_PROFILE
+    if profile not in ("train", "serve"):
+        raise ValueError(profile)
+    _RULES_PROFILE = profile
+
+
+def get_rules_profile() -> str:
+    return _RULES_PROFILE
+
+
+def _mesh_map():
+    if _RULES_PROFILE == "serve":
+        m = dict(MESH_MAP)
+        m["embed"] = None
+        m["expert_ff"] = "data"
+        return m
+    return MESH_MAP
+
+
+class _FakeLeaf:
+    def __init__(self, ndim: int):
+        self.ndim = ndim
+        self.shape = (1,) * ndim
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for entry in path:
+        if isinstance(entry, jax.tree_util.DictKey):
+            names.append(str(entry.key))
+        elif isinstance(entry, jax.tree_util.GetAttrKey):
+            names.append(entry.name)
+    return tuple(names)
+
+
+def logical_axes_for(path, leaf) -> Tuple[Optional[str], ...]:
+    """Trailing-rule lookup; leading (stacked layer/group) dims → None."""
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    ndim = leaf.ndim
+
+    # Factored-optimizer row/col statistics inherit the parent param's
+    # rule with the reduced dim removed (row drops the last axis, col
+    # drops the second-to-last).
+    if name in ("row", "col") and len(names) >= 2:
+        parent = logical_axes_for(path[:-1], _FakeLeaf(ndim + 1))
+        if name == "row":
+            reduced = parent[:-1]
+        else:
+            reduced = parent[:-2] + parent[-1:]
+        return (None,) * (ndim - len(reduced)) + reduced if \
+            len(reduced) <= ndim else (None,) * ndim
+
+    if name in _REPLICATED:
+        return (None,) * ndim
+
+    rules = None
+    if name in ("wq", "wk", "wv", "wo"):
+        rules = _ATTN_RULES if "attn" in names else _SSM_RULES
+    elif name in ("w_up", "w_gate", "w_down") and "moe" in names:
+        if _RULES_PROFILE == "serve":
+            rules = _MOE_SERVE_RULES
+        else:
+            rules = _MOE_RULES
+    elif name in _SSM_RULES and "cell" in names:
+        rules = _SSM_RULES
+    elif name in _GENERIC_RULES:
+        rules = _GENERIC_RULES
+    if rules is None or name not in rules:
+        return (None,) * ndim
+
+    trailing = rules[name]
+    if len(trailing) > ndim:
+        return (None,) * ndim
+    return (None,) * (ndim - len(trailing)) + tuple(trailing)
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes used for data parallelism ('pod' folds into DP)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def param_pspec(path, leaf, mesh: Mesh) -> P:
+    logical = logical_axes_for(path, leaf)
+    mesh_map = _mesh_map()
+    spec = []
+    for dim_size, ax in zip(leaf.shape, logical):
+        mesh_ax = mesh_map.get(ax)
+        if mesh_ax is None or mesh_ax not in mesh.axis_names:
+            spec.append(None)
+        elif dim_size % mesh.shape[mesh_ax]:
+            # pjit input shardings must divide evenly (unlike activation
+            # constraints, which GSPMD pads) — awkward head counts like
+            # 36/16 keep their weights replicated over 'model'; the
+            # activation-level head constraint still TP-shards compute.
+            spec.append(None)
+        else:
+            spec.append(mesh_ax)
+    return P(*spec)
+
+
+def param_shardings(params_shapes: Any, mesh: Mesh):
+    """Pytree of NamedSharding matching a (shape-only) param pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, param_pspec(path, leaf, mesh)),
+        params_shapes,
+    )
+
+
+def batch_pspec(leaf, mesh: Mesh) -> P:
+    """Shard batch dim 0 over all DP axes (pod × data)."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if leaf.ndim == 0 or leaf.shape[0] % dp_size:
+        return P(*([None] * leaf.ndim))
+    return P(dp, *([None] * (leaf.ndim - 1)))
+
+
+def batch_shardings(batch_shapes: Any, mesh: Mesh):
+    return jax.tree.map(
+        lambda leaf: NamedSharding(mesh, batch_pspec(leaf, mesh)),
+        batch_shapes,
+    )
+
+
+def kv_cache_pspec(shape, mesh: Mesh) -> P:
+    """Sharding of an attention KV-cache ``[..., B, KV, max_len, hd]``:
+    batch over DP when divisible; 'model' prefers KV heads (no padding)
+    else the sequence (context parallelism); batch=1 long-context also
+    spreads the sequence over 'data'."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    ndim = len(shape)
+    spec = [None] * ndim
+    batch_dim = ndim - 4
+    kv_dim = ndim - 3
+    seq_dim = ndim - 2
+    has_model = "model" in mesh.axis_names
+    batch_sharded = shape[batch_dim] % dp_size == 0 and shape[batch_dim] > 1
+    if batch_sharded:
+        spec[batch_dim] = dp
+    if has_model and shape[kv_dim] % mesh.shape["model"] == 0:
+        spec[kv_dim] = "model"
+    elif has_model and shape[seq_dim] % mesh.shape["model"] == 0:
+        spec[seq_dim] = "model"
+    if (not batch_sharded and "data" in mesh.axis_names
+            and spec[seq_dim] is None
+            and shape[seq_dim] % mesh.shape["data"] == 0):
+        spec[seq_dim] = "data"
+    elif (not batch_sharded and "data" in mesh.axis_names
+          and spec[seq_dim] == "model"
+          and shape[seq_dim] % (
+              mesh.shape["model"] * mesh.shape["data"]) == 0):
+        spec[seq_dim] = ("data", "model")
+    return P(*spec)
+
+
+def constrain_cache_onehot(onehot: jax.Array, cache_shape) -> jax.Array:
+    """Pin the ``[B, max_len]`` cache-update one-hot to the cache's
+    (batch, seq) sharding so the update product is computed shard-local
+    (otherwise GSPMD all-gathers the full cache per layer)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return onehot
+    spec = kv_cache_pspec(cache_shape, mesh)
+    nd = len(cache_shape)
+    return jax.lax.with_sharding_constraint(
+        onehot, NamedSharding(mesh, P(spec[nd - 4], spec[nd - 2]))
+    )
+
+
+def constrain_kv_cache(x: jax.Array) -> jax.Array:
+    """Pin an updated KV cache tensor to the canonical cache layout —
+    the in-place one-hot update otherwise produces an unsharded-sequence
+    broadcast that GSPMD reshards with a full cache all-gather."""
+    mesh = _ACTIVE_MESH
+    if mesh is None or x.ndim < 4:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, kv_cache_pspec(x.shape, mesh))
+    )
+
+
+def cache_pspec(path, leaf, mesh: Mesh) -> P:
+    """Decode-cache shardings.
+
+    Attention KV caches are ``[L, B, KV, max_len, hd]``: shard batch over
+    DP when divisible; otherwise (long-context batch=1) shard the
+    *sequence* axis over 'data' — context parallelism for the 500k cache.
+    SSM states ``[..., B, ...]`` shard batch when divisible else
+    replicate (they are O(d²) small).
+    """
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    names = _path_names(path)
+    spec = [None] * leaf.ndim
+    is_kv = names and names[-1] in ("k", "v")
+    if is_kv and leaf.ndim >= 4:
+        return kv_cache_pspec(leaf.shape, mesh)
+    # SSM / conv states: find a batch-like dim (first dim divisible by dp)
+    for d, size in enumerate(leaf.shape):
+        if size % dp_size == 0 and size > 1:
+            spec[d] = dp
+            break
+    return P(*spec)
+
+
+def cache_shardings(cache_shapes: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, cache_pspec(path, leaf, mesh)),
+        cache_shapes,
+    )
+
+
+def constrain_activations(x: jax.Array, mesh: Mesh) -> jax.Array:
+    """Pin token activations ``[B, n, d]`` to batch-DP sharding."""
+    dp = data_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if x.shape[0] % dp_size == 0:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1))))
+        )
+    if x.ndim >= 2 and "data" in mesh.axis_names \
+            and x.shape[1] % mesh.shape["data"] == 0:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(None, "data", *([None] * (x.ndim - 2))))
+        )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Active-mesh activation constraints (used inside model code).
+#
+# Model code stays mesh-agnostic: launchers register the mesh with
+# `set_active_mesh`, and `constrain(x, spec)` becomes a no-op when none
+# is registered (CPU unit tests). Constraints inside the layer-scan body
+# are what keep remat-saved residuals batch-sharded — without them the
+# SPMD partitioner can drop the data sharding inside while loops (the
+# 16× activation-memory blowup found in the first dry-run).
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return _ACTIVE_MESH
+
+
+def constrain(x: jax.Array, spec_names, allow_uneven: bool = False) -> jax.Array:
+    """Constrain ``x`` to a symbolic spec: entries are "dp" (all data
+    axes), a mesh axis name, or None. Dims that don't divide are left
+    unsharded unless ``allow_uneven`` (GSPMD pads — used for awkward
+    head counts like 40/16); no-op without an active mesh."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    resolved = []
+    for dim_size, name in zip(x.shape, spec_names):
+        if name == "dp":
+            dp = data_axes(mesh)
+            dp_size = 1
+            for a in dp:
+                dp_size *= mesh.shape[a]
+            resolved.append(dp if (dp_size > 1 and dim_size % dp_size == 0)
+                            else None)
+        elif name in (mesh.axis_names if mesh else ()):
+            ok = allow_uneven or dim_size % mesh.shape[name] == 0
+            resolved.append(name if ok else None)
+        else:
+            resolved.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved))
+    )
+
+
+def constrain_like_params(grads, params_template=None):
+    """Pin a gradient pytree to the parameter sharding rules (makes the
+    per-µbatch gradient sync a reduce-scatter into the FSDP shard rather
+    than an all-reduce of the full tensor)."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return grads
+    return jax.tree_util.tree_map_with_path(
+        lambda path, g: jax.lax.with_sharding_constraint(
+            g, NamedSharding(mesh, param_pspec(path, g, mesh))
+        ),
+        grads,
+    )

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for Energon's compute hot spots.
+
+``<name>.py`` holds the ``pl.pallas_call`` + BlockSpec kernel, ``ops.py``
+the jit'd public wrappers (auto interpret off-TPU), ``ref.py`` the
+pure-jnp oracles used by the allclose test sweeps.
+"""
+
+from repro.kernels.ops import (  # noqa: F401
+    block_sparse_attention,
+    energon_block_attention,
+    flash_attention,
+    mpmrf_select_blocks,
+)

@@ -1,0 +1,163 @@
+"""Block-sparse flash attention — the Energon Attention Unit on TPU.
+
+Each query block attends only to the ``B`` key blocks MP-MRF selected for
+it. The survivor index table is a **scalar-prefetch** operand
+(`PrefetchScalarGridSpec`): the k/v BlockSpec ``index_map`` reads
+``idx_ref[b, i, j]`` so the HBM→VMEM pipeline *only streams the selected
+blocks* — this is the paper's On-Demand Fetching (§IV-C): unselected
+K/V never leave DRAM, and compute drops with the pruning ratio β.
+
+Grid ``(bh, n_qb, B)``; online-softmax state in VMEM scratch, exactly as
+the dense kernel, so output equals masked-softmax over the selected set.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _bsa_kernel(
+    idx_ref, valid_ref,            # scalar-prefetch operands
+    q_ref, k_ref, v_ref, o_ref,    # tensor operands
+    m_scratch, l_scratch, acc_scratch,
+    *, sm_scale: float, causal: bool, block_q: int, block_k: int,
+    q_offset: int, budget: int,
+):
+    b = pl.program_id(0)
+    qb = pl.program_id(1)
+    slot = pl.program_id(2)
+
+    @pl.when(slot == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    kb = idx_ref[b, qb, slot]          # actual key-block id of this slot
+    is_valid = valid_ref[b, qb, slot]  # 0 ⇒ padded slot, contribute nothing
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale
+
+    mask = jnp.full((block_q, block_k), is_valid > 0)
+    if causal:
+        qpos = (
+            q_offset + qb * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        )
+        kpos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        mask = jnp.logical_and(mask, kpos <= qpos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[:, 0:1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scratch[:, 0:1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * corr + jax.lax.dot(
+        p, v_ref[...].astype(jnp.float32)
+    )
+    m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+    l_scratch[...] = jnp.broadcast_to(l_new, l_scratch.shape)
+
+    @pl.when(slot == budget - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_scratch[...] / jnp.maximum(l_scratch[:, 0:1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "query_block", "key_block", "causal", "q_offset", "scale", "interpret"
+    ),
+)
+def block_sparse_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_indices: jax.Array,
+    block_valid: jax.Array,
+    *,
+    query_block: int = 128,
+    key_block: int = 128,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sparse attention over MP-MRF survivor blocks.
+
+    Args:
+      q: ``[bh, n_q, d]``; k/v: ``[bh, n_k, d]``.
+      block_indices: int32 ``[bh, n_qb, B]`` survivor key-block ids.
+      block_valid: int32 ``[bh, n_qb, B]`` (1 = real survivor, 0 = pad).
+    """
+    bh, n_q, d = q.shape
+    n_k = k.shape[-2]
+    bq, bk = query_block, key_block
+    if n_q % bq or n_k % bk:
+        raise ValueError(f"{(n_q, n_k)} not divisible by {(bq, bk)}")
+    n_qb = n_q // bq
+    budget = block_indices.shape[-1]
+    sm_scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _bsa_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        q_offset=q_offset,
+        budget=budget,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, n_qb, budget),
+        in_specs=[
+            pl.BlockSpec(
+                (None, bq, d), lambda b, i, j, idx, val: (b, i, 0)
+            ),
+            pl.BlockSpec(
+                (None, bk, d), lambda b, i, j, idx, val: (b, idx[b, i, j], 0)
+            ),
+            pl.BlockSpec(
+                (None, bk, d), lambda b, i, j, idx, val: (b, idx[b, i, j], 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, bq, d), lambda b, i, j, idx, val: (b, i, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, _LANES), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, n_q, d), v.dtype),
+        interpret=interpret,
+    )(
+        block_indices.astype(jnp.int32),
+        block_valid.astype(jnp.int32),
+        q, k, v,
+    )

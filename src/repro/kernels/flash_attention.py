@@ -1,0 +1,127 @@
+"""Dense flash attention Pallas TPU kernel (the unpruned AU baseline).
+
+Grid ``(bh, n_qb, n_kb)``; the innermost key-block dimension is
+sequential on TPU, so online-softmax state (m, l, acc) lives in VMEM
+scratch and persists across key blocks. BlockSpecs stream one
+(block_q × d) query tile and one (block_k × d) key/value tile per step;
+Pallas's pipeline emitter double-buffers the HBM→VMEM copies, which is
+exactly the paper's head-level double-buffering (§IV-D) on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+_LANES = 128  # TPU vector lane count; scratch stats are lane-replicated
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, sm_scale: float, causal: bool, block_q: int, block_k: int,
+    q_offset: int, n_kb: int,
+):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale  # (block_q, block_k)
+
+    if causal:
+        qpos = (
+            q_offset + qb * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        )
+        kpos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_scratch[:, 0:1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)  # fully-masked guard
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scratch[:, 0:1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * corr + jax.lax.dot(
+        p, v_ref[...].astype(jnp.float32)
+    )
+    m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+    l_scratch[...] = jnp.broadcast_to(l_new, l_scratch.shape)
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_scratch[...] / jnp.maximum(l_scratch[:, 0:1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "q_offset", "scale", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q ``[bh, n_q, d]``, k/v ``[bh, n_k, d]`` → ``[bh, n_q, d]``."""
+    bh, n_q, d = q.shape
+    n_k = k.shape[-2]
+    if n_q % block_q or n_k % block_k:
+        raise ValueError(f"{(n_q, n_k)} not divisible by {(block_q, block_k)}")
+    n_qb, n_kb = n_q // block_q, n_k // block_k
+    sm_scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=q_offset,
+        n_kb=n_kb,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, n_q, d), v.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, _LANES), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

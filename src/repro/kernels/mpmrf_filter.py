@@ -1,0 +1,133 @@
+"""Fused MP-MRF Filtering Unit kernel (Energon §IV-B on TPU).
+
+One pass over (query block × key block) tiles computes **both** filter
+rounds' block scores with Fig. 7 result reuse:
+
+    acc0 = Q_hi · K_msbᵀ                  (round-0, 2-bit K plane)
+    acc1 = (acc0 << shift) + Q_hi · K_remᵀ (round-1, 4-bit via remainder)
+
+so the two rounds cost exactly one full-width integer matmul — the PE's
+shift-and-add realized algebraically on the MXU. Per-row query scales are
+applied in-kernel (block-max does not commute with per-row rescaling);
+per-head key scales are scalars and applied by the caller.
+
+Outputs are the two block-max score planes ``[bh, n_qb, n_kb]`` used by
+Eq. 3 threshold rounds + top-B selection (cheap, done in plain XLA).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _filter_kernel(
+    q_ref, kmsb_ref, krem_ref, qs_ref, s0_ref, s1_ref,
+    *, shift: int, causal: bool, block_q: int, block_k: int, q_offset: int,
+):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    qp = q_ref[...].astype(jnp.int32)
+    acc0 = jax.lax.dot_general(
+        qp, kmsb_ref[...].astype(jnp.int32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc1 = jnp.left_shift(acc0, shift) + jax.lax.dot_general(
+        qp, krem_ref[...].astype(jnp.int32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    qs = qs_ref[...]  # (block_q, 1) per-row dequant scale
+    s0 = acc0.astype(jnp.float32) * qs
+    s1 = acc1.astype(jnp.float32) * qs
+
+    if causal:
+        qpos = (
+            q_offset + qb * block_q
+            + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        )
+        kpos = kb * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        ok = kpos <= qpos
+        s0 = jnp.where(ok, s0, NEG_INF)
+        s1 = jnp.where(ok, s1, NEG_INF)
+
+    s0_ref[0, kb] = jnp.max(s0)
+    s1_ref[0, kb] = jnp.max(s1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "shift", "query_block", "key_block", "causal", "q_offset", "interpret"
+    ),
+)
+def mpmrf_filter_scores(
+    q_plane: jax.Array,
+    k_msb: jax.Array,
+    k_rem: jax.Array,
+    q_scale: jax.Array,
+    *,
+    shift: int,
+    query_block: int = 128,
+    key_block: int = 128,
+    causal: bool = True,
+    q_offset: int = 0,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused two-round block-score computation.
+
+    Args:
+      q_plane: int8/int32 ``[bh, n_q, d]`` query plane at final bit-width.
+      k_msb:   int8/int32 ``[bh, n_k, d]`` round-0 MSB key plane.
+      k_rem:   int8/int32 ``[bh, n_k, d]`` round-1 remainder key plane.
+      q_scale: float32 ``[bh, n_q, 1]`` per-row dequantization scale.
+      shift:   bit distance between rounds (round_bits[1]-round_bits[0]).
+
+    Returns:
+      (s0_block, s1_block) float32 ``[bh, n_qb, n_kb]`` block-max scores.
+    """
+    bh, n_q, d = q_plane.shape
+    n_k = k_msb.shape[-2]
+    bq, bk = query_block, key_block
+    if n_q % bq or n_k % bk:
+        raise ValueError(f"{(n_q, n_k)} not divisible by {(bq, bk)}")
+    n_qb, n_kb = n_q // bq, n_k // bk
+
+    kernel = functools.partial(
+        _filter_kernel,
+        shift=shift,
+        causal=causal,
+        block_q=bq,
+        block_k=bk,
+        q_offset=q_offset,
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct((bh, n_qb, n_kb), jnp.float32),
+        jax.ShapeDtypeStruct((bh, n_qb, n_kb), jnp.float32),
+    ]
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((None, bq, 1), lambda b, i, j: (b, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, 1, n_kb), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((None, 1, n_kb), lambda b, i, j: (b, i, 0)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(q_plane, k_msb, k_rem, q_scale)

@@ -1,0 +1,221 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These compose the kernels into the full Energon pipeline
+(quantize → fused filter → Eq. 3 block selection → block-sparse AU) and
+pick interpret mode automatically off-TPU so the same call sites work in
+CPU tests and on real hardware.
+
+Gradients: the kernels are forward/serving paths (the paper's Energon is
+an inference co-processor). Training uses the XLA implementations in
+``repro.core``; `energon_block_attention` therefore attaches a custom
+VJP that recomputes through the XLA block path so the module stays
+differentiable if a training config selects ``impl="pallas"``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import filtering as flt
+from repro.core import quantization as qlib
+from repro.core import sparse_attention as spa
+from repro.kernels import block_sparse_attention as bsa_kernel
+from repro.kernels import flash_attention as fa_kernel
+from repro.kernels import mpmrf_filter as filt_kernel
+
+NEG_INF = -1e30
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Dense flash attention over ``[bh, n, d]`` operands."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return fa_kernel.flash_attention(
+        q, k, v,
+        causal=causal, q_offset=q_offset, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+def mpmrf_select_blocks(
+    q: jax.Array,
+    k: jax.Array,
+    *,
+    round_bits: Tuple[int, ...] = (2, 4),
+    alphas: Tuple[float, ...] = (0.0, 0.0),
+    block_budget: int = 8,
+    query_block: int = 128,
+    key_block: int = 128,
+    causal: bool = True,
+    q_offset: int = 0,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full FU pipeline: quantize → fused filter kernel → block selection.
+
+    q/k: float ``[bh, n, d]``. Returns (block_indices, block_valid), each
+    ``[bh, n_qb, B]`` int32, ready for :func:`block_sparse_attention`.
+    """
+    if len(round_bits) != 2:
+        raise ValueError("fused kernel supports the default 2-round config")
+    interpret = _default_interpret() if interpret is None else interpret
+    lo, hi = round_bits
+    bq, bk = query_block, key_block
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    n_qb, n_kb = n_q // bq, n_k // bk
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    k16 = qlib.quantize_int16(k, axis=(-2, -1))
+    q_plane = q16.bit_plane(hi).astype(jnp.int8)
+    k_msb = k16.bit_plane(lo).astype(jnp.int8)
+    k_rem = k16.lsb_remainder(lo, hi).astype(jnp.int8)
+
+    s0_blk, s1_blk = filt_kernel.mpmrf_filter_scores(
+        q_plane, k_msb, k_rem, q16.scale,
+        shift=hi - lo,
+        query_block=bq, key_block=bk,
+        causal=causal, q_offset=q_offset,
+        interpret=interpret,
+    )
+    # Scalar factors deferred from the kernel: per-head k scale × the
+    # q plane's 2^(16-hi) × the round-r k plane's 2^(16-bits).
+    k_scale = jnp.squeeze(k16.scale, axis=(-2, -1))[:, None, None]
+    q_plane_factor = float(2 ** (16 - hi))
+    s0_blk = jnp.where(
+        s0_blk <= NEG_INF / 2, NEG_INF,
+        s0_blk * k_scale * q_plane_factor * float(2 ** (16 - lo)),
+    )
+    s1_blk = jnp.where(
+        s1_blk <= NEG_INF / 2, NEG_INF,
+        s1_blk * k_scale * q_plane_factor * float(2 ** (16 - hi)),
+    )
+
+    blk_valid = s0_blk > NEG_INF / 2
+    keep = blk_valid
+    theta0 = flt.eq3_threshold(s0_blk, alphas[0], keep)
+    keep = jnp.logical_and(keep, s0_blk >= theta0)
+    theta1 = flt.eq3_threshold(s1_blk, alphas[1], keep)
+    keep = jnp.logical_and(keep, s1_blk >= theta1)
+
+    if keep_first:
+        keep = keep.at[..., 0].set(blk_valid[..., 0])
+    if keep_diagonal:
+        diag = jnp.minimum((jnp.arange(n_qb) * bq) // bk, n_kb - 1)
+        diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
+        keep = jnp.logical_or(keep, jnp.logical_and(diag_mask, blk_valid))
+
+    b = min(block_budget, n_kb)
+    sel = jnp.where(keep, s1_blk, NEG_INF)
+    top_vals, block_indices = jax.lax.top_k(sel, b)
+    block_valid = (top_vals > NEG_INF / 2).astype(jnp.int32)
+    # Padded slots point at block 0 (harmless: masked out by block_valid).
+    block_indices = jnp.where(block_valid > 0, block_indices, 0)
+    return block_indices.astype(jnp.int32), block_valid
+
+
+def block_sparse_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_indices: jax.Array,
+    block_valid: Optional[jax.Array] = None,
+    *,
+    query_block: int = 128,
+    key_block: int = 128,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """AU kernel wrapper; ``[bh, n, d]`` operands."""
+    interpret = _default_interpret() if interpret is None else interpret
+    if block_valid is None:
+        block_valid = jnp.ones(block_indices.shape, jnp.int32)
+    return bsa_kernel.block_sparse_attention(
+        q, k, v, block_indices, block_valid,
+        query_block=query_block, key_block=key_block,
+        causal=causal, q_offset=q_offset, scale=scale,
+        interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6),
+)
+def energon_block_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_budget: int = 8,
+    query_block: int = 128,
+    key_block: int = 128,
+    causal: bool = True,
+) -> jax.Array:
+    """End-to-end Energon attention via Pallas (FU kernel + AU kernel).
+
+    Differentiable: the VJP recomputes through the XLA block path with
+    the same selection (selection itself is non-differentiable, as in
+    straight-through sparse attention).
+    """
+    idx, val = mpmrf_select_blocks(
+        q, k,
+        block_budget=block_budget,
+        query_block=query_block, key_block=key_block,
+        causal=causal,
+    )
+    return block_sparse_attention(
+        q, k, v, idx, val,
+        query_block=query_block, key_block=key_block, causal=causal,
+    )
+
+
+def _eba_fwd(q, k, v, block_budget, query_block, key_block, causal):
+    idx, val = mpmrf_select_blocks(
+        q, k,
+        block_budget=block_budget,
+        query_block=query_block, key_block=key_block,
+        causal=causal,
+    )
+    out = block_sparse_attention(
+        q, k, v, idx, val,
+        query_block=query_block, key_block=key_block, causal=causal,
+    )
+    return out, (q, k, v, idx, val)
+
+
+def _eba_bwd(block_budget, query_block, key_block, causal, res, g):
+    q, k, v, idx, val = res
+
+    def xla_path(q, k, v):
+        from repro.kernels import ref as kref
+
+        return kref.block_sparse_attention_ref(
+            q, k, v, idx, val,
+            query_block=query_block, key_block=key_block, causal=causal,
+        )
+
+    _, vjp = jax.vjp(xla_path, q, k, v)
+    return vjp(g)
+
+
+energon_block_attention.defvjp(_eba_fwd, _eba_bwd)

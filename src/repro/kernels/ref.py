@@ -1,0 +1,155 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function mirrors a kernel's exact numerical contract (including
+masking, -inf conventions and f32 accumulation) so the kernel tests can
+``assert_allclose`` across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Dense attention oracle. q ``[bh, n_q, d]``, k/v ``[bh, n_k, d]``."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if causal:
+        qpos = jnp.arange(q.shape[-2])[:, None] + q_offset
+        kpos = jnp.arange(k.shape[-2])[None, :]
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    return (jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)) / l).astype(
+        v.dtype
+    )
+
+
+def block_sparse_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_indices: jax.Array,
+    block_valid: jax.Array,
+    *,
+    query_block: int,
+    key_block: int,
+    causal: bool = True,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Oracle for the block-sparse flash kernel.
+
+    q ``[bh, n_q, d]``; k/v ``[bh, n_k, d]``;
+    block_indices int32 ``[bh, n_qb, B]``; block_valid ``[bh, n_qb, B]``
+    (1 = real survivor, 0 = padded slot).
+    """
+    bh, n_q, d = q.shape
+    n_k = k.shape[-2]
+    bq, bk = query_block, key_block
+    n_qb = n_q // bq
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    qb = q.reshape(bh, n_qb, bq, d).astype(jnp.float32)
+    kb = k.reshape(bh, n_k // bk, bk, d).astype(jnp.float32)
+    vb = v.reshape(bh, n_k // bk, bk, d).astype(jnp.float32)
+    kg = jnp.take_along_axis(
+        kb[:, None], block_indices[..., None, None], axis=2
+    )  # [bh, n_qb, B, bk, d]
+    vg = jnp.take_along_axis(
+        vb[:, None], block_indices[..., None, None], axis=2
+    )
+    s = jnp.einsum("hiqd,hibkd->hiqbk", qb, kg) * scale
+    mask = block_valid[:, :, None, :, None].astype(bool)
+    if causal:
+        qpos = (
+            q_offset
+            + jnp.arange(n_qb)[:, None, None, None] * bq
+            + jnp.arange(bq)[None, :, None, None]
+        )
+        kpos = (
+            block_indices[:, :, None, :, None] * bk
+            + jnp.arange(bk)[None, None, None, None, :]
+        )  # [bh, n_qb, 1, B, bk]
+        mask = jnp.logical_and(mask, kpos <= qpos[None])
+    s = jnp.where(mask, s, NEG_INF)
+    flat = s.reshape(bh, n_qb, bq, -1)
+    m = jnp.max(flat, axis=-1, keepdims=True)
+    p = jnp.exp(flat - m)
+    p = jnp.where(flat <= NEG_INF / 2, 0.0, p)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    p = (p / l).reshape(s.shape)
+    out = jnp.einsum("hiqbk,hibkd->hiqd", p, vg)
+    return out.reshape(bh, n_q, d).astype(v.dtype)
+
+
+def mpmrf_filter_ref(
+    q_plane: jax.Array,
+    k_msb: jax.Array,
+    k_rem: jax.Array,
+    q_scale: jax.Array,
+    *,
+    query_block: int,
+    key_block: int,
+    shift: int,
+    causal: bool = True,
+    q_offset: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused MP-MRF filter kernel.
+
+    Inputs are integer bit-planes (int8/int32): q_plane ``[bh, n_q, d]``
+    at the final round's width, k_msb/k_rem ``[bh, n_k, d]``; q_scale
+    ``[bh, n_q, 1]`` per-row dequant scale. Returns per-round block-max
+    score planes (``[bh, n_qb, n_kb]`` float32) where
+
+        s0 = max over tile of (q·k_msb) · q_scale
+        s1 = max over tile of ((q·k_msb << shift) + q·k_rem) · q_scale
+
+    masked to -inf where causality forbids the pair (per-head k scale and
+    2^(16-bits) factors are scalars and applied by the caller).
+    """
+    bh, n_q, d = q_plane.shape
+    n_k = k_msb.shape[-2]
+    bq, bk = query_block, key_block
+    acc0 = jnp.einsum(
+        "bqd,bkd->bqk",
+        q_plane.astype(jnp.int32),
+        k_msb.astype(jnp.int32),
+    )
+    acc1 = jnp.left_shift(acc0, shift) + jnp.einsum(
+        "bqd,bkd->bqk",
+        q_plane.astype(jnp.int32),
+        k_rem.astype(jnp.int32),
+    )
+    s0 = acc0.astype(jnp.float32) * q_scale
+    s1 = acc1.astype(jnp.float32) * q_scale
+    if causal:
+        qpos = jnp.arange(n_q)[:, None] + q_offset
+        kpos = jnp.arange(n_k)[None, :]
+        ok = (kpos <= qpos)[None]
+        s0 = jnp.where(ok, s0, NEG_INF)
+        s1 = jnp.where(ok, s1, NEG_INF)
+
+    def pool(s):
+        t = s.reshape(bh, n_q // bq, bq, n_k // bk, bk)
+        return jnp.max(t, axis=(2, 4))
+
+    return pool(s0), pool(s1)

@@ -1,0 +1,3 @@
+"""Composable model zoo: transformer / MoE / SSM / hybrid decoders."""
+
+from repro.models.model import LMModel  # noqa: F401

@@ -1,0 +1,200 @@
+"""Multi-head attention with GQA, RoPE, qk-norm, sliding windows, KV cache
+— all routed through Energon dynamic sparse attention (`repro.core`).
+
+Calling convention keeps activations ``[batch, seq, d_model]`` and maps
+GQA by repeating KV heads to the query-head count before handing
+``[B, H, n, hd]`` tensors to ``energon_attention`` (XLA fuses the repeat;
+on the Pallas path the repeat is a view over the folded head axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import EnergonConfig, energon_attention, energon_decode_attention
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+
+def init_attention(
+    key,
+    d_model: int,
+    num_heads: int,
+    num_kv_heads: int,
+    head_dim: int,
+    use_qk_norm: bool = False,
+    dtype=jnp.float32,
+) -> Dict[str, Any]:
+    k_q, k_k, k_v, k_o = jax.random.split(key, 4)
+    std = d_model ** -0.5
+    params = {
+        "wq": L.trunc_normal(k_q, (d_model, num_heads, head_dim), std, dtype),
+        "wk": L.trunc_normal(k_k, (d_model, num_kv_heads, head_dim), std, dtype),
+        "wv": L.trunc_normal(k_v, (d_model, num_kv_heads, head_dim), std, dtype),
+        "wo": L.trunc_normal(
+            k_o, (num_heads, head_dim, d_model),
+            (num_heads * head_dim) ** -0.5, dtype,
+        ),
+    }
+    if use_qk_norm:
+        params["q_norm"] = L.init_rmsnorm(head_dim, dtype)
+        params["k_norm"] = L.init_rmsnorm(head_dim, dtype)
+    return params
+
+
+def _project_qkv(
+    params, x: jax.Array, positions: jax.Array,
+    use_qk_norm: bool, rope_theta: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x ``[B, n, d_model]`` → q ``[B, n, H, hd]``, k/v ``[B, n, KV, hd]``."""
+    q = jnp.einsum("bnd,dhk->bnhk", x, params["wq"])
+    k = jnp.einsum("bnd,dhk->bnhk", x, params["wk"])
+    v = jnp.einsum("bnd,dhk->bnhk", x, params["wv"])
+    if use_qk_norm:
+        q = L.rmsnorm(params["q_norm"], q)
+        k = L.rmsnorm(params["k_norm"], k)
+    q = L.apply_rope(q, positions, rope_theta)
+    k = L.apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """``[B, KV, n, hd]`` → ``[B, KV*groups, n, hd]``."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=1)
+
+
+def attention_block(
+    params,
+    x: jax.Array,
+    energon: EnergonConfig,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float = 10000.0,
+    use_qk_norm: bool = False,
+    window: Optional[int] = None,
+    layer_index: int = 10**9,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence (training / prefill) attention. x ``[B, n, d]``."""
+    batch, n, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(n)[None, :]
+    q, k, v = _project_qkv(params, x, positions, use_qk_norm, rope_theta)
+    q = q.transpose(0, 2, 1, 3)  # [B, H, n, hd]
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    groups = num_heads // num_kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    # Head-shard all attention operands over the model axis (uneven head
+    # counts are padded by GSPMD): the MP-MRF filter, the block gather
+    # and — critically — its backward scatter-add all stay device-local.
+    q = shd.constrain(q, ("dp", "model", None, None), allow_uneven=True)
+    k = shd.constrain(k, ("dp", "model", None, None), allow_uneven=True)
+    v = shd.constrain(v, ("dp", "model", None, None), allow_uneven=True)
+    out = energon_attention(
+        q, k, v, energon,
+        causal=True, window=window, layer_index=layer_index,
+    )
+    out = out.transpose(0, 2, 1, 3)  # [B, n, H, hd]
+    return jnp.einsum("bnhk,hkd->bnd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode path
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    batch: int, num_kv_heads: int, max_len: int, head_dim: int, dtype
+) -> Dict[str, jax.Array]:
+    return {
+        "k": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
+        "v": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
+    }
+
+
+def decode_attention_block(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cache_index: jax.Array,
+    energon: EnergonConfig,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float = 10000.0,
+    use_qk_norm: bool = False,
+    window: Optional[int] = None,
+    layer_index: int = 10**9,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode step. x ``[B, 1, d]``; cache_index ``[B]``.
+
+    Updates the cache in-place (functionally) at ``cache_index`` and runs
+    Energon decode attention (MP-MRF row filter over the cache, §IV-D
+    l=1 case) over the valid prefix.
+    """
+    batch = x.shape[0]
+    positions = cache_index[:, None]  # [B, 1]
+    q, k, v = _project_qkv(params, x, positions, use_qk_norm, rope_theta)
+    q = q.transpose(0, 2, 1, 3)              # [B, H, 1, hd]
+    k_new = k.transpose(0, 2, 1, 3)          # [B, KV, 1, hd]
+    v_new = v.transpose(0, 2, 1, 3)
+
+    # Align q with the cache layout. When KV heads divide the model axis
+    # the cache is head-sharded → shard q heads to match; otherwise the
+    # cache is *sequence*-sharded (context parallel) and q must be
+    # replicated over 'model', else XLA all-gathers the whole cache
+    # every layer (measured 64 MB × L per decode step).
+    mesh = shd.get_active_mesh()
+    kv_head_sharded = (
+        mesh is not None and "model" in mesh.axis_names
+        and num_kv_heads % mesh.shape["model"] == 0
+    )
+    q = shd.constrain(
+        q,
+        ("dp", "model" if kv_head_sharded else None, None, None),
+        allow_uneven=True,
+    )
+
+    # Scatter the new K/V row at each sequence's cache position; pin the
+    # result to the cache layout (the broadcast product is otherwise
+    # unsharded on the sequence dim → full-cache all-gather per layer).
+    onehot = jax.nn.one_hot(
+        cache_index, cache["k"].shape[2], dtype=k_new.dtype
+    )  # [B, max_len]
+    onehot = shd.constrain_cache_onehot(onehot, cache["k"].shape)
+    k_cache = shd.constrain_kv_cache(
+        cache["k"] * (1 - onehot)[:, None, :, None]
+        + onehot[:, None, :, None] * k_new
+    )
+    v_cache = shd.constrain_kv_cache(
+        cache["v"] * (1 - onehot)[:, None, :, None]
+        + onehot[:, None, :, None] * v_new
+    )
+
+    # GQA without materializing a repeated cache: fold the head groups
+    # into the query-position axis (every group row sits at the same
+    # position, so masking is identical). `jnp.repeat` of a
+    # sequence-sharded cache makes GSPMD all-gather it per layer.
+    groups = num_heads // num_kv_heads
+    head_dim = q.shape[-1]
+    if groups > 1:
+        qg = q.reshape(batch, num_kv_heads, groups, head_dim)
+    else:
+        qg = q
+    out = energon_decode_attention(
+        qg, k_cache, v_cache, cache_index + 1, energon,
+        layer_index=layer_index, window=window,
+    )
+    if groups > 1:
+        out = out.reshape(batch, num_heads, 1, head_dim)
+    out = out.transpose(0, 2, 1, 3)
+    y = jnp.einsum("bnhk,hkd->bnd", out, params["wo"])
+    return y, {"k": k_cache, "v": v_cache}

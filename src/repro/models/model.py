@@ -1,0 +1,526 @@
+"""LMModel — one config-driven entry point for every assigned architecture.
+
+Families:
+  dense / moe / vlm / audio — decoder transformer stack (scan over layers)
+  ssm                       — xLSTM: groups of (m × mLSTM + s × sLSTM)
+  hybrid                    — zamba2: Mamba2 backbone + shared attention
+
+API (all pure functions of a param pytree):
+  init(rng)                           → params
+  apply(params, batch)                → (logits, aux_loss)
+  loss(params, batch)                 → (loss, metrics)
+  init_cache(batch, max_len)          → decode cache pytree
+  decode_step(params, cache, inputs, cache_index) → (logits, cache)
+
+Batch convention: token families use ``{"inputs": [B,n] int32,
+"targets": [B,n] int32}``; vlm/audio use ``{"embeddings": [B,n,d_model],
+"targets": [B,n]}`` (the modality frontend is a stub per the task spec —
+see `repro.models.multimodal`).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as shd
+from repro.models import attention as attn_lib
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tfm
+
+
+class LMModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family not in ("dense", "moe", "ssm", "hybrid", "vlm", "audio"):
+            raise ValueError(f"unknown family {cfg.family}")
+
+    # ------------------------------------------------------------------
+    # shared bits
+    # ------------------------------------------------------------------
+
+    @property
+    def _dtype(self):
+        return jnp.dtype(self.cfg.dtype)
+
+    def _moe_cfg(self) -> Optional[moe_lib.MoEConfig]:
+        if self.cfg.family != "moe":
+            return None
+        return moe_lib.MoEConfig(
+            num_experts=self.cfg.num_experts,
+            experts_per_token=self.cfg.experts_per_token,
+            d_model=self.cfg.d_model,
+            d_ff=self.cfg.d_ff,
+            activation=self.cfg.activation,
+            capacity_factor=self.cfg.capacity_factor,
+            quantized_weight_gather=self.cfg.moe_quantized_gather,
+        )
+
+    def layer_windows(self) -> Optional[jnp.ndarray]:
+        """Per-layer sliding windows (0 ⇒ global). None ⇒ all global."""
+        cfg = self.cfg
+        if cfg.sliding_window <= 0 or cfg.global_every <= 0:
+            return None
+        ids = jnp.arange(cfg.num_layers)
+        is_global = (ids + 1) % cfg.global_every == 0
+        return jnp.where(is_global, 0, cfg.sliding_window).astype(jnp.int32)
+
+    def _init_tfm_block(self, key):
+        cfg = self.cfg
+        return tfm.init_block(
+            key,
+            d_model=cfg.d_model,
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim,
+            d_ff=cfg.d_ff,
+            activation=cfg.activation,
+            norm=cfg.norm,
+            use_qk_norm=cfg.use_qk_norm,
+            moe_cfg=self._moe_cfg(),
+            dtype=self._dtype,
+        )
+
+    # ------------------------------------------------------------------
+    # init
+    # ------------------------------------------------------------------
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        k_emb, k_blocks, k_head, k_extra = jax.random.split(rng, 4)
+        params: Dict[str, Any] = {
+            "embed": L.init_embedding(
+                k_emb, cfg.vocab_size, cfg.d_model, self._dtype
+            ),
+            "final_norm": L.init_norm(cfg.norm, cfg.d_model, self._dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.init_lm_head(
+                k_head, cfg.d_model, cfg.vocab_size, self._dtype
+            )
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            params["blocks"] = tfm.init_stack(
+                k_blocks, cfg.num_layers, self._init_tfm_block
+            )
+        elif cfg.family == "ssm":
+            m_per, s_per = cfg.xlstm_group
+            groups = cfg.num_layers // (m_per + s_per)
+            k_m, k_s = jax.random.split(k_blocks)
+
+            def init_group_m(key):
+                keys = jax.random.split(key, m_per)
+                return jax.vmap(
+                    lambda kk: {
+                        "norm": L.init_norm(cfg.norm, cfg.d_model, self._dtype),
+                        "cell": ssm_lib.init_mlstm(
+                            kk, cfg.d_model, cfg.num_heads, self._dtype
+                        ),
+                    }
+                )(keys)
+
+            params["mlstm"] = jax.vmap(init_group_m)(
+                jax.random.split(k_m, groups)
+            )
+            params["slstm"] = jax.vmap(
+                lambda kk: {
+                    "norm": L.init_norm(cfg.norm, cfg.d_model, self._dtype),
+                    "cell": ssm_lib.init_slstm(
+                        kk, cfg.d_model, cfg.num_heads, self._dtype
+                    ),
+                }
+            )(jax.random.split(k_s, groups))
+        elif cfg.family == "hybrid":
+            period = cfg.hybrid_attn_every
+            groups = cfg.num_layers // period
+            tail = cfg.num_layers - groups * period
+            k_a, k_b, k_t, k_sh = jax.random.split(k_blocks, 4)
+
+            def init_mamba(key):
+                return {
+                    "norm": L.init_norm(cfg.norm, cfg.d_model, self._dtype),
+                    "cell": ssm_lib.init_mamba2(
+                        key, cfg.d_model, cfg.ssm_state,
+                        cfg.ssm_head_dim, dtype=self._dtype,
+                    ),
+                }
+
+            def init_group_a(key):
+                return jax.vmap(init_mamba)(jax.random.split(key, period - 1))
+
+            params["mamba_pre"] = jax.vmap(init_group_a)(
+                jax.random.split(k_a, groups)
+            )
+            params["mamba_post"] = jax.vmap(init_mamba)(
+                jax.random.split(k_b, groups)
+            )
+            if tail:
+                params["mamba_tail"] = jax.vmap(init_mamba)(
+                    jax.random.split(k_t, tail)
+                )
+            params["shared"] = self._init_tfm_block(k_sh)
+        return params
+
+    # ------------------------------------------------------------------
+    # forward (training / prefill)
+    # ------------------------------------------------------------------
+
+    def _embed_in(self, params, batch) -> jax.Array:
+        if self.cfg.uses_embeddings_input and "embeddings" in batch:
+            x = batch["embeddings"].astype(self._dtype)
+        else:
+            x = L.embed_tokens(params["embed"], batch["inputs"]).astype(
+                self._dtype
+            ) * (self.cfg.d_model ** 0.5)
+        # table features are TP-sharded; bring activations back to
+        # batch-DP layout before the stack.
+        return shd.constrain(x, ("dp", None, None))
+
+    def _logits_out(self, params, x) -> jax.Array:
+        x = L.apply_norm(self.cfg.norm, params["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            logits = L.tied_lm_logits(params["embed"], x)
+        else:
+            logits = L.lm_logits(params["lm_head"], x)
+        return shd.constrain(logits, ("dp", None, "model"))
+
+    def _tfm_block_fn(self):
+        cfg = self.cfg
+        has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
+
+        def block_fn(layer_params, x, window, layer_idx):
+            return tfm.apply_block(
+                layer_params, x, cfg.energon,
+                num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                rope_theta=cfg.rope_theta,
+                use_qk_norm=cfg.use_qk_norm,
+                activation=cfg.activation,
+                norm=cfg.norm,
+                window=window if has_windows else None,
+                layer_index=layer_idx,
+                moe_cfg=self._moe_cfg(),
+            )
+
+        return block_fn
+
+    def apply(self, params, batch) -> Tuple[jax.Array, jax.Array]:
+        cfg = self.cfg
+        x = self._embed_in(params, batch)
+        aux = jnp.zeros((), jnp.float32)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            x, aux = tfm.apply_stack(
+                params["blocks"], x, self.layer_windows(),
+                self._tfm_block_fn(), remat=cfg.remat,
+                prefix_layers=cfg.energon.min_prune_layer,
+            )
+        elif cfg.family == "ssm":
+            x = self._apply_xlstm(params, x)
+        elif cfg.family == "hybrid":
+            x = self._apply_hybrid(params, x)
+        return self._logits_out(params, x), aux
+
+    def _apply_xlstm(self, params, x):
+        cfg = self.cfg
+
+        def mlstm_block(p, x):
+            return x + ssm_lib.mlstm_seq(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x), cfg.num_heads
+            )
+
+        def slstm_block(p, x):
+            return x + ssm_lib.slstm_seq(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x), cfg.num_heads
+            )
+
+        def group_body(x, group_params):
+            mp, sp = group_params
+
+            def inner(x, p_layer):
+                fn = mlstm_block
+                if cfg.remat != "none":
+                    fn = jax.checkpoint(mlstm_block)
+                return shd.constrain(fn(p_layer, x), ("dp", None, None)), None
+
+            x, _ = jax.lax.scan(lambda c, p: inner(c, p), x, mp)
+            fn = slstm_block
+            if cfg.remat != "none":
+                fn = jax.checkpoint(slstm_block)
+            x = shd.constrain(fn(sp, x), ("dp", None, None))
+            return x, None
+
+        x, _ = jax.lax.scan(
+            group_body, x, (params["mlstm"], params["slstm"])
+        )
+        return x
+
+    def _apply_hybrid(self, params, x):
+        cfg = self.cfg
+        block_fn = self._tfm_block_fn()
+
+        def mamba_block(p, x):
+            return x + ssm_lib.mamba2_seq(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x),
+                cfg.ssm_state, cfg.ssm_head_dim,
+            )
+
+        def maybe_ckpt(fn):
+            return jax.checkpoint(fn) if cfg.remat != "none" else fn
+
+        def group_body(x, group_params):
+            pre, post = group_params
+            x, _ = jax.lax.scan(
+                lambda c, p: (shd.constrain(
+                    maybe_ckpt(mamba_block)(p, c), ("dp", None, None)
+                ), None), x, pre
+            )
+            # shared attention block (params closed over — weights shared)
+            x, _ = maybe_ckpt(
+                lambda p, c: block_fn(p, c, jnp.int32(0), 10**9)
+            )(params["shared"], x)
+            x = maybe_ckpt(mamba_block)(post, x)
+            return shd.constrain(x, ("dp", None, None)), None
+
+        x, _ = jax.lax.scan(
+            group_body, x, (params["mamba_pre"], params["mamba_post"])
+        )
+        if "mamba_tail" in params:
+            x, _ = jax.lax.scan(
+                lambda c, p: (maybe_ckpt(mamba_block)(p, c), None),
+                x, params["mamba_tail"],
+            )
+        return x
+
+    # ------------------------------------------------------------------
+    # loss
+    # ------------------------------------------------------------------
+
+    def loss(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.apply(params, batch)
+        ce, n_tokens = L.softmax_cross_entropy(
+            logits, batch["targets"], batch.get("mask")
+        )
+        total = ce + aux
+        return total, {
+            "loss": total, "ce": ce, "aux": aux, "tokens": n_tokens,
+        }
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = self._dtype
+
+        def attn_cache():
+            return attn_lib.init_kv_cache(
+                batch, cfg.num_kv_heads, max_len, cfg.head_dim, dt
+            )
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            one = attn_cache()
+            return jax.tree.map(
+                lambda a: jnp.broadcast_to(
+                    a, (cfg.num_layers,) + a.shape
+                ).copy(),
+                one,
+            )
+        if cfg.family == "ssm":
+            m_per, s_per = cfg.xlstm_group
+            groups = cfg.num_layers // (m_per + s_per)
+            m_state = ssm_lib.mlstm_init_state(
+                batch, cfg.d_model, cfg.num_heads, dt
+            )
+            s_state = ssm_lib.slstm_init_state(batch, cfg.d_model)
+            return {
+                "mlstm": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (groups, m_per) + a.shape
+                    ).copy(), m_state,
+                ),
+                "slstm": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (groups,) + a.shape
+                    ).copy(), s_state,
+                ),
+            }
+        if cfg.family == "hybrid":
+            period = cfg.hybrid_attn_every
+            groups = cfg.num_layers // period
+            tail = cfg.num_layers - groups * period
+            m_state = ssm_lib.mamba2_init_state(
+                batch, cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim, dtype=dt
+            )
+            cache = {
+                "mamba_pre": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (groups, period - 1) + a.shape
+                    ).copy(), m_state,
+                ),
+                "mamba_post": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (groups,) + a.shape
+                    ).copy(), m_state,
+                ),
+                "shared_attn": jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (groups,) + a.shape
+                    ).copy(), attn_cache(),
+                ),
+            }
+            if tail:
+                cache["mamba_tail"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a, (tail,) + a.shape
+                    ).copy(), m_state,
+                )
+            return cache
+        raise ValueError(cfg.family)
+
+    def decode_step(
+        self,
+        params,
+        cache,
+        inputs: Dict[str, jax.Array],
+        cache_index: jax.Array,
+    ) -> Tuple[jax.Array, Any]:
+        """One-token decode. inputs: {"tokens": [B,1]} or
+        {"embeddings": [B,1,d]}; cache_index ``[B]`` current lengths."""
+        cfg = self.cfg
+        if cfg.uses_embeddings_input and "embeddings" in inputs:
+            x = inputs["embeddings"].astype(self._dtype)
+        else:
+            x = L.embed_tokens(params["embed"], inputs["tokens"]).astype(
+                self._dtype
+            ) * (cfg.d_model ** 0.5)
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            x, new_cache = self._decode_tfm(params, cache, x, cache_index)
+        elif cfg.family == "ssm":
+            x, new_cache = self._decode_xlstm(params, cache, x)
+        elif cfg.family == "hybrid":
+            x, new_cache = self._decode_hybrid(params, cache, x, cache_index)
+        logits = self._logits_out(params, x)
+        return logits, new_cache
+
+    def _decode_attn_step(self, layer_params, x, kv_cache, window,
+                          layer_idx, cache_index):
+        cfg = self.cfg
+        h, new_cache = attn_lib.decode_attention_block(
+            layer_params["attn"],
+            L.apply_norm(cfg.norm, layer_params["norm_attn"], x),
+            kv_cache, cache_index, cfg.energon,
+            num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads,
+            rope_theta=cfg.rope_theta,
+            use_qk_norm=cfg.use_qk_norm,
+            window=window,
+            layer_index=layer_idx,
+        )
+        x = x + h
+        h_in = L.apply_norm(cfg.norm, layer_params["norm_mlp"], x)
+        if self._moe_cfg() is not None:
+            h, _ = moe_lib.apply_moe(layer_params["moe"], h_in, self._moe_cfg())
+        else:
+            h = L.apply_mlp(layer_params["mlp"], h_in, cfg.activation)
+        return x + h, new_cache
+
+    def _decode_tfm(self, params, cache, x, cache_index):
+        cfg = self.cfg
+        has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
+        windows = self.layer_windows()
+
+        def step_fn(layer_params, x, kv_cache, window, layer_idx):
+            return self._decode_attn_step(
+                layer_params, x, kv_cache,
+                window if has_windows else None, layer_idx, cache_index,
+            )
+
+        return tfm.apply_stack_decode(
+            params["blocks"], x, cache, windows, step_fn,
+            prefix_layers=cfg.energon.min_prune_layer,
+        )
+
+    def _decode_xlstm(self, params, cache, x):
+        cfg = self.cfg
+
+        def m_step(p, x, st):
+            h, new = ssm_lib.mlstm_step(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x),
+                st, cfg.num_heads,
+            )
+            return x + h, new
+
+        def s_step(p, x, st):
+            h, new = ssm_lib.slstm_step(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x),
+                st, cfg.num_heads,
+            )
+            return x + h, new
+
+        def group_body(x, xs):
+            (mp, sp), (mst, sst) = xs
+
+            def inner(x, inner_xs):
+                p_layer, st = inner_xs
+                x, new_st = m_step(p_layer, x, st)
+                return x, new_st
+
+            x, new_mst = jax.lax.scan(inner, x, (mp, mst))
+            x, new_sst = s_step(sp, x, sst)
+            return x, (new_mst, new_sst)
+
+        x, (new_m, new_s) = jax.lax.scan(
+            group_body, x,
+            ((params["mlstm"], params["slstm"]),
+             (cache["mlstm"], cache["slstm"])),
+        )
+        return x, {"mlstm": new_m, "slstm": new_s}
+
+    def _decode_hybrid(self, params, cache, x, cache_index):
+        cfg = self.cfg
+
+        def m_step(p, x, st):
+            h, new = ssm_lib.mamba2_step(
+                p["cell"], L.apply_norm(cfg.norm, p["norm"], x),
+                st, cfg.ssm_state, cfg.ssm_head_dim,
+            )
+            return x + h, new
+
+        def group_body(x, xs):
+            (pre_p, post_p), (pre_st, post_st, attn_st) = xs
+            x, new_pre = jax.lax.scan(
+                lambda c, z: m_step(z[0], c, z[1]), x, (pre_p, pre_st)
+            )
+            x, new_attn = self._decode_attn_step(
+                params["shared"], x, attn_st, None, 10**9, cache_index
+            )
+            x, new_post = m_step(post_p, x, post_st)
+            return x, (new_pre, new_post, new_attn)
+
+        x, (new_pre, new_post, new_attn) = jax.lax.scan(
+            group_body, x,
+            ((params["mamba_pre"], params["mamba_post"]),
+             (cache["mamba_pre"], cache["mamba_post"],
+              cache["shared_attn"])),
+        )
+        new_cache = {
+            "mamba_pre": new_pre,
+            "mamba_post": new_post,
+            "shared_attn": new_attn,
+        }
+        if "mamba_tail" in params:
+            x, new_tail = jax.lax.scan(
+                lambda c, z: m_step(z[0], c, z[1]),
+                x, (params["mamba_tail"], cache["mamba_tail"]),
+            )
+            new_cache["mamba_tail"] = new_tail
+        return x, new_cache

@@ -1,0 +1,45 @@
+"""Modality-frontend STUBS for the VLM / audio backbones.
+
+Per the task spec, the assigned ``[vlm]`` / ``[audio]`` entries specify
+the transformer *backbone* only; the modality frontend (LLaVA-NeXT anyres
+vision tower + projector, MusicGen's EnCodec) is a stub whose contract is
+exactly what ``input_specs()`` needs: precomputed patch/frame embeddings
+of shape ``[batch, seq, d_model]``.
+
+The stubs are deterministic functions of (position, channel) so tests
+get reproducible inputs without pretrained towers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vision_patch_embeddings(
+    batch: int, seq: int, d_model: int, dtype=jnp.float32, seed: int = 0
+) -> jax.Array:
+    """LLaVA-NeXT anyres stub: stands in for CLIP-ViT patch features of
+    the tiled image grid, already projected to the LM width and
+    concatenated with text embeddings."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(key, (batch, seq, d_model), dtype)
+
+
+def audio_frame_embeddings(
+    batch: int, seq: int, d_model: int, dtype=jnp.float32, seed: int = 1
+) -> jax.Array:
+    """MusicGen stub: stands in for the summed EnCodec codebook
+    embeddings per frame (delay-pattern interleaving happens upstream)."""
+    key = jax.random.PRNGKey(seed)
+    return 0.02 * jax.random.normal(key, (batch, seq, d_model), dtype)
+
+
+def frontend_embeddings(
+    kind: str, batch: int, seq: int, d_model: int, dtype=jnp.float32
+) -> jax.Array:
+    if kind == "vision":
+        return vision_patch_embeddings(batch, seq, d_model, dtype)
+    if kind == "audio":
+        return audio_frame_embeddings(batch, seq, d_model, dtype)
+    raise ValueError(f"unknown frontend {kind}")

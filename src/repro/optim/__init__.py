@@ -1,0 +1,12 @@
+"""Optimizer substrate: AdamW + schedules + accumulation."""
+
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    accumulate_gradients,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    update,
+    warmup_cosine,
+)

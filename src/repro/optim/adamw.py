@@ -1,0 +1,237 @@
+"""AdamW optimizer (pure pytree, no external deps) + schedules + clipping.
+
+Production details: f32 first/second moments regardless of param dtype
+(bf16 params train stably), decoupled weight decay, global-norm clip,
+optional int8 error-feedback gradient compression state (see
+`repro.distributed.compression`), and µbatch gradient accumulation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+    compression_error: Optional[Any] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: Callable[[jax.Array], jax.Array] | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compression: bool = False
+    # Memory knobs for ≥20B-param configs (production Adafactor-style):
+    # factored second moment stores row/col means instead of the full v
+    # (O(r+c) vs O(r·c)); bf16 momentum halves mu.
+    factored_second_moment: bool = False
+    momentum_dtype: str = "float32"
+    # Accumulate µbatch grads in bf16 (halves the gradient buffer; the
+    # optimizer update still runs in f32).
+    accum_dtype: str = "float32"
+    # Apply the update layer-slice by layer-slice (lax.map over the
+    # stacked leading axis) so f32 elementwise temporaries are O(1/L).
+    chunked_update: bool = False
+
+
+def _is_factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def _init_nu(p, cfg: AdamWConfig):
+    if cfg.factored_second_moment and _is_factorable(p):
+        return {
+            "row": jnp.zeros(p.shape[:-1], jnp.float32),
+            "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+    return jnp.zeros(p.shape, jnp.float32)
+
+
+def init(params: Any, cfg: AdamWConfig) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    mu_dtype = jnp.dtype(cfg.momentum_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, mu_dtype), params),
+        nu=jax.tree.map(
+            lambda p: _init_nu(p, cfg), params,
+        ),
+        compression_error=(
+            jax.tree.map(zeros, params) if cfg.grad_compression else None
+        ),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(
+    grads: Any, state: AdamWState, params: Any, cfg: AdamWConfig
+) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gnorm = global_norm(grads)
+
+    step = state.step + 1
+    if callable(cfg.learning_rate):
+        lr = cfg.learning_rate(step)
+    else:
+        lr = jnp.asarray(cfg.learning_rate, jnp.float32)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mu_dtype = jnp.dtype(cfg.momentum_dtype)
+
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(
+            mu_dtype
+        ),
+        state.mu, grads,
+    )
+
+    def upd_nu(v, g, p):
+        if cfg.factored_second_moment and _is_factorable(p):
+            g2 = jnp.square(g)
+            return {
+                "row": b2 * v["row"] + (1 - b2) * jnp.mean(g2, axis=-1),
+                "col": b2 * v["col"] + (1 - b2) * jnp.mean(g2, axis=-2),
+            }
+        return b2 * v + (1 - b2) * jnp.square(g)
+
+    nu = jax.tree.map(
+        upd_nu, state.nu, grads, params,
+        is_leaf=lambda x: isinstance(x, dict) and "row" in x,
+    )
+
+    def v_hat_of(v, p):
+        if cfg.factored_second_moment and _is_factorable(p):
+            row = v["row"] / bc2          # [..., r]
+            col = v["col"] / bc2          # [..., c]
+            row_mean = jnp.mean(row, axis=-1, keepdims=True)
+            return (row / jnp.maximum(row_mean, 1e-30))[..., None] * col[
+                ..., None, :
+            ]
+        return v / bc2
+
+    def upd_slice(p, m, v):
+        m_hat = m.astype(jnp.float32) / bc1
+        v_hat = v_hat_of(v, p)
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if cfg.weight_decay > 0 and p.ndim >= 2:  # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    def upd(p, m, v):
+        if cfg.chunked_update and p.ndim >= 3 and p.shape[0] >= 8:
+            # slice-wise over the stacked layer axis: f32 temporaries
+            # shrink from O(L·weights) to O(weights).
+            def one(args):
+                return upd_slice(*args)
+
+            return jax.lax.map(one, (p, m, v))
+        return upd_slice(p, m, v)
+
+    new_params = jax.tree.map(
+        upd, params, mu, nu,
+        is_leaf=lambda x: isinstance(x, dict) and "row" in x,
+    )
+    new_state = AdamWState(
+        step=step, mu=mu, nu=nu,
+        compression_error=state.compression_error,
+    )
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def warmup_cosine(
+    peak_lr: float, warmup_steps: int, total_steps: int,
+    final_frac: float = 0.1,
+) -> Callable[[jax.Array], jax.Array]:
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup_steps, 1)
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0, 1
+        )
+        cos = peak_lr * (
+            final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        )
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def accumulate_gradients(
+    loss_fn: Callable, params: Any, batch: Dict[str, jax.Array],
+    num_microbatches: int, accum_dtype: str = "float32",
+) -> Tuple[jax.Array, Any, Dict[str, jax.Array]]:
+    """µbatch gradient accumulation via lax.scan (memory ∝ 1/µbatches).
+
+    ``batch`` leading dim must divide by num_microbatches; loss_fn is
+    ``(params, microbatch) -> (loss, metrics)``. ``accum_dtype=bfloat16``
+    halves the accumulator for ≥20B configs.
+    """
+    from repro.distributed import sharding as shd
+
+    acc_dt = jnp.dtype(accum_dtype)
+    if num_microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, shd.constrain_like_params(grads), metrics
+
+    def reshape(x):
+        return x.reshape(
+            (num_microbatches, x.shape[0] // num_microbatches) + x.shape[1:]
+        )
+
+    micro = jax.tree.map(reshape, batch)
+
+    def body(carry, mb):
+        acc_grads, acc_loss = carry
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        # per-µbatch grads land directly in the params' (FSDP/TP) layout:
+        # the DP sync lowers to a reduce-scatter, not an all-reduce.
+        grads = shd.constrain_like_params(grads)
+        acc_grads = jax.tree.map(
+            lambda a, g: (a.astype(jnp.float32) + g).astype(acc_dt),
+            acc_grads, grads,
+        )
+        return (acc_grads, acc_loss + loss), metrics
+
+    zero_grads = shd.constrain_like_params(jax.tree.map(
+        lambda p: jnp.zeros(p.shape, acc_dt), params
+    ))
+    (grads, loss_sum), metrics = jax.lax.scan(
+        body, (zero_grads, jnp.zeros((), jnp.float32)), micro
+    )
+    scale = 1.0 / num_microbatches
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    last_metrics = jax.tree.map(lambda m: m[-1], metrics)
+    return loss_sum * scale, grads, last_metrics

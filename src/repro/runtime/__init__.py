@@ -1,0 +1,9 @@
+"""Runtime: training loop, serving loop, fault tolerance."""
+
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    PreemptionHandler,
+    StragglerMonitor,
+    retry_step,
+)
+from repro.runtime.serve_loop import Request, ServeLoop, make_serve_step  # noqa: F401
+from repro.runtime.train_loop import TrainConfig, TrainLoop, make_train_step  # noqa: F401

@@ -1,0 +1,115 @@
+"""Fault tolerance: step retry, straggler detection, preemption handling.
+
+What a JAX SPMD job can and cannot do about failures:
+  * transient host/IO errors → bounded retry with exponential backoff
+    around the step call (`retry_step`);
+  * node loss / preemption → the coordinator re-launches and the job
+    auto-resumes from the newest valid checkpoint (see
+    `repro.checkpoint`); SIGTERM triggers an immediate synchronous save
+    (`PreemptionHandler`);
+  * stragglers → inside one XLA program all chips are lockstepped, so
+    mitigation happens at the *host* level: `StragglerMonitor` tracks a
+    robust step-time estimate and flags outliers so the launcher can
+    trigger re-scheduling / hot-spare swap; the data pipeline's prefetch
+    absorbs input-side jitter.
+"""
+
+from __future__ import annotations
+
+import signal
+import time
+from typing import Callable, List, Optional
+
+
+class StepFailure(Exception):
+    pass
+
+
+def retry_step(
+    fn: Callable,
+    *args,
+    max_retries: int = 3,
+    base_delay: float = 0.5,
+    retriable=(RuntimeError, OSError),
+    on_retry: Optional[Callable[[int, Exception], None]] = None,
+):
+    """Run ``fn(*args)`` with bounded exponential-backoff retries."""
+    for attempt in range(max_retries + 1):
+        try:
+            return fn(*args)
+        except retriable as exc:  # noqa: PERF203
+            if attempt == max_retries:
+                raise StepFailure(
+                    f"step failed after {max_retries} retries: {exc}"
+                ) from exc
+            if on_retry:
+                on_retry(attempt, exc)
+            time.sleep(base_delay * (2 ** attempt))
+
+
+class StragglerMonitor:
+    """Robust (median/MAD) step-time outlier detection."""
+
+    def __init__(self, window: int = 50, threshold: float = 3.0):
+        self.window = window
+        self.threshold = threshold
+        self.times: List[float] = []
+        self.flagged: List[int] = []
+        self._step = 0
+
+    def record(self, seconds: float) -> bool:
+        """Record one step time; returns True if it is a straggler."""
+        self._step += 1
+        self.times.append(seconds)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        if len(self.times) < 10:
+            return False
+        sorted_t = sorted(self.times)
+        median = sorted_t[len(sorted_t) // 2]
+        mad = sorted(abs(t - median) for t in sorted_t)[len(sorted_t) // 2]
+        limit = median + self.threshold * max(mad, 0.05 * median, 1e-4)
+        is_straggler = seconds > limit
+        if is_straggler:
+            self.flagged.append(self._step)
+        return is_straggler
+
+    @property
+    def median_step_time(self) -> float:
+        if not self.times:
+            return 0.0
+        return sorted(self.times)[len(self.times) // 2]
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT → graceful save-and-exit flag.
+
+    The train loop checks ``should_stop`` each step and performs a final
+    synchronous checkpoint before exiting, so preempted workers lose at
+    most one step of progress.
+    """
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._stop = False
+        self._installed = False
+        self._signals = signals
+
+    def install(self):
+        if self._installed:
+            return
+        for sig in self._signals:
+            try:
+                signal.signal(sig, self._handler)
+            except ValueError:
+                pass  # not main thread (tests)
+        self._installed = True
+
+    def _handler(self, signum, frame):
+        self._stop = True
+
+    def request_stop(self):
+        self._stop = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._stop

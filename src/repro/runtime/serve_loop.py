@@ -1,0 +1,168 @@
+"""Serving runtime: batched KV-cache decoding with Energon MP-MRF.
+
+`make_serve_step` builds the jitted one-token decode step — this is the
+function the decode_* dry-run shapes lower. `ServeLoop` provides a
+minimal continuous-batching server: requests join fixed slots, finished
+sequences free their slot, every engine tick advances all live slots by
+one token (the paper's l=1 pipeline, §IV-D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+from repro.models import LMModel
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    tokens_out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    _next_input: int = 0
+
+
+def make_serve_step(
+    model: LMModel,
+    mesh: Optional[Mesh] = None,
+    max_len: int = 0,
+    batch: int = 0,
+):
+    """Jitted ``(params, cache, inputs, cache_index) -> (logits, cache)``."""
+
+    def step(params, cache, inputs, cache_index):
+        return model.decode_step(params, cache, inputs, cache_index)
+
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(1,))
+
+    assert max_len > 0 and batch > 0, "mesh-sharded serve needs shapes"
+    params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = shd.param_shardings(params_shapes, mesh)
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(batch=batch, max_len=max_len)
+    )
+    c_shard = shd.cache_shardings(cache_shapes, mesh)
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, c_shard, None, None),
+        out_shardings=(None, c_shard),
+        donate_argnums=(1,),
+    )
+
+
+def sample_token(logits: jax.Array, temperature: float, key) -> jax.Array:
+    """logits ``[B, 1, V]`` → ``[B]`` next tokens."""
+    logits = logits[:, -1, :]
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+class ServeLoop:
+    """Continuous-batching decode engine over fixed batch slots."""
+
+    def __init__(
+        self,
+        model: LMModel,
+        params,
+        *,
+        batch_slots: int = 8,
+        max_len: int = 512,
+        eos_token: int = 0,
+        rng: Optional[jax.Array] = None,
+    ):
+        self.model = model
+        self.params = params
+        self.batch_slots = batch_slots
+        self.max_len = max_len
+        self.eos = eos_token
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.cache = model.init_cache(batch_slots, max_len)
+        self.cache_index = jnp.zeros((batch_slots,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pending: List[Request] = []
+        self.completed: List[Request] = []
+        self.ticks = 0
+
+    # --- API -----------------------------------------------------------
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for i in range(self.batch_slots):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slots[i] = req
+                # Prefill: feed prompt tokens one by one through the same
+                # decode step (functionally exact; a production server
+                # would use the chunked-prefill path of `model.apply`).
+                self.cache_index = self.cache_index.at[i].set(0)
+                for tok in req.prompt[:-1]:
+                    self._advance_slot(i, tok)
+                req._next_input = req.prompt[-1] if req.prompt else self.eos
+
+    def _advance_slot(self, slot: int, token: int):
+        tokens = jnp.zeros((self.batch_slots, 1), jnp.int32)
+        tokens = tokens.at[slot, 0].set(token)
+        logits, self.cache = self.step_fn(
+            self.params, self.cache, {"tokens": tokens}, self.cache_index
+        )
+        self.cache_index = self.cache_index.at[slot].add(1)
+        return logits
+
+    def tick(self):
+        """One engine iteration: admit, decode one token for all slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if not live:
+            return
+        tokens = jnp.array(
+            [[self.slots[i]._next_input if self.slots[i] else self.eos]
+             for i in range(self.batch_slots)],
+            jnp.int32,
+        )
+        logits, self.cache = self.step_fn(
+            self.params, self.cache, {"tokens": tokens}, self.cache_index
+        )
+        self.cache_index = self.cache_index + jnp.array(
+            [1 if self.slots[i] else 0 for i in range(self.batch_slots)],
+            jnp.int32,
+        )
+        self.rng, key = jax.random.split(self.rng)
+        temps = [self.slots[i].temperature if self.slots[i] else 0.0
+                 for i in range(self.batch_slots)]
+        next_tokens = jax.device_get(
+            sample_token(logits, max(temps), key)
+        )
+        for i in live:
+            req = self.slots[i]
+            tok = int(next_tokens[i])
+            req.tokens_out.append(tok)
+            req._next_input = tok
+            limit = min(
+                req.max_new_tokens,
+                self.max_len - len(req.prompt) - 1,
+            )
+            if tok == self.eos or len(req.tokens_out) >= limit:
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None
+                self.cache_index = self.cache_index.at[i].set(0)
+        self.ticks += 1
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        while (self.pending or any(self.slots)) and self.ticks < max_ticks:
+            self.tick()
+        return self.completed

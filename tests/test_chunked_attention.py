@@ -1,0 +1,99 @@
+"""Chunked (scan-over-query-blocks) paths must equal the direct ones."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import EnergonConfig, chunked_attention as chk, energon_attention
+from repro.core import filtering as flt
+from repro.core import sparse_attention as spa
+
+
+def _mk(shape, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), jnp.float32
+    )
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    return tuple(_mk((1, 2, 512, 32), s) for s in (0, 1, 2))
+
+
+class TestChunkedDense:
+    def test_equals_dense_causal(self, qkv):
+        q, k, v = qkv
+        valid = jnp.broadcast_to(
+            flt.causal_valid_mask(512, 512), (1, 2, 512, 512)
+        )
+        ref = spa.dense_attention(q, k, v, valid)
+        for chunk in (64, 128, 512):
+            out = chk.dense_attention_chunked(q, k, v, causal=True,
+                                              chunk=chunk)
+            np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_window(self, qkv):
+        q, k, v = qkv
+        valid = jnp.broadcast_to(
+            flt.sliding_window_valid_mask(512, 512, 128), (1, 2, 512, 512)
+        )
+        ref = spa.dense_attention(q, k, v, valid)
+        out = chk.dense_attention_chunked(
+            q, k, v, causal=True, window=jnp.int32(128), chunk=64
+        )
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_kv_length(self, qkv):
+        q, k, v = qkv
+        kv_len = jnp.asarray([300])
+        in_range = (jnp.arange(512)[None, :] < kv_len[:, None])[:, None, None]
+        valid = jnp.broadcast_to(
+            jnp.logical_and(flt.causal_valid_mask(512, 512), in_range),
+            (1, 2, 512, 512),
+        )
+        ref = spa.dense_attention(q, k, v, valid)
+        out = chk.dense_attention_chunked(
+            q, k, v, causal=True, kv_length=kv_len, chunk=128
+        )
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+class TestChunkedBlockPipeline:
+    def test_scores_match_direct(self, qkv):
+        q, k, _ = qkv
+        valid = jnp.broadcast_to(
+            flt.causal_valid_mask(512, 512), (1, 2, 512, 512)
+        )
+        cfg = flt.MPMRFConfig(granularity="block", query_block=128,
+                              key_block=128, block_budget=2)
+        direct = flt.mpmrf_block_select(q, k, cfg, valid)
+        s0, s1, bval = chk.mpmrf_block_scores_chunked(
+            q, k, (2, 4), query_block=128, key_block=128, causal=True
+        )
+        np.testing.assert_allclose(
+            jnp.where(bval, s1, 0.0),
+            jnp.where(bval, direct.scores, 0.0), rtol=1e-6,
+        )
+
+    def test_full_pipeline_matches_direct_block_impl(self, qkv):
+        q, k, v = qkv
+        e = EnergonConfig(impl="mpmrf_block", pruning_ratio=2.0)
+        direct = energon_attention(q, k, v, e, causal=True)
+        chunked = chk.energon_block_attention_chunked(
+            q, k, v, pruning_ratio=2.0, causal=True
+        )
+        np.testing.assert_allclose(chunked, direct, atol=1e-5)
+
+    def test_auto_switch_at_threshold(self, qkv):
+        q, k, v = qkv
+        small_thresh = EnergonConfig(
+            impl="mpmrf_block", pruning_ratio=2.0,
+            chunk_threshold=128 * 128,
+        )
+        big_thresh = EnergonConfig(
+            impl="mpmrf_block", pruning_ratio=2.0,
+            chunk_threshold=10**9,
+        )
+        a = energon_attention(q, k, v, small_thresh, causal=True)
+        b = energon_attention(q, k, v, big_thresh, causal=True)
+        np.testing.assert_allclose(a, b, atol=1e-5)

@@ -1,0 +1,156 @@
+"""MP-MRF filtering tests: Eq. 3 thresholds, Alg. 2 rounds, block pooling."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filtering as flt
+
+
+def _qkv(n=256, d=32, bh=(2, 2), seed=0):
+    rng = np.random.default_rng(seed)
+    mk = lambda s: jnp.asarray(rng.normal(size=(*bh, n, d)), jnp.float32)
+    return mk(1), mk(2)
+
+
+class TestEq3Threshold:
+    def test_alpha_zero_is_mean(self):
+        s = jnp.asarray([[1.0, 2.0, 3.0, 6.0]])
+        valid = jnp.ones_like(s, bool)
+        theta = flt.eq3_threshold(s, 0.0, valid)
+        assert jnp.allclose(theta, 3.0)
+
+    def test_positive_alpha_interpolates_to_max(self):
+        s = jnp.asarray([[1.0, 2.0, 3.0, 6.0]])
+        valid = jnp.ones_like(s, bool)
+        for a in (0.1, 0.5, 0.9):
+            theta = float(flt.eq3_threshold(s, a, valid)[0, 0])
+            assert 3.0 < theta < 6.0
+        assert float(flt.eq3_threshold(s, 0.9, valid)[0, 0]) > float(
+            flt.eq3_threshold(s, 0.1, valid)[0, 0]
+        )
+
+    def test_negative_alpha_interpolates_to_min(self):
+        s = jnp.asarray([[1.0, 2.0, 3.0, 6.0]])
+        valid = jnp.ones_like(s, bool)
+        for a in (-0.1, -0.5, -0.9):
+            theta = float(flt.eq3_threshold(s, a, valid)[0, 0])
+            assert 1.0 < theta < 3.0
+
+    def test_pruned_entries_ignored(self):
+        s = jnp.asarray([[1.0, 2.0, 3.0, 1000.0]])
+        valid = jnp.asarray([[True, True, True, False]])
+        theta = float(flt.eq3_threshold(s, 0.0, valid)[0, 0])
+        assert jnp.isclose(theta, 2.0)
+
+
+class TestRowSelect:
+    def test_mean_filtering_prunes_about_half_per_round(self):
+        q, k = _qkv()
+        res = flt.mpmrf_row_select(q, k, flt.MPMRFConfig())
+        fracs = res.survivor_fraction.reshape(2, -1).mean(axis=1)
+        assert 0.35 < float(fracs[0]) < 0.65          # round 0 ~50%
+        assert 0.1 < float(fracs[1]) < 0.4            # round 1 ~25%
+
+    def test_mask_subset_of_valid(self):
+        q, k = _qkv(n=64)
+        valid = jnp.broadcast_to(
+            flt.causal_valid_mask(64, 64), (2, 2, 64, 64)
+        )
+        res = flt.mpmrf_row_select(q, k, flt.MPMRFConfig(), valid)
+        assert not bool(jnp.any(jnp.logical_and(res.keep_mask, ~valid)))
+
+    def test_nonempty_rows(self):
+        q, k = _qkv(n=64)
+        valid = jnp.broadcast_to(
+            flt.causal_valid_mask(64, 64), (2, 2, 64, 64)
+        )
+        res = flt.mpmrf_row_select(q, k, flt.MPMRFConfig(), valid)
+        assert bool(jnp.all(jnp.sum(res.keep_mask, -1) >= 1))
+
+    def test_alpha_controls_pruning_ratio(self):
+        q, k = _qkv()
+        kept = []
+        for a in (-0.15, 0.0, 0.15):
+            cfg = flt.MPMRFConfig(alphas=(a, a))
+            res = flt.mpmrf_row_select(q, k, cfg)
+            kept.append(float(res.keep_mask.mean()))
+        assert kept[0] > kept[1] > kept[2]  # higher α ⇒ more pruning
+
+    def test_reuse_equals_independent_rescore(self):
+        # With per-row Q scales and per-head K scales, the shift-add
+        # reused scores must produce the same final selection as
+        # independently re-computed rounds.
+        q, k = _qkv(n=128, seed=3)
+        a = flt.mpmrf_row_select(q, k, flt.MPMRFConfig(reuse_partial=True))
+        b = flt.mpmrf_row_select(q, k, flt.MPMRFConfig(reuse_partial=False))
+        agree = jnp.mean((a.keep_mask == b.keep_mask).astype(jnp.float32))
+        assert float(agree) > 0.95  # differs only via Q-plane width
+
+
+class TestBlockSelect:
+    def test_block_budget_shapes(self):
+        q, k = _qkv(n=256)
+        cfg = flt.MPMRFConfig(
+            granularity="block", query_block=64, key_block=64, block_budget=2
+        )
+        res = flt.mpmrf_block_select(q, k, cfg)
+        assert res.block_indices.shape == (2, 2, 4, 2)
+        assert res.block_valid.shape == (2, 2, 4, 2)
+        assert bool(jnp.all(res.block_indices < 4))
+        assert bool(jnp.all(res.block_indices >= 0))
+
+    def test_diagonal_always_kept_causal(self):
+        q, k = _qkv(n=256, seed=5)
+        valid = jnp.broadcast_to(
+            flt.causal_valid_mask(256, 256), (2, 2, 256, 256)
+        )
+        cfg = flt.MPMRFConfig(
+            granularity="block", query_block=64, key_block=64,
+            block_budget=4, keep_diagonal=True,
+        )
+        res = flt.mpmrf_block_select(q, k, cfg, valid)
+        for i in range(4):
+            # diagonal block id == i must appear among survivors of row i
+            assert bool(
+                jnp.all(jnp.any(res.block_indices[:, :, i, :] == i, axis=-1))
+            )
+
+    def test_pool_block_scores_max_semantics(self):
+        s = jnp.zeros((1, 1, 4, 4)).at[0, 0, 1, 2].set(99.0)
+        valid = jnp.ones_like(s, bool)
+        blk, bv = flt.pool_block_scores(s, 2, 2, valid)
+        assert float(blk[0, 0, 0, 1]) == 99.0
+        assert bool(jnp.all(bv))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    alpha=st.floats(-0.9, 0.9),
+)
+def test_property_threshold_bounds(seed, alpha):
+    """θ always lies within [min, max] of the valid scores."""
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(size=(3, 17)), jnp.float32)
+    valid = jnp.asarray(rng.random((3, 17)) > 0.3)
+    valid = valid.at[:, 0].set(True)
+    theta = flt.eq3_threshold(s, float(alpha), valid)
+    smax = jnp.max(jnp.where(valid, s, -jnp.inf), -1, keepdims=True)
+    smin = jnp.min(jnp.where(valid, s, jnp.inf), -1, keepdims=True)
+    assert bool(jnp.all(theta <= smax + 1e-5))
+    assert bool(jnp.all(theta >= smin - 1e-5))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_rounds_shrink_selection(seed):
+    """Each filtering round can only shrink the survivor set."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16)), jnp.float32)
+    res = flt.mpmrf_row_select(q, k, flt.MPMRFConfig(keep_first=False))
+    f = res.survivor_fraction
+    assert bool(jnp.all(f[0] >= f[1]))

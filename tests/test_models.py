@@ -1,0 +1,217 @@
+"""Model-level invariants: prefill↔decode consistency, SSM equivalences,
+MoE routing, causality."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+from repro.models import LMModel
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+def _dense_cfg(**kw):
+    base = dict(
+        name="t", family="dense", num_layers=3, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+        dtype="float32", remat="none",
+        energon=EnergonConfig(impl="dense", min_prune_layer=0),
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+class TestPrefillDecodeConsistency:
+    """apply() on a full sequence must agree with token-by-token
+    decode_step — the strongest end-to-end correctness test for the
+    cache machinery, RoPE offsets and recurrent states."""
+
+    @pytest.mark.parametrize("family_kw", [
+        dict(),
+        dict(use_qk_norm=True, num_kv_heads=4),
+        dict(family="moe", num_experts=8, experts_per_token=2, d_ff=32,
+             capacity_factor=16.0),
+        dict(family="ssm", xlstm_group=(2, 1), num_layers=3,
+             num_kv_heads=4, d_ff=0),
+        dict(family="hybrid", hybrid_attn_every=3, num_layers=4,
+             num_kv_heads=4, ssm_state=16, ssm_head_dim=16),
+    ])
+    def test_logits_match(self, family_kw):
+        cfg = _dense_cfg(**family_kw)
+        model = LMModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        n = 16
+        tokens = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (1, n)),
+            jnp.int32,
+        )
+        full_logits, _ = model.apply(
+            params, {"inputs": tokens, "targets": tokens}
+        )
+        cache = model.init_cache(batch=1, max_len=n)
+        ci = jnp.zeros((1,), jnp.int32)
+        dec = []
+        for t in range(n):
+            logits, cache = model.decode_step(
+                params, cache, {"tokens": tokens[:, t:t + 1]}, ci
+            )
+            dec.append(logits)
+            ci = ci + 1
+        dec_logits = jnp.concatenate(dec, axis=1)
+        cap = 1e-3 if family_kw.get("family") != "moe" else 2e-2
+        np.testing.assert_allclose(
+            np.asarray(dec_logits), np.asarray(full_logits), atol=cap,
+            rtol=1e-2,
+        )
+
+
+class TestCausality:
+    def test_future_tokens_do_not_affect_logits(self):
+        cfg = _dense_cfg()
+        model = LMModel(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        rng = np.random.default_rng(1)
+        t1 = jnp.asarray(rng.integers(0, 128, (1, 16)), jnp.int32)
+        t2 = t1.at[0, 10:].set(
+            jnp.asarray(rng.integers(0, 128, (6,)), jnp.int32)
+        )
+        l1, _ = model.apply(params, {"inputs": t1, "targets": t1})
+        l2, _ = model.apply(params, {"inputs": t2, "targets": t2})
+        np.testing.assert_allclose(
+            np.asarray(l1[:, :10]), np.asarray(l2[:, :10]), atol=1e-5
+        )
+
+    def test_mpmrf_respects_causality(self):
+        """MP-MRF never *attends* to future positions (mask-level
+        causality — covered structurally in test_filtering). Note the
+        paper's algorithm quantizes the produced K tensor with per-head
+        scales, so in batched prefill a future token can shift the
+        shared quantization scale and hence perturb past selections
+        slightly — the same behaviour as the paper's inference setting.
+        We assert the perturbation stays at quantization-noise scale
+        (decode with a causal cache is exactly causal: see
+        TestPrefillDecodeConsistency)."""
+        cfg = _dense_cfg(
+            num_layers=2, d_model=64,
+            energon=EnergonConfig(impl="mpmrf_row", min_prune_layer=0),
+        )
+        model = LMModel(cfg)
+        params = model.init(jax.random.PRNGKey(1))
+        rng = np.random.default_rng(2)
+        t1 = jnp.asarray(rng.integers(0, 128, (1, 16)), jnp.int32)
+        t2 = t1.at[0, 12:].set(
+            jnp.asarray(rng.integers(0, 128, (4,)), jnp.int32)
+        )
+        l1, _ = model.apply(params, {"inputs": t1, "targets": t1})
+        l2, _ = model.apply(params, {"inputs": t2, "targets": t2})
+        drift = float(jnp.max(jnp.abs(l1[:, :12] - l2[:, :12])))
+        scale = float(jnp.max(jnp.abs(l1[:, :12])))
+        assert drift < 0.05 * max(scale, 1.0), (drift, scale)
+
+
+class TestSSMEquivalence:
+    def test_mlstm_parallel_vs_recurrent(self):
+        p = ssm_lib.init_mlstm(jax.random.PRNGKey(0), 32, 2)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 32)) * 0.5
+        y_par = ssm_lib.mlstm_seq(p, x, 2)
+        st = ssm_lib.mlstm_init_state(2, 32, 2, jnp.float32)
+        ys = []
+        for t in range(24):
+            y, st = ssm_lib.mlstm_step(p, x[:, t:t + 1], st, 2)
+            ys.append(y)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_par), atol=1e-4
+        )
+
+    def test_mamba2_chunked_vs_recurrent(self):
+        p = ssm_lib.init_mamba2(jax.random.PRNGKey(0), 32, 8, head_dim=16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 32)) * 0.5
+        y_par = ssm_lib.mamba2_seq(p, x, 8, head_dim=16, chunk=8)
+        st = ssm_lib.mamba2_init_state(2, 32, 8, head_dim=16)
+        ys = []
+        for t in range(32):
+            y, st = ssm_lib.mamba2_step(p, x[:, t:t + 1], st, 8, head_dim=16)
+            ys.append(y)
+        np.testing.assert_allclose(
+            np.asarray(jnp.concatenate(ys, 1)), np.asarray(y_par), atol=1e-4
+        )
+
+    def test_mamba2_chunk_size_invariance(self):
+        p = ssm_lib.init_mamba2(jax.random.PRNGKey(0), 32, 8, head_dim=16)
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 32))
+        ys = [
+            ssm_lib.mamba2_seq(p, x, 8, head_dim=16, chunk=c)
+            for c in (8, 16, 32, 64)
+        ]
+        for y in ys[1:]:
+            np.testing.assert_allclose(
+                np.asarray(y), np.asarray(ys[0]), atol=1e-4
+            )
+
+
+class TestMoE:
+    def test_combine_weights_normalized(self):
+        cfg = moe_lib.MoEConfig(num_experts=8, experts_per_token=2,
+                                d_model=16, d_ff=8, capacity_factor=8.0)
+        p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+        out, metrics = moe_lib.apply_moe(p, x, cfg)
+        assert out.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert float(metrics["moe_drop_fraction"]) == 0.0  # huge capacity
+
+    def test_capacity_drops_tokens(self):
+        cfg = moe_lib.MoEConfig(num_experts=4, experts_per_token=2,
+                                d_model=16, d_ff=8, capacity_factor=0.25)
+        p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+        _, metrics = moe_lib.apply_moe(p, x, cfg)
+        assert float(metrics["moe_drop_fraction"]) > 0.0
+
+    def test_expert_permutation_equivariance(self):
+        """Permuting experts together with router columns must not
+        change the output (routing invariant)."""
+        cfg = moe_lib.MoEConfig(num_experts=4, experts_per_token=2,
+                                d_model=16, d_ff=8, capacity_factor=8.0)
+        p = moe_lib.init_moe(jax.random.PRNGKey(3), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (1, 8, 16))
+        out1, _ = moe_lib.apply_moe(p, x, cfg)
+        perm = jnp.asarray([2, 0, 3, 1])
+        p2 = dict(p)
+        p2["router"] = p["router"][:, perm]
+        for k in ("w_up", "w_gate", "w_down"):
+            p2[k] = p[k][perm]
+        out2, _ = moe_lib.apply_moe(p2, x, cfg)
+        np.testing.assert_allclose(
+            np.asarray(out1), np.asarray(out2), atol=1e-5
+        )
+
+
+class TestGemmaPattern:
+    def test_layer_windows(self):
+        cfg = _dense_cfg(num_layers=6, sliding_window=8, global_every=3)
+        model = LMModel(cfg)
+        w = model.layer_windows()
+        assert list(np.asarray(w)) == [8, 8, 0, 8, 8, 0]
+
+    def test_local_layers_cannot_see_past_window(self):
+        cfg = _dense_cfg(num_layers=1, sliding_window=4, global_every=2,
+                         num_kv_heads=4)
+        model = LMModel(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        rng = np.random.default_rng(3)
+        t1 = jnp.asarray(rng.integers(0, 128, (1, 16)), jnp.int32)
+        # with window=4, position 15 cannot see positions < 12:
+        t2 = t1.at[0, 0:8].set(
+            jnp.asarray(rng.integers(0, 128, (8,)), jnp.int32)
+        )
+        l1, _ = model.apply(params, {"inputs": t1, "targets": t1})
+        l2, _ = model.apply(params, {"inputs": t2, "targets": t2})
+        np.testing.assert_allclose(
+            np.asarray(l1[:, 15]), np.asarray(l2[:, 15]), atol=1e-5
+        )

@@ -1,0 +1,112 @@
+"""Quantization unit + property tests (bit-plane algebra is the heart of
+MP-MRF result reuse — Fig. 7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qlib
+
+
+def _rand(shape, seed=0, scale=1.0):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape) * scale, jnp.float32
+    )
+
+
+class TestBitPlanes:
+    def test_plane_shift_add_identity(self):
+        qt = qlib.quantize_int16(_rand((4, 64)))
+        for lo, hi in [(1, 2), (2, 4), (4, 8), (2, 8), (8, 16)]:
+            rem = qt.lsb_remainder(lo, hi)
+            assert jnp.all(
+                qt.bit_plane(hi)
+                == jnp.left_shift(qt.bit_plane(lo), hi - lo) + rem
+            )
+            assert jnp.all(rem >= 0)
+            assert jnp.all(rem < 2 ** (hi - lo))
+
+    def test_plane_range(self):
+        qt = qlib.quantize_int16(_rand((8, 32), scale=10))
+        for bits in (1, 2, 4, 8):
+            p = qt.bit_plane(bits)
+            assert jnp.all(p >= -(2 ** (bits - 1)))
+            assert jnp.all(p < 2 ** (bits - 1))
+
+    def test_full_width_roundtrip(self):
+        x = _rand((16, 64), scale=3.0)
+        qt = qlib.quantize_int16(x)
+        err = jnp.max(jnp.abs(qt.dequantize() - x))
+        assert err < 3.0 * jnp.max(jnp.abs(x)) / qlib.INT16_LEVELS
+
+    def test_bad_bits_raise(self):
+        qt = qlib.quantize_int16(_rand((2, 4)))
+        with pytest.raises(ValueError):
+            qt.bit_plane(0)
+        with pytest.raises(ValueError):
+            qt.lsb_remainder(4, 4)
+
+
+class TestScores:
+    def test_low_bit_scores_converge_to_exact(self):
+        q = _rand((2, 32, 32), 1)
+        k = _rand((2, 48, 32), 2)
+        exact = jnp.einsum("bqd,bkd->bqk", q, k)
+        qq = qlib.quantize_int16(q, axis=-1)
+        kk = qlib.quantize_int16(k, axis=(-2, -1))
+        errs, corrs = [], []
+        for bits in (2, 4, 8, 16):
+            approx = qlib.low_bit_scores(qq, kk, bits)
+            errs.append(float(jnp.mean(jnp.abs(approx - exact))))
+            corrs.append(float(jnp.corrcoef(
+                approx.ravel(), exact.ravel())[0, 1]))
+        # monotone error decrease with more bits, near-exact at 16
+        assert errs[0] > errs[1] > errs[2] > errs[3]
+        assert errs[-1] < 1e-2
+        assert corrs[0] > 0.5 and corrs[-1] > 0.999
+
+    def test_fake_quantize_matches_plane_arith(self):
+        x = _rand((4, 32), 3)
+        for bits in (2, 4, 8):
+            fq = qlib.fake_quantize(x, bits)
+            qt = qlib.quantize_int16(x)
+            manual = qt.bit_plane(bits).astype(jnp.float32) * qt.plane_scale(bits)
+            assert jnp.allclose(fq, manual)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    rows=st.integers(1, 8),
+    cols=st.integers(1, 64),
+    lo=st.integers(1, 7),
+    delta=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+    scale=st.floats(1e-3, 1e3),
+)
+def test_property_shift_add_identity(rows, cols, lo, delta, seed, scale):
+    """∀ shapes/bit-splits: plane(hi) == (plane(lo) << Δ) + rem(lo, hi)."""
+    hi = min(lo + delta, 16)
+    x = _rand((rows, cols), seed, scale)
+    qt = qlib.quantize_int16(x)
+    assert jnp.all(
+        qt.bit_plane(hi)
+        == jnp.left_shift(qt.bit_plane(lo), hi - lo)
+        + qt.lsb_remainder(lo, hi)
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), bits=st.sampled_from([2, 4, 8]))
+def test_property_selection_scale_invariance(seed, bits):
+    """Per-head positive rescaling of K must not change which key wins
+    (the Eq. 3 threshold depends on it)."""
+    q = _rand((1, 4, 16), seed)
+    k = _rand((1, 32, 16), seed + 1)
+    qq = qlib.quantize_int16(q, axis=-1)
+    s1 = qlib.low_bit_scores(qq, qlib.quantize_int16(k, axis=(-2, -1)), bits)
+    s2 = qlib.low_bit_scores(
+        qq, qlib.quantize_int16(k * 7.3, axis=(-2, -1)), bits
+    )
+    assert jnp.all(jnp.argmax(s1, -1) == jnp.argmax(s2, -1))

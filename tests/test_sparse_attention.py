@@ -1,0 +1,97 @@
+"""Attention-unit tests: masked/block/decode variants + flash merge."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import filtering as flt
+from repro.core import sparse_attention as spa
+
+
+def _mk(shape, seed):
+    return jnp.asarray(
+        np.random.default_rng(seed).normal(size=shape), jnp.float32
+    )
+
+
+class TestMaskedSparse:
+    def test_full_mask_equals_dense(self):
+        q, k, v = (_mk((2, 2, 32, 16), s) for s in (1, 2, 3))
+        full = jnp.ones((2, 2, 32, 32), bool)
+        a = spa.masked_sparse_attention(q, k, v, full)
+        b = spa.dense_attention(q, k, v, None)
+        assert jnp.allclose(a, b, atol=1e-5)
+
+    def test_masked_rows_zero_prob_outside(self):
+        q, k, v = (_mk((1, 1, 4, 8), s) for s in (1, 2, 3))
+        keep = jnp.zeros((1, 1, 4, 4), bool).at[..., 0].set(True)
+        out = spa.masked_sparse_attention(q, k, v, keep)
+        # with only key 0 kept, output == v[0]
+        assert jnp.allclose(out, jnp.broadcast_to(v[:, :, 0:1], out.shape),
+                            atol=1e-5)
+
+    def test_fully_masked_row_is_zero_not_nan(self):
+        q, k, v = (_mk((1, 1, 4, 8), s) for s in (1, 2, 3))
+        keep = jnp.zeros((1, 1, 4, 4), bool)
+        out = spa.masked_sparse_attention(q, k, v, keep)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        assert bool(jnp.all(out == 0))
+
+
+class TestBlockGather:
+    def test_all_blocks_selected_equals_dense_causal(self):
+        n, bq = 128, 32
+        q, k, v = (_mk((1, 2, n, 16), s) for s in (4, 5, 6))
+        valid = jnp.broadcast_to(flt.causal_valid_mask(n, n), (1, 2, n, n))
+        n_b = n // bq
+        idx = jnp.broadcast_to(jnp.arange(n_b), (1, 2, n_b, n_b)).astype(
+            jnp.int32
+        )
+        out = spa.block_gather_attention(q, k, v, idx, valid, bq, bq)
+        ref = spa.dense_attention(q, k, v, valid)
+        assert jnp.allclose(out, ref, atol=1e-5)
+
+    def test_block_valid_masks_padding_slots(self):
+        n, bq = 128, 32
+        q, k, v = (_mk((1, 1, n, 16), s) for s in (7, 8, 9))
+        n_b = n // bq
+        # only block 0 valid; slot 1 points at garbage block 3
+        idx = jnp.zeros((1, 1, n_b, 2), jnp.int32).at[..., 1].set(3)
+        bval = jnp.zeros((1, 1, n_b, 2), jnp.int32).at[..., 0].set(1)
+        out = spa.block_gather_attention(
+            q, k, v, idx, None, bq, bq, block_valid=bval
+        )
+        only0 = jnp.zeros((1, 1, n_b, 1), jnp.int32)
+        ref = spa.block_gather_attention(
+            q, k, v, only0, None, bq, bq,
+            block_valid=jnp.ones((1, 1, n_b, 1), jnp.int32),
+        )
+        assert jnp.allclose(out, ref, atol=1e-5)
+
+
+class TestFlashMerge:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 1000), splits=st.sampled_from([2, 4, 8]))
+    def test_property_partial_merge_equals_full(self, seed, splits):
+        """Sequence-parallel attention invariant: merging per-shard flash
+        stats == attention over the full key set."""
+        n, d = 64, 16
+        q = _mk((1, 1, 8, d), seed)
+        k = _mk((1, 1, n, d), seed + 1)
+        v = _mk((1, 1, n, d), seed + 2)
+        keep = jnp.ones((1, 1, 8, n), bool)
+        full = spa.masked_sparse_attention(q, k, v, keep)
+        outs, ms, ls = [], [], []
+        for s in range(splits):
+            sl = slice(s * n // splits, (s + 1) * n // splits)
+            o, m, l = spa.partial_attention_stats(
+                q, k[:, :, sl], v[:, :, sl], keep[..., sl]
+            )
+            outs.append(o)
+            ms.append(m)
+            ls.append(l)
+        merged = spa.merge_partial_attention(
+            jnp.stack(outs), jnp.stack(ms), jnp.stack(ls)
+        )
+        assert jnp.allclose(merged, full, atol=1e-4)
