@@ -125,7 +125,9 @@ def _parse_operands(s: str) -> List[str]:
         out.append(cur.strip())
     names = []
     for o in out:
-        m = re.match(r"%([\w.\-]+)", o)
+        # operands print either as `%name` or `f32[..]{..} %name`
+        # depending on the HLO dumper version — find the name anywhere.
+        m = re.search(r"%([\w.\-]+)", o)
         names.append(m.group(1) if m else o)
     return names
 

@@ -1,0 +1,30 @@
+"""Bridges for jax APIs that moved or were renamed across releases.
+
+The codebase targets the newest jax idioms; these helpers keep it
+running on the 0.4.x line too (no device state is touched at import).
+"""
+
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the "skip replication type-checking" kwarg was renamed check_rep →
+# check_vma along the way
+_CHECK_KW = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
+
+
+def shard_map_unchecked(f, *, mesh, in_specs, out_specs):
+    """`shard_map` with replication checking off, any jax version."""
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        **{_CHECK_KW: False},
+    )

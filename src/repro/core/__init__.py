@@ -11,6 +11,7 @@ from repro.core.filtering import (  # noqa: F401
     causal_valid_mask,
     eq3_threshold,
     mpmrf_block_select,
+    mpmrf_decode_block_select,
     mpmrf_row_select,
     sliding_window_valid_mask,
 )
@@ -22,6 +23,7 @@ from repro.core.quantization import (  # noqa: F401
 )
 from repro.core.sparse_attention import (  # noqa: F401
     block_gather_attention,
+    decode_block_gather_attention,
     dense_attention,
     masked_sparse_attention,
 )

@@ -199,6 +199,7 @@ def select_blocks_from_scores(
     key_block: int,
     keep_first: bool = True,
     keep_diagonal: bool = True,
+    keep_all: bool = False,
 ) -> Tuple[jax.Array, jax.Array]:
     """Eq. 3 threshold rounds + static top-B on block score planes.
 
@@ -206,10 +207,11 @@ def select_blocks_from_scores(
     """
     n_qb, n_kb = s0_blk.shape[-2], s0_blk.shape[-1]
     keep = blk_valid
-    theta0 = flt.eq3_threshold(s0_blk, alphas[0], keep)
-    keep = jnp.logical_and(keep, s0_blk >= theta0)
-    theta1 = flt.eq3_threshold(s1_blk, alphas[1], keep)
-    keep = jnp.logical_and(keep, s1_blk >= theta1)
+    if not keep_all:
+        theta0 = flt.eq3_threshold(s0_blk, alphas[0], keep)
+        keep = jnp.logical_and(keep, s0_blk >= theta0)
+        theta1 = flt.eq3_threshold(s1_blk, alphas[1], keep)
+        keep = jnp.logical_and(keep, s1_blk >= theta1)
     if keep_first:
         keep = keep.at[..., 0].set(blk_valid[..., 0])
     if keep_diagonal:
@@ -341,6 +343,7 @@ def energon_block_attention_chunked(
         alphas=alphas, block_budget=budget,
         query_block=query_block, key_block=key_block,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
+        keep_all=pruning_ratio <= 1.0,
     )
     return block_gather_attention_chunked(
         q, k, v, idx, val01,

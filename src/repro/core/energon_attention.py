@@ -38,8 +38,15 @@ class EnergonConfig:
     query_block: int = 128
     key_block: int = 128
     # Target pruning ratio ρ ⇒ block budget B = ceil(n_kb / ρ). The paper's
-    # "adjustable pruning ratio" (§III-B(3)) expressed statically.
+    # "adjustable pruning ratio" (§III-B(3)) expressed statically. ρ ≤ 1
+    # means "keep everything": all MP-MRF paths become exactly dense.
     pruning_ratio: float = 4.0
+    # Key-block width for the block-granular *decode* path (the l=1
+    # serve case pools the padded KV cache into blocks this wide; the
+    # prefill/train blocks above are MXU-sized, decode blocks trade a
+    # little selection sharpness for gather granularity). 0 disables the
+    # block decode path (row-granular filtering over the full cache).
+    decode_key_block: int = 64
     keep_first: bool = True
     keep_diagonal: bool = True
     reuse_partial: bool = True
@@ -64,6 +71,7 @@ class EnergonConfig:
             keep_first=self.keep_first,
             keep_diagonal=self.keep_diagonal,
             reuse_partial=self.reuse_partial,
+            keep_all=self.pruning_ratio <= 1.0,
         )
 
 
@@ -77,6 +85,7 @@ def energon_attention(
     window: Optional[int] = None,
     layer_index: int = 10**9,
     q_offset: int = 0,
+    q_positions: Optional[jax.Array] = None,
     kv_length: Optional[jax.Array] = None,
     scale: Optional[float] = None,
 ) -> jax.Array:
@@ -89,6 +98,11 @@ def energon_attention(
       window: optional sliding-window size (local attention layers).
       layer_index: current layer; layers < cfg.min_prune_layer run dense.
       q_offset: absolute position of query row 0 (decode/chunked prefill).
+      q_positions: optional int32 ``[B, n_q]`` absolute position per query
+        row — the chunked-prefill case where positions are per-slot and
+        not necessarily contiguous (folded GQA rows, padding sentinels
+        ≥ n_k that attend everything and are ignored by the caller).
+        Overrides ``q_offset`` for masking.
       kv_length: optional ``[B]`` true cache lengths for padded caches.
       scale: score scale; default 1/√d.
 
@@ -98,6 +112,14 @@ def energon_attention(
     n_q, n_k = q.shape[-2], k.shape[-2]
     # Above this size, materialized [n_q, n_k] scores/masks do not fit
     # HBM: switch to the scan-over-query-blocks (flash-style) paths.
+    # The q_positions (serve-prefill) form has no chunked variant, so
+    # enforce the guard instead of silently materializing past it.
+    if q_positions is not None and n_q * n_k > cfg.chunk_threshold:
+        raise ValueError(
+            f"q_positions attention materializes [{n_q}, {n_k}] masks "
+            f"past chunk_threshold={cfg.chunk_threshold}; lower the "
+            "prefill chunk (or raise chunk_threshold)"
+        )
     chunked = n_q * n_k > cfg.chunk_threshold
 
     impl = cfg.impl
@@ -138,7 +160,22 @@ def energon_attention(
         )
 
     valid = None
-    if window is not None:
+    if q_positions is not None:
+        qpos = q_positions[:, None, :, None]        # [B, 1, n_q, 1]
+        kpos = jnp.arange(n_k)[None, None, None, :]
+        if causal:
+            valid = kpos <= qpos
+        if window is not None:
+            w_ok = jnp.where(window > 0, kpos > qpos - window, True)
+            valid = w_ok if valid is None else jnp.logical_and(valid, w_ok)
+        # padding sentinel rows (qpos >= n_k) are wholly invalid: their
+        # garbage scores must never leak into the pooled block-selection
+        # planes the real rows of a ragged chunk share.
+        not_sentinel = qpos < n_k
+        valid = not_sentinel if valid is None else jnp.logical_and(
+            valid, not_sentinel
+        )
+    elif window is not None:
         valid = flt.sliding_window_valid_mask(n_q, n_k, window, q_offset)
     elif causal:
         valid = flt.causal_valid_mask(n_q, n_k, q_offset)
@@ -150,6 +187,18 @@ def energon_attention(
         valid = in_range if valid is None else jnp.logical_and(valid, in_range)
         valid = jnp.broadcast_to(valid, q.shape[:-2] + (n_q, n_k))
 
+    # keep_diagonal target per query block: at absolute positions the
+    # local block is position//key_block, not the offset-0 default.
+    diag_blocks = None
+    if q_positions is not None and impl in ("mpmrf_block", "pallas"):
+        eff = jnp.where(q_positions < n_k, q_positions, -1)  # drop sentinels
+        qb_pos = jnp.max(
+            eff.reshape(eff.shape[0], n_q // cfg.query_block,
+                        cfg.query_block),
+            axis=-1,
+        )
+        diag_blocks = jnp.clip(qb_pos, 0, n_k - 1) // cfg.key_block
+
     if impl == "dense":
         return spa.dense_attention(q, k, v, valid, scale)
 
@@ -159,7 +208,9 @@ def energon_attention(
 
     if impl == "mpmrf_block":
         n_kb = n_k // cfg.key_block
-        res = flt.mpmrf_block_select(q, k, cfg.mpmrf("block", n_kb), valid)
+        res = flt.mpmrf_block_select(
+            q, k, cfg.mpmrf("block", n_kb), valid, diag_blocks=diag_blocks
+        )
         return spa.block_gather_attention(
             q, k, v, res.block_indices, valid,
             cfg.query_block, cfg.key_block, scale,
@@ -168,11 +219,15 @@ def energon_attention(
 
     if impl == "pallas":
         # Imported lazily: pallas lowering only exists for the TPU target;
-        # tests exercise it via interpret mode. Window / padded-cache
-        # masks are not in the kernel contract — fall back to XLA block.
-        if window is not None or kv_length is not None:
+        # tests exercise it via interpret mode. Window / padded-cache /
+        # per-row-position masks are not in the kernel contract — fall
+        # back to XLA block.
+        if window is not None or kv_length is not None or q_positions is not None:
             n_kb = n_k // cfg.key_block
-            res = flt.mpmrf_block_select(q, k, cfg.mpmrf("block", n_kb), valid)
+            res = flt.mpmrf_block_select(
+                q, k, cfg.mpmrf("block", n_kb), valid,
+                diag_blocks=diag_blocks,
+            )
             return spa.block_gather_attention(
                 q, k, v, res.block_indices, valid,
                 cfg.query_block, cfg.key_block, scale,
@@ -226,23 +281,65 @@ def energon_decode_attention(
 
     This is the paper's GPT-2 generation case (§IV-D, l = 1): MP-MRF
     filters the whole cache with low-bit mat-vecs, then exact attention
-    touches only survivors. q: ``[B, H, 1, d]``; caches ``[B, H, n, d]``;
+    touches only survivors. q: ``[B, H, n_q, d]`` (n_q > 1 ⇒ folded GQA
+    group rows, all at the same position); caches ``[B, H, n, d]``;
     cache_length: ``[B]`` int32 — number of valid cache entries.
+
+    Two sparse paths (DESIGN.md §3):
+
+    * **block** (``impl`` mpmrf_block/pallas, cache divisible by
+      ``cfg.decode_key_block``): pool the cache into key blocks, select
+      top-B via MP-MRF, and *gather* only the survivors — FLOPs/bytes
+      shrink with the pruning ratio.
+    * **row** (fallback): paper-faithful token mask over the full padded
+      cache (exact selection, but no skipped bytes under XLA).
     """
+    n_q = q.shape[-2]
     n_k = k_cache.shape[-2]
     in_range = jnp.arange(n_k)[None, :] < cache_length[:, None]
     valid = in_range[:, None, None, :]
-    valid = jnp.broadcast_to(valid, q.shape[:-2] + (1, n_k))
     if window is not None:
         w_lo = cache_length[:, None] - window
         w_valid = jnp.where(
             window > 0, jnp.arange(n_k)[None, :] >= w_lo, True
         )
         valid = jnp.logical_and(valid, w_valid[:, None, None, :])
+    valid = jnp.broadcast_to(valid, q.shape[:-2] + (n_q, n_k))
 
     if layer_index < cfg.min_prune_layer or cfg.impl == "dense":
         return spa.dense_attention(q, k_cache, v_cache, valid, scale)
 
+    bk = cfg.decode_key_block
+    use_block = (
+        cfg.impl in ("mpmrf_block", "pallas")
+        and bk > 0 and n_k % bk == 0 and n_k // bk > 1
+    )
+    if use_block:
+        n_kb = n_k // bk
+        budget = max(1, int(round(n_kb / cfg.pruning_ratio)))
+        mcfg = flt.MPMRFConfig(
+            round_bits=cfg.round_bits,
+            alphas=cfg.alphas,
+            granularity="block",
+            query_block=1,
+            key_block=bk,
+            block_budget=budget,
+            keep_first=cfg.keep_first,
+            keep_diagonal=cfg.keep_diagonal,
+            reuse_partial=cfg.reuse_partial,
+            keep_all=cfg.pruning_ratio <= 1.0,
+        )
+        res = flt.mpmrf_decode_block_select(
+            q, k_cache, mcfg, valid, cache_length
+        )
+        return spa.decode_block_gather_attention(
+            q, k_cache, v_cache, res.block_indices, res.block_valid,
+            cache_length, bk, window=window, scale=scale,
+        )
+
+    if cfg.pruning_ratio <= 1.0:
+        # ρ ≤ 1 ⇒ nothing to prune: skip the filter mat-vec entirely.
+        return spa.dense_attention(q, k_cache, v_cache, valid, scale)
     res = flt.mpmrf_row_select(q, k_cache, cfg.mpmrf("row"), valid)
     return spa.decode_sparse_attention(
         q, k_cache, v_cache, res.keep_mask, scale

@@ -52,6 +52,9 @@ class MPMRFConfig:
         prunes early layers — this is the per-row analogue safeguard).
       keep_diagonal: in block mode, always keep the diagonal (local) block.
       reuse_partial: use Fig. 7 shift-add result reuse across rounds.
+      keep_all: disable the Eq. 3 threshold rounds — every valid entry
+        survives (the pruning_ratio ≤ 1 contract: "keep everything" must
+        mean exactly dense attention, see DESIGN.md §2).
     """
 
     round_bits: Tuple[int, ...] = (2, 4)
@@ -63,6 +66,7 @@ class MPMRFConfig:
     keep_first: bool = True
     keep_diagonal: bool = True
     reuse_partial: bool = True
+    keep_all: bool = False
 
     def __post_init__(self):
         if len(self.round_bits) != len(self.alphas):
@@ -130,6 +134,45 @@ class FilterResult:
     block_valid: Optional[jax.Array] = None  # int32 0/1 per budget slot
 
 
+def _round_score_planes(
+    q16: qlib.QuantizedTensor,
+    k16: qlib.QuantizedTensor,
+    cfg: MPMRFConfig,
+):
+    """Yield the R rounds' real-unit token-score planes.
+
+    The single implementation of the Alg. 2 scoring pipeline, shared by
+    row, block, and decode selection. With ``reuse_partial`` (Fig. 7)
+    the query plane is held at the final bit-width and each round adds
+    the K bit-plane remainder onto the shifted integer accumulator —
+    R rounds cost one full-width integer matmul. Without it, every
+    round re-scores independently (the naive alternative the DSE
+    benchmark costs).
+    """
+    hi_bits = cfg.round_bits[-1]
+    if cfg.reuse_partial:
+        qp = q16.bit_plane(hi_bits)  # Q held at final bit-width
+        acc = None
+        prev_bits = None
+        for bits in cfg.round_bits:
+            if acc is None:
+                acc = qlib.int_qk_matmul(qp, k16.bit_plane(bits))
+            else:
+                acc = jnp.left_shift(acc, bits - prev_bits) + \
+                    qlib.int_qk_matmul(qp, k16.lsb_remainder(prev_bits, bits))
+            prev_bits = bits
+            yield qlib.rescale_scores(
+                acc, q16.plane_scale(hi_bits), k16.plane_scale(bits)
+            )
+    else:
+        for bits in cfg.round_bits:
+            yield qlib.rescale_scores(
+                qlib.int_qk_matmul(q16.bit_plane(bits), k16.bit_plane(bits)),
+                q16.plane_scale(bits),
+                k16.plane_scale(bits),
+            )
+
+
 def _multi_round_scores(
     q16: qlib.QuantizedTensor,
     k16: qlib.QuantizedTensor,
@@ -142,41 +185,15 @@ def _multi_round_scores(
     ``valid`` is the a-priori validity (causality/padding): pruning can
     only shrink it.
     """
-    hi_bits = cfg.round_bits[-1]
-    qp = q16.bit_plane(hi_bits)  # Q held at final bit-width (Fig. 7)
     keep = valid
     per_round = []
-    acc = None
-    prev_bits = None
     scores = None
-    for r, (bits, alpha) in enumerate(zip(cfg.round_bits, cfg.alphas)):
-        if cfg.reuse_partial:
-            if acc is None:
-                k_plane = k16.bit_plane(bits)
-                acc = qlib.int_qk_matmul(qp, k_plane)
-            else:
-                k_rem = k16.lsb_remainder(prev_bits, bits)
-                acc = jnp.left_shift(acc, bits - prev_bits) + qlib.int_qk_matmul(
-                    qp, k_rem
-                )
-            prev_bits = bits
-            scores = qlib.rescale_scores(
-                acc, q16.plane_scale(hi_bits), k16.plane_scale(bits)
-            )
-        else:
-            # Independent re-scoring per round (no reuse) — used by the
-            # DSE benchmark to cost the naive alternative.
-            q_r = q16.bit_plane(bits)
-            k_r = k16.bit_plane(bits)
-            scores = qlib.rescale_scores(
-                qlib.int_qk_matmul(q_r, k_r),
-                q16.plane_scale(bits),
-                k16.plane_scale(bits),
-            )
-        theta = eq3_threshold(scores, alpha, keep)
-        # ">=" (not ">") so a constant row keeps its max instead of
-        # emptying the selection (θ == max degenerate case).
-        keep = jnp.logical_and(keep, scores >= theta)
+    for alpha, scores in zip(cfg.alphas, _round_score_planes(q16, k16, cfg)):
+        if not cfg.keep_all:
+            theta = eq3_threshold(scores, alpha, keep)
+            # ">=" (not ">") so a constant row keeps its max instead of
+            # emptying the selection (θ == max degenerate case).
+            keep = jnp.logical_and(keep, scores >= theta)
         per_round.append(keep)
     return keep, scores, per_round
 
@@ -242,6 +259,7 @@ def mpmrf_block_select(
     k: jax.Array,
     cfg: MPMRFConfig,
     valid: Optional[jax.Array] = None,
+    diag_blocks: Optional[jax.Array] = None,
 ) -> FilterResult:
     """Block-granular MP-MRF (TPU adaptation, DESIGN.md §2).
 
@@ -250,6 +268,12 @@ def mpmrf_block_select(
     pooled to (query-block × key-block) granularity and selection happens
     per block — either by Eq. 3 threshold (mask) or by a static top-B
     budget (index table for the block-sparse kernels).
+
+    ``diag_blocks`` (optional ``[B, n_qb]`` int32) overrides the
+    keep_diagonal target per query block — callers whose query rows sit
+    at absolute offsets (chunked prefill via ``q_positions``) pass the
+    key block holding each query block's newest position; the default
+    ``(qb·bq)//bk`` mapping is only correct for offset-0 full sequences.
     """
     bq, bk = cfg.query_block, cfg.key_block
     n_q, n_k = q.shape[-2], k.shape[-2]
@@ -267,39 +291,33 @@ def mpmrf_block_select(
     # integer work equal one hi-bit matmul), then block pooling. Threshold
     # rounds are applied at *block* granularity so round semantics match
     # what the Pallas kernel does on-chip.
-    hi_bits = cfg.round_bits[-1]
-    qp = q16.bit_plane(hi_bits)
-    acc = None
-    prev_bits = None
     blk_keep = None
     blk_scores = None
     per_round = []
-    for bits, alpha in zip(cfg.round_bits, cfg.alphas):
-        if acc is None:
-            acc = qlib.int_qk_matmul(qp, k16.bit_plane(bits))
-        else:
-            acc = jnp.left_shift(acc, bits - prev_bits) + qlib.int_qk_matmul(
-                qp, k16.lsb_remainder(prev_bits, bits)
-            )
-        prev_bits = bits
-        tok_scores = qlib.rescale_scores(
-            acc, q16.plane_scale(hi_bits), k16.plane_scale(bits)
-        )
+    for alpha, tok_scores in zip(
+        cfg.alphas, _round_score_planes(q16, k16, cfg)
+    ):
         blk_scores, blk_valid = pool_block_scores(tok_scores, bq, bk, valid)
         if blk_keep is None:
             blk_keep = blk_valid
-        theta = eq3_threshold(blk_scores, alpha, blk_keep)
-        blk_keep = jnp.logical_and(blk_keep, blk_scores >= theta)
+        if not cfg.keep_all:
+            theta = eq3_threshold(blk_scores, alpha, blk_keep)
+            blk_keep = jnp.logical_and(blk_keep, blk_scores >= theta)
         per_round.append(blk_keep)
 
     # Safeguards: never drop the first (sink) or diagonal (local) block.
     if cfg.keep_first:
         blk_keep = blk_keep.at[..., 0].set(blk_valid[..., 0])
     if cfg.keep_diagonal:
-        qb_ids = jnp.arange(n_qb)
-        # diagonal key block for query block i under equal token counts
-        diag = jnp.minimum((qb_ids * bq) // bk, n_kb - 1)
-        diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
+        if diag_blocks is None:
+            qb_ids = jnp.arange(n_qb)
+            # diagonal key block for query block i under equal token counts
+            diag = jnp.minimum((qb_ids * bq) // bk, n_kb - 1)
+            diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
+        else:
+            diag_mask = jax.nn.one_hot(
+                jnp.clip(diag_blocks, 0, n_kb - 1), n_kb, dtype=bool
+            )[:, None]  # [B, 1, n_qb, n_kb] — broadcast over heads
         blk_keep = jnp.logical_or(blk_keep, jnp.logical_and(diag_mask, blk_valid))
 
     denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
@@ -322,6 +340,114 @@ def mpmrf_block_select(
             block_valid > 0, block_indices, 0
         ).astype(jnp.int32)
 
+    return FilterResult(
+        keep_mask=blk_keep,
+        block_indices=block_indices,
+        survivor_fraction=frac,
+        scores=blk_scores,
+        block_valid=block_valid,
+    )
+
+
+def mpmrf_decode_block_select(
+    q: jax.Array,
+    k_cache: jax.Array,
+    cfg: MPMRFConfig,
+    valid: jax.Array,
+    cache_length: jax.Array,
+) -> FilterResult:
+    """Block-granular MP-MRF over a padded KV cache (decode, §IV-D l=1).
+
+    The cache is pooled into key blocks of ``cfg.key_block`` tokens; the
+    MP-MRF rounds score them with the same shift-add integer pipeline as
+    :func:`mpmrf_block_select`, pooling over *all* query rows (the folded
+    GQA group shares one selection so each K/V block is gathered once per
+    KV head).
+
+    Selection is **exact-budget**: threshold survivors rank first and any
+    unused budget slots are filled with the next-best valid blocks. The
+    gather cost is static in ``budget`` either way, so filling is free
+    and strictly improves top-k coverage; with ``budget >= n_valid``
+    every valid block is kept and the gathered attention is exactly
+    dense — the pruning_ratio=1 contract (DESIGN.md §3).
+
+    Args:
+      q: ``[..., n_q, d]`` query rows, all at position cache_length-1
+        (n_q > 1 ⇒ folded GQA group rows).
+      k_cache: ``[..., n_k, d]`` padded key cache.
+      cfg: filter config — ``key_block`` is the decode pooling width,
+        ``block_budget`` the static number of key blocks to select.
+      valid: bool, broadcastable to ``[..., n_q, n_k]`` — cache-length
+        and window validity.
+      cache_length: ``[B]`` true lengths; leading axis of q is B.
+
+    Returns:
+      FilterResult with ``block_indices``/``block_valid`` of shape
+      ``[..., 1, budget]`` (selection shared across query rows).
+    """
+    bk = cfg.key_block
+    if cfg.block_budget is None:
+        raise ValueError("decode block selection needs cfg.block_budget")
+    budget = cfg.block_budget
+    n_q, n_k = q.shape[-2], k_cache.shape[-2]
+    if n_k % bk:
+        raise ValueError(f"cache length {n_k} not divisible by {bk}")
+    n_kb = n_k // bk
+    valid = jnp.broadcast_to(valid, q.shape[:-1] + (n_k,))
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    k16 = qlib.quantize_int16(k_cache, axis=(-2, -1))
+    blk_keep = None
+    blk_scores = None
+    blk_valid = None
+    per_round = []
+    for alpha, tok_scores in zip(
+        cfg.alphas, _round_score_planes(q16, k16, cfg)
+    ):
+        # pool over every query row at once (bq = n_q ⇒ n_qb = 1)
+        blk_scores, blk_valid = pool_block_scores(tok_scores, n_q, bk, valid)
+        if blk_keep is None:
+            blk_keep = blk_valid
+        if not cfg.keep_all:
+            theta = eq3_threshold(blk_scores, alpha, blk_keep)
+            blk_keep = jnp.logical_and(blk_keep, blk_scores >= theta)
+        per_round.append(blk_keep)
+
+    # Tiered selection on integer keys: pinned ≫ survivors ≫ budget
+    # fill ≫ invalid, ordered by final-round score rank inside each
+    # tier. (A float offset like `score - 1e15` would absorb the score
+    # in f32 — its ulp there is ~1e8 — silently degrading fill order to
+    # block-index order.) key = tier·n_kb + (n_kb-1-rank) stays exact.
+    order = jnp.argsort(-jnp.where(blk_valid, blk_scores, NEG_INF), axis=-1)
+    rank = jnp.argsort(order, axis=-1)       # rank 0 = best score
+    tier = blk_valid.astype(jnp.int32)       # valid fill candidates = 1
+    tier = jnp.where(blk_keep, 2, tier)      # threshold survivors = 2
+    kb_ids = jnp.arange(n_kb)
+    if cfg.keep_first:
+        tier = jnp.where(
+            jnp.logical_and(kb_ids == 0, blk_valid), 3, tier
+        )
+    if cfg.keep_diagonal:
+        # decode-time diagonal: the block holding the newest token
+        batch = cache_length.shape[0]
+        last = (cache_length - 1) // bk
+        last = last.reshape((batch,) + (1,) * (tier.ndim - 1))
+        tier = jnp.where(
+            jnp.logical_and(kb_ids == last, blk_valid), 3, tier
+        )
+
+    b = min(budget, n_kb)
+    sel_key = tier * n_kb + (n_kb - 1 - rank)
+    top_keys, block_indices = jax.lax.top_k(sel_key, b)
+    block_valid = (top_keys >= n_kb).astype(jnp.int32)  # tier >= 1
+    block_indices = jnp.where(
+        block_valid > 0, block_indices, 0
+    ).astype(jnp.int32)
+
+    denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
+    frac = jnp.stack(
+        [jnp.sum(m, axis=-1) / denom for m in per_round], axis=0
+    )
     return FilterResult(
         keep_mask=blk_keep,
         block_indices=block_indices,

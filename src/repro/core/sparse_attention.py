@@ -173,6 +173,84 @@ def decode_sparse_attention(
     return masked_sparse_attention(q, k_cache, v_cache, keep_mask, scale)
 
 
+def decode_block_gather_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    block_indices: jax.Array,
+    block_valid: jax.Array,
+    cache_length: jax.Array,
+    key_block: int,
+    *,
+    window=None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """l=1 decode attention that touches only surviving key blocks.
+
+    Unlike :func:`decode_sparse_attention` (row-granular mask over the
+    whole padded cache), this path *gathers* the ``B`` selected K/V
+    blocks per KV head and attends locally — bytes and FLOPs scale with
+    ``B·key_block`` instead of ``max_len``, so the pruning ratio is
+    visible to the compiler (On-Demand Fetching, §IV-C, at decode time).
+
+    Args:
+      q: ``[..., n_q, d]`` — the folded GQA group rows, all at position
+        cache_length-1.
+      k_cache, v_cache: ``[..., n_k, d]`` padded caches.
+      block_indices: int32 ``[..., 1, B]`` survivor block ids from
+        :func:`repro.core.filtering.mpmrf_decode_block_select` (selection
+        shared across the folded query rows).
+      block_valid: int32 0/1 ``[..., 1, B]`` — padding slots never attend.
+      cache_length: ``[batch]`` true lengths (batch = leading dim of q).
+      key_block: tokens per key block.
+      window: optional sliding window (token-level re-mask inside the
+        gathered blocks).
+    """
+    *lead, n_q, d = q.shape
+    n_k = k_cache.shape[-2]
+    bk = key_block
+    n_kb = n_k // bk
+    budget = block_indices.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kb = k_cache.reshape(*lead, n_kb, bk, d)
+    vb = v_cache.reshape(*lead, n_kb, bk, d)
+    idx = block_indices[..., 0, :]               # [..., B]
+    kg = jnp.take_along_axis(kb, idx[..., :, None, None], axis=-3)
+    vg = jnp.take_along_axis(vb, idx[..., :, None, None], axis=-3)
+
+    scores = jnp.einsum(
+        "...qd,...jkd->...qjk", q, kg,
+        preferred_element_type=jnp.float32,
+    ) * scale                                    # [..., n_q, B, bk]
+
+    # Token-level validity inside the gathered tiles. Budget-padding
+    # slots (block_valid 0) alias block 0 — masking them out also makes
+    # the keep-everything budget exactly dense despite the duplicates.
+    kpos = idx[..., None, :, None] * bk + jnp.arange(bk)  # [..., 1, B, bk]
+    batch = cache_length.shape[0]
+    cl = cache_length.reshape((batch,) + (1,) * (kpos.ndim - 1))
+    mask = kpos < cl
+    mask = jnp.logical_and(
+        mask, block_valid[..., 0, :][..., None, :, None] > 0
+    )
+    if window is not None:
+        mask = jnp.logical_and(
+            mask, jnp.where(window > 0, kpos >= cl - window, True)
+        )
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    flat = scores.reshape(*scores.shape[:-2], budget * bk)
+    row_max = jnp.max(flat, axis=-1, keepdims=True)
+    exp = jnp.exp(flat - jax.lax.stop_gradient(row_max))
+    exp = jnp.where(flat <= NEG_INF / 2, 0.0, exp)
+    denom = jnp.maximum(jnp.sum(exp, axis=-1, keepdims=True), 1e-30)
+    probs = (exp / denom).reshape(scores.shape)
+    return jnp.einsum(
+        "...qjk,...jkd->...qd", probs.astype(v_cache.dtype), vg
+    )
+
+
 def merge_partial_attention(
     outs: jax.Array,
     maxes: jax.Array,

@@ -21,7 +21,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map_unchecked as shard_map
 
 INT8_MAX = 127.0
 
@@ -91,5 +91,4 @@ def compressed_psum_shard_map(
         body, mesh=mesh,
         in_specs=(specs_g, specs_e),
         out_specs=(specs_g, specs_e),
-        check_vma=False,
     )(grads, err_state)

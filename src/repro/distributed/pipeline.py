@@ -21,7 +21,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
+from repro.compat import shard_map_unchecked as shard_map
 
 
 def pipeline_forward(
@@ -96,7 +96,6 @@ def pipeline_forward(
         mesh=mesh,
         in_specs=(in_spec, P()),
         out_specs=P(),
-        check_vma=False,
     )(stage_params, microbatches)
 
 

@@ -1,8 +1,8 @@
-"""Serving launcher: batched decode with Energon dynamic sparse attention.
+"""Serving launcher: chunked-prefill + batched sparse decode.
 
 ``python -m repro.launch.serve --arch <id> --smoke`` starts the
-continuous-batching engine on synthetic requests and reports
-tokens/sec + per-tick latency. The full-size serve_step is exercised by
+continuous-batching engine on synthetic requests and reports prefill and
+decode throughput separately. The full-size serve_step is exercised by
 the decode_* dry-run shapes.
 """
 
@@ -19,6 +19,8 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
     args = ap.parse_args()
 
@@ -35,20 +37,29 @@ def main():
 
     engine = ServeLoop(
         model, params, batch_slots=args.batch_slots, max_len=args.max_len,
-        eos_token=cfg.vocab_size - 1,
+        eos_token=cfg.vocab_size - 1, prefill_chunk=args.prefill_chunk,
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab_size - 1, size=8).tolist()
+        prompt = rng.integers(
+            1, cfg.vocab_size - 1, size=args.prompt_len
+        ).tolist()
         engine.submit(Request(uid=uid, prompt=prompt,
                               max_new_tokens=args.new_tokens))
     t0 = time.perf_counter()
     done = engine.run_until_drained()
     dt = time.perf_counter() - t0
+    m = engine.metrics
     total_tokens = sum(len(r.tokens_out) for r in done)
+    mode = "chunked" if engine.prefill_fn is not None else "sequential"
     print(f"[serve] {cfg.name}: {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s, "
-          f"{engine.ticks} engine ticks)")
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s end-to-end)")
+    print(f"[serve] prefill ({mode}): {m.prefill_tokens} tok in "
+          f"{m.prefill_dispatches} dispatches "
+          f"({m.prefill_tokens_per_sec:.1f} tok/s)")
+    print(f"[serve] decode: {m.decode_tokens} tok in "
+          f"{m.decode_dispatches} dispatches "
+          f"({m.decode_tokens_per_sec:.1f} tok/s, {m.ticks} ticks)")
 
 
 if __name__ == "__main__":

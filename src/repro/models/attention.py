@@ -120,6 +120,129 @@ def init_kv_cache(
     }
 
 
+def _project_update_fold(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float,
+    use_qk_norm: bool,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Shared serve-path front half (decode = the C=1 special case).
+
+    Projects QKV for ``x [B, C, d]`` at absolute cache ``positions
+    [B, C]``, scatters the C new K/V rows into the padded cache, and
+    folds GQA head groups into the query axis. Returns
+    ``(q_folded [B, KV, G·C, hd], k_cache, v_cache)``.
+
+    Layout rules: when KV heads divide the model axis the cache is
+    head-sharded → q matches; otherwise the cache is *sequence*-sharded
+    (context parallel) and q is replicated over 'model', else XLA
+    all-gathers the whole cache every layer (measured 64 MB × L per
+    decode step). The scatter is a one-hot product pinned to the cache
+    layout for the same reason; out-of-range positions (>= max_len)
+    produce all-zero one-hot rows, i.e. padding sentinels write nothing.
+    The GQA fold avoids materializing a repeated cache — `jnp.repeat`
+    of a sequence-sharded cache makes GSPMD all-gather it per layer.
+    """
+    batch, chunk, _ = x.shape
+    max_len = cache["k"].shape[2]
+    q, k, v = _project_qkv(params, x, positions, use_qk_norm, rope_theta)
+    q = q.transpose(0, 2, 1, 3)              # [B, H, C, hd]
+    k_new = k.transpose(0, 2, 1, 3)          # [B, KV, C, hd]
+    v_new = v.transpose(0, 2, 1, 3)
+
+    mesh = shd.get_active_mesh()
+    kv_head_sharded = (
+        mesh is not None and "model" in mesh.axis_names
+        and num_kv_heads % mesh.shape["model"] == 0
+    )
+    q = shd.constrain(
+        q,
+        ("dp", "model" if kv_head_sharded else None, None, None),
+        allow_uneven=True,
+    )
+
+    onehot = jax.nn.one_hot(
+        positions, max_len, dtype=k_new.dtype
+    )  # [B, C, max_len]
+    write = jnp.sum(onehot, axis=1)          # [B, max_len] 0/1
+    write = shd.constrain_cache_onehot(write, cache["k"].shape)
+    k_cache = shd.constrain_kv_cache(
+        cache["k"] * (1 - write)[:, None, :, None]
+        + jnp.einsum("bcm,bhcd->bhmd", onehot, k_new)
+    )
+    v_cache = shd.constrain_kv_cache(
+        cache["v"] * (1 - write)[:, None, :, None]
+        + jnp.einsum("bcm,bhcd->bhmd", onehot, v_new)
+    )
+
+    groups = num_heads // num_kv_heads
+    head_dim = q.shape[-1]
+    if groups > 1:
+        q = q.reshape(batch, num_kv_heads, groups * chunk, head_dim)
+    return q, k_cache, v_cache
+
+
+def _unfold_heads_out(
+    out: jax.Array, params, num_heads: int, chunk: int
+) -> jax.Array:
+    """``[B, KV, G·C, hd]`` attention output → ``[B, C, d_model]``."""
+    batch, _, _, head_dim = out.shape
+    out = out.reshape(batch, num_heads, chunk, head_dim)
+    out = out.transpose(0, 2, 1, 3)          # [B, C, H, hd]
+    return jnp.einsum("bnhk,hkd->bnd", out, params["wo"])
+
+
+def prefill_attention_block(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,
+    energon: EnergonConfig,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float = 10000.0,
+    use_qk_norm: bool = False,
+    window: Optional[jax.Array] = None,
+    layer_index: int = 10**9,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention: a C-token chunk against the KV cache.
+
+    x ``[B, C, d]``; positions ``[B, C]`` absolute cache positions per
+    token. The chunk's K/V rows are scattered into the cache at their
+    positions in one shot, then the chunk's queries attend the *updated*
+    cache under a per-row causal mask (key pos ≤ query pos) — admitting a
+    length-L prompt costs O(L/C) dispatches instead of L decode steps.
+
+    Rows with ``positions >= max_len`` are padding sentinels: they write
+    nothing, are masked out of (pooled) score selection, and their
+    outputs are garbage the caller ignores. This is how ragged final
+    chunks and engine slots not being prefilled stay inert inside one
+    fixed-shape jitted call.
+    """
+    chunk = x.shape[1]
+    qg, k_cache, v_cache = _project_update_fold(
+        params, x, cache, positions,
+        num_heads=num_heads, num_kv_heads=num_kv_heads,
+        rope_theta=rope_theta, use_qk_norm=use_qk_norm,
+    )
+    groups = num_heads // num_kv_heads
+    # folded row (g, c) keeps token c's position → same per-row mask
+    qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
+    out = energon_attention(
+        qg, k_cache, v_cache, energon,
+        causal=True, window=window, layer_index=layer_index,
+        q_positions=qpos,
+    )
+    y = _unfold_heads_out(out, params, num_heads, chunk)
+    return y, {"k": k_cache, "v": v_cache}
+
+
 def decode_attention_block(
     params,
     x: jax.Array,
@@ -137,64 +260,17 @@ def decode_attention_block(
     """One-token decode step. x ``[B, 1, d]``; cache_index ``[B]``.
 
     Updates the cache in-place (functionally) at ``cache_index`` and runs
-    Energon decode attention (MP-MRF row filter over the cache, §IV-D
+    Energon decode attention (MP-MRF filtering over the cache, §IV-D
     l=1 case) over the valid prefix.
     """
-    batch = x.shape[0]
-    positions = cache_index[:, None]  # [B, 1]
-    q, k, v = _project_qkv(params, x, positions, use_qk_norm, rope_theta)
-    q = q.transpose(0, 2, 1, 3)              # [B, H, 1, hd]
-    k_new = k.transpose(0, 2, 1, 3)          # [B, KV, 1, hd]
-    v_new = v.transpose(0, 2, 1, 3)
-
-    # Align q with the cache layout. When KV heads divide the model axis
-    # the cache is head-sharded → shard q heads to match; otherwise the
-    # cache is *sequence*-sharded (context parallel) and q must be
-    # replicated over 'model', else XLA all-gathers the whole cache
-    # every layer (measured 64 MB × L per decode step).
-    mesh = shd.get_active_mesh()
-    kv_head_sharded = (
-        mesh is not None and "model" in mesh.axis_names
-        and num_kv_heads % mesh.shape["model"] == 0
+    qg, k_cache, v_cache = _project_update_fold(
+        params, x, cache, cache_index[:, None],
+        num_heads=num_heads, num_kv_heads=num_kv_heads,
+        rope_theta=rope_theta, use_qk_norm=use_qk_norm,
     )
-    q = shd.constrain(
-        q,
-        ("dp", "model" if kv_head_sharded else None, None, None),
-        allow_uneven=True,
-    )
-
-    # Scatter the new K/V row at each sequence's cache position; pin the
-    # result to the cache layout (the broadcast product is otherwise
-    # unsharded on the sequence dim → full-cache all-gather per layer).
-    onehot = jax.nn.one_hot(
-        cache_index, cache["k"].shape[2], dtype=k_new.dtype
-    )  # [B, max_len]
-    onehot = shd.constrain_cache_onehot(onehot, cache["k"].shape)
-    k_cache = shd.constrain_kv_cache(
-        cache["k"] * (1 - onehot)[:, None, :, None]
-        + onehot[:, None, :, None] * k_new
-    )
-    v_cache = shd.constrain_kv_cache(
-        cache["v"] * (1 - onehot)[:, None, :, None]
-        + onehot[:, None, :, None] * v_new
-    )
-
-    # GQA without materializing a repeated cache: fold the head groups
-    # into the query-position axis (every group row sits at the same
-    # position, so masking is identical). `jnp.repeat` of a
-    # sequence-sharded cache makes GSPMD all-gather it per layer.
-    groups = num_heads // num_kv_heads
-    head_dim = q.shape[-1]
-    if groups > 1:
-        qg = q.reshape(batch, num_kv_heads, groups, head_dim)
-    else:
-        qg = q
     out = energon_decode_attention(
         qg, k_cache, v_cache, cache_index + 1, energon,
         layer_index=layer_index, window=window,
     )
-    if groups > 1:
-        out = out.reshape(batch, num_heads, 1, head_dim)
-    out = out.transpose(0, 2, 1, 3)
-    y = jnp.einsum("bnhk,hkd->bnd", out, params["wo"])
+    y = _unfold_heads_out(out, params, num_heads, 1)
     return y, {"k": k_cache, "v": v_cache}

@@ -163,7 +163,7 @@ def _sharded_embed_lookup(table: jax.Array, tokens: jax.Array, mesh):
     psum — the standard TP embedding pattern. XLA's auto-partitioner
     cannot do this for us (it replicates the table, or worse).
     """
-    from jax import shard_map
+    from repro.compat import shard_map_unchecked as shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
@@ -191,7 +191,6 @@ def _sharded_embed_lookup(table: jax.Array, tokens: jax.Array, mesh):
         local, mesh=mesh,
         in_specs=(P("model", None), token_spec),
         out_specs=out_spec,
-        check_vma=False,
     )(table, tokens)
 
 

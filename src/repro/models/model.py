@@ -385,45 +385,95 @@ class LMModel:
             return cache
         raise ValueError(cfg.family)
 
-    def decode_step(
+    @property
+    def supports_prefill(self) -> bool:
+        """True when the family has a multi-token chunked-prefill path.
+
+        Recurrent families (ssm/hybrid) carry sequential state and fall
+        back to token-by-token admission in the serve loop.
+        """
+        return self.cfg.family in ("dense", "moe", "vlm", "audio")
+
+    def prefill(
         self,
         params,
         cache,
         inputs: Dict[str, jax.Array],
         cache_index: jax.Array,
     ) -> Tuple[jax.Array, Any]:
-        """One-token decode. inputs: {"tokens": [B,1]} or
-        {"embeddings": [B,1,d]}; cache_index ``[B]`` current lengths."""
+        """Multi-token chunked prefill: run a ``[B, C]`` prompt chunk
+        against the cached history and write its K/V rows into the cache
+        in one jitted call.
+
+        inputs: ``{"tokens": [B, C]}`` (or ``{"embeddings": [B, C, d]}``
+        for vlm/audio), plus optional ``"positions": [B, C]`` absolute
+        cache positions per token. Positions default to
+        ``cache_index[:, None] + arange(C)``; positions >= max_len mark
+        padding tokens (no cache write, output ignored) so ragged chunks
+        and partially-admitted batches share one compiled shape.
+
+        Returns ``(logits [B, C, V], new_cache)``. The caller advances
+        ``cache_index`` by the number of real tokens per slot.
+        """
         cfg = self.cfg
+        if not self.supports_prefill:
+            raise NotImplementedError(
+                f"chunked prefill not supported for family {cfg.family!r}"
+            )
         if cfg.uses_embeddings_input and "embeddings" in inputs:
             x = inputs["embeddings"].astype(self._dtype)
         else:
             x = L.embed_tokens(params["embed"], inputs["tokens"]).astype(
                 self._dtype
             ) * (cfg.d_model ** 0.5)
+        x = shd.constrain(x, ("dp", None, None))
+        chunk = x.shape[1]
+        positions = inputs.get("positions")
+        if positions is None:
+            positions = cache_index[:, None] + jnp.arange(chunk)[None, :]
+        positions = positions.astype(jnp.int32)
 
-        if cfg.family in ("dense", "moe", "vlm", "audio"):
-            x, new_cache = self._decode_tfm(params, cache, x, cache_index)
-        elif cfg.family == "ssm":
-            x, new_cache = self._decode_xlstm(params, cache, x)
-        elif cfg.family == "hybrid":
-            x, new_cache = self._decode_hybrid(params, cache, x, cache_index)
-        logits = self._logits_out(params, x)
-        return logits, new_cache
+        has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
+        windows = self.layer_windows()
 
-    def _decode_attn_step(self, layer_params, x, kv_cache, window,
-                          layer_idx, cache_index):
+        def step_fn(layer_params, x, kv_cache, window, layer_idx):
+            return self._prefill_attn_step(
+                layer_params, x, kv_cache,
+                window if has_windows else None, layer_idx, positions,
+            )
+
+        x, new_cache = tfm.apply_stack_decode(
+            params["blocks"], x, cache, windows, step_fn,
+            prefix_layers=cfg.energon.min_prune_layer,
+        )
+        return self._logits_out(params, x), new_cache
+
+    def _prefill_attn_step(self, layer_params, x, kv_cache, window,
+                           layer_idx, positions):
         cfg = self.cfg
-        h, new_cache = attn_lib.decode_attention_block(
+
+        def attn(p, xn, c):
+            return attn_lib.prefill_attention_block(
+                p, xn, c, positions, cfg.energon,
+                num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                rope_theta=cfg.rope_theta,
+                use_qk_norm=cfg.use_qk_norm,
+                window=window,
+                layer_index=layer_idx,
+            )
+
+        return self._serve_block_step(layer_params, x, kv_cache, attn)
+
+    def _serve_block_step(self, layer_params, x, kv_cache, attn_call):
+        """Shared decode/prefill block body: pre-norm attention +
+        residual, then the MoE/MLP half. ``attn_call(params, x_normed,
+        kv_cache) -> (h, new_cache)``."""
+        cfg = self.cfg
+        h, new_cache = attn_call(
             layer_params["attn"],
             L.apply_norm(cfg.norm, layer_params["norm_attn"], x),
-            kv_cache, cache_index, cfg.energon,
-            num_heads=cfg.num_heads,
-            num_kv_heads=cfg.num_kv_heads,
-            rope_theta=cfg.rope_theta,
-            use_qk_norm=cfg.use_qk_norm,
-            window=window,
-            layer_index=layer_idx,
+            kv_cache,
         )
         x = x + h
         h_in = L.apply_norm(cfg.norm, layer_params["norm_mlp"], x)
@@ -432,6 +482,95 @@ class LMModel:
         else:
             h = L.apply_mlp(layer_params["mlp"], h_in, cfg.activation)
         return x + h, new_cache
+
+    # Batch-axis position of each recurrent-state cache key (leading
+    # axes are the scanned layer-group dims — see init_cache).
+    _STATE_BATCH_AXES = {
+        "mlstm": 2, "slstm": 1,
+        "mamba_pre": 2, "mamba_post": 1, "mamba_tail": 1,
+    }
+
+    @staticmethod
+    def _blend_state(new, old, active, batch_axis: int):
+        """Per-slot state update gate: keep ``old`` where ``active`` is
+        False. Recurrent states accumulate, so a whole-batch decode step
+        must not advance slots that did not really consume a token."""
+        def blend(n, o):
+            shape = [1] * n.ndim
+            shape[batch_axis] = -1
+            return jnp.where(active.reshape(shape), n, o)
+
+        return jax.tree.map(blend, new, old)
+
+    def reset_decode_slots(self, cache, reset_mask: jax.Array):
+        """Zero the recurrent decode state of the masked slots
+        (``reset_mask`` ``[B]`` bool). Attention KV caches are
+        positional — rows are overwritten at their cache_index — so
+        they need no reset; recurrent states accumulate and a freshly
+        admitted slot must not inherit its previous occupant's state."""
+        if self.cfg.family not in ("ssm", "hybrid"):
+            return cache
+        out = dict(cache)
+        for key, ax in self._STATE_BATCH_AXES.items():
+            if key in cache:
+                out[key] = self._blend_state(
+                    jax.tree.map(jnp.zeros_like, cache[key]), cache[key],
+                    jnp.logical_not(reset_mask), ax,
+                )
+        return out
+
+    def decode_step(
+        self,
+        params,
+        cache,
+        inputs: Dict[str, jax.Array],
+        cache_index: jax.Array,
+    ) -> Tuple[jax.Array, Any]:
+        """One-token decode. inputs: {"tokens": [B,1]} or
+        {"embeddings": [B,1,d]}, plus optional {"active": [B] bool} —
+        recurrent state only advances on active slots (KV-cache writes
+        are positional and self-healing, so they are not gated);
+        cache_index ``[B]`` current lengths."""
+        cfg = self.cfg
+        if cfg.uses_embeddings_input and "embeddings" in inputs:
+            x = inputs["embeddings"].astype(self._dtype)
+        else:
+            x = L.embed_tokens(params["embed"], inputs["tokens"]).astype(
+                self._dtype
+            ) * (cfg.d_model ** 0.5)
+        active = inputs.get("active")
+
+        if cfg.family in ("dense", "moe", "vlm", "audio"):
+            x, new_cache = self._decode_tfm(params, cache, x, cache_index)
+        elif cfg.family == "ssm":
+            x, new_cache = self._decode_xlstm(params, cache, x)
+        elif cfg.family == "hybrid":
+            x, new_cache = self._decode_hybrid(params, cache, x, cache_index)
+        if active is not None and cfg.family in ("ssm", "hybrid"):
+            for key, ax in self._STATE_BATCH_AXES.items():
+                if key in new_cache:
+                    new_cache[key] = self._blend_state(
+                        new_cache[key], cache[key], active, ax
+                    )
+        logits = self._logits_out(params, x)
+        return logits, new_cache
+
+    def _decode_attn_step(self, layer_params, x, kv_cache, window,
+                          layer_idx, cache_index):
+        cfg = self.cfg
+
+        def attn(p, xn, c):
+            return attn_lib.decode_attention_block(
+                p, xn, c, cache_index, cfg.energon,
+                num_heads=cfg.num_heads,
+                num_kv_heads=cfg.num_kv_heads,
+                rope_theta=cfg.rope_theta,
+                use_qk_norm=cfg.use_qk_norm,
+                window=window,
+                layer_index=layer_idx,
+            )
+
+        return self._serve_block_step(layer_params, x, kv_cache, attn)
 
     def _decode_tfm(self, params, cache, x, cache_index):
         cfg = self.cfg

@@ -205,7 +205,7 @@ def _apply_moe_sharded(
     weight all-gather over 'data' (ZeRO) + one activation psum over
     'model' — nothing else.
     """
-    from jax import shard_map
+    from repro.compat import shard_map_unchecked as shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
@@ -318,7 +318,6 @@ def _apply_moe_sharded(
         in_specs=(P(), up_spec,
                   up_spec if has_gate else P(), down_spec, x_spec),
         out_specs=(x_spec, P(), P()),
-        check_vma=False,
     )(
         params["router"],
         params["w_up"],
@@ -342,7 +341,7 @@ def _apply_moe_serve_2d(
     per layer: one token all-gather (≤1 MB) + one output psum (≤2 MB) —
     versus ~300 MB of weight gathers in the training layout.
     """
-    from jax import shard_map
+    from repro.compat import shard_map_unchecked as shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
@@ -433,7 +432,6 @@ def _apply_moe_serve_2d(
         in_specs=(P(), up_spec, up_spec if has_gate else P(), down_spec,
                   x_spec),
         out_specs=(x_spec, P(), P()),
-        check_vma=False,
     )(
         params["router"], params["w_up"],
         params.get("w_gate", params["router"]), params["w_down"], x,

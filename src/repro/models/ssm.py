@@ -254,7 +254,7 @@ def slstm_seq(params, x: jax.Array, num_heads: int) -> jax.Array:
     reshard — one collective per step × 4096 steps × layers × µbatches
     (measured 0.96–4.9 TB/chip per train step depending on pinning).
     """
-    from jax import shard_map
+    from repro.compat import shard_map_unchecked as shard_map
     from jax.sharding import PartitionSpec as P
 
     from repro.distributed import sharding as shd
@@ -275,7 +275,6 @@ def slstm_seq(params, x: jax.Array, num_heads: int) -> jax.Array:
         mesh=mesh,
         in_specs=(param_specs, x_spec),
         out_specs=x_spec,
-        check_vma=False,
     )(params, x)
 
 

@@ -105,6 +105,26 @@ def _tree_slice(tree, lo: int, hi: Optional[int]):
     return jax.tree.map(lambda a: a[lo:hi], tree)
 
 
+@jax.custom_vjp
+def _barrier(x):
+    """Differentiable ``optimization_barrier`` (this jax version ships no
+    autodiff rule for the primitive). The backward pass re-applies the
+    barrier to the cotangent so the residual convert stays pinned inside
+    the backward loop body too."""
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return _barrier(x), None
+
+
+def _barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 def _scan_factors(n: int) -> Tuple[int, int]:
     """(outer, inner) factorization minimizing outer+inner (≈2√n).
 
@@ -157,7 +177,7 @@ def apply_stack(
             # residual buffer to f32 outside the backward loop — an
             # L × activation-size f32 copy (11.8 GB/chip on the 94-layer
             # MoE). The barrier pins the convert inside the loop body.
-            x = jax.lax.optimization_barrier(x)
+            x = _barrier(x)
             layer_params, window = xs
             fn = block_fn
             if remat == "full":

@@ -5,5 +5,12 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     StragglerMonitor,
     retry_step,
 )
-from repro.runtime.serve_loop import Request, ServeLoop, make_serve_step  # noqa: F401
+from repro.runtime.serve_loop import (  # noqa: F401
+    EngineMetrics,
+    Request,
+    ServeLoop,
+    make_prefill_step,
+    make_serve_step,
+    sample_tokens,
+)
 from repro.runtime.train_loop import TrainConfig, TrainLoop, make_train_step  # noqa: F401

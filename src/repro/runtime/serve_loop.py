@@ -1,20 +1,33 @@
-"""Serving runtime: batched KV-cache decoding with Energon MP-MRF.
+"""Serving runtime: batched chunked-prefill → sparse-decode engine.
 
 `make_serve_step` builds the jitted one-token decode step — this is the
-function the decode_* dry-run shapes lower. `ServeLoop` provides a
-minimal continuous-batching server: requests join fixed slots, finished
-sequences free their slot, every engine tick advances all live slots by
-one token (the paper's l=1 pipeline, §IV-D).
+function the decode_* dry-run shapes lower. `ServeLoop` is a
+continuous-batching engine over fixed slots:
+
+* **Admission** runs the model's chunked-prefill path: every slot
+  admitted in a tick is prefilled together, chunk c of all their
+  prompts per jitted call — a whole admission wave costs
+  ceil(max_L / prefill_chunk) dispatches (vs sum(L_i) whole-batch
+  decode steps in the naive engine). Ragged final chunks and idle slots
+  reuse the same compiled shape via position sentinels. Recurrent
+  families (ssm/hybrid) fall back to token-by-token admission.
+* **Decode** advances every live slot by one token per tick (the paper's
+  l=1 pipeline, §IV-D) with per-slot RNG streams and per-slot
+  temperature sampling — one greedy request stays deterministic no
+  matter what its batch neighbours do.
+* **Metrics** track prefill vs decode tokens, dispatches, and wall time
+  so prefill and decode throughput are reported separately.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh
 
 from repro.distributed import sharding as shd
@@ -30,6 +43,38 @@ class Request:
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     _next_input: int = 0
+
+
+@dataclasses.dataclass
+class EngineMetrics:
+    """Engine accounting: prefill and decode measured separately."""
+
+    prefill_tokens: int = 0
+    decode_tokens: int = 0
+    prefill_dispatches: int = 0
+    decode_dispatches: int = 0
+    prefill_time: float = 0.0
+    decode_time: float = 0.0
+    ticks: int = 0
+
+    @property
+    def prefill_tokens_per_sec(self) -> float:
+        return self.prefill_tokens / max(self.prefill_time, 1e-9)
+
+    @property
+    def decode_tokens_per_sec(self) -> float:
+        return self.decode_tokens / max(self.decode_time, 1e-9)
+
+    def summary(self) -> str:
+        return (
+            f"prefill {self.prefill_tokens} tok / "
+            f"{self.prefill_dispatches} calls "
+            f"({self.prefill_tokens_per_sec:.1f} tok/s) | "
+            f"decode {self.decode_tokens} tok / "
+            f"{self.decode_dispatches} calls "
+            f"({self.decode_tokens_per_sec:.1f} tok/s) | "
+            f"{self.ticks} ticks"
+        )
 
 
 def make_serve_step(
@@ -61,16 +106,55 @@ def make_serve_step(
     )
 
 
-def sample_token(logits: jax.Array, temperature: float, key) -> jax.Array:
-    """logits ``[B, 1, V]`` → ``[B]`` next tokens."""
-    logits = logits[:, -1, :]
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+def make_prefill_step(model: LMModel):
+    """Jitted chunked-prefill
+    ``(params, cache, inputs, cache_index) -> (logits, cache)``, or None
+    when the family has no multi-token prefill path."""
+    if not getattr(model, "supports_prefill", False):
+        return None
+    return jax.jit(model.prefill, donate_argnums=(1,))
+
+
+def sample_tokens(
+    logits: jax.Array, temps: jax.Array, keys: jax.Array
+) -> jax.Array:
+    """Vectorized per-slot sampling.
+
+    logits ``[B, V]``, temps ``[B]`` (≤ 0 ⇒ greedy), keys ``[B, 2]`` —
+    each slot draws from its own RNG stream, so one request's sampling is
+    independent of its batch neighbours.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    drawn = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0.0, drawn, greedy)
+
+
+@jax.jit
+def _sample_wave(
+    logits: jax.Array, temps: jax.Array, keys: jax.Array, mask: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Split-and-sample with per-slot streams: only ``mask`` slots' RNG
+    keys advance, so admitting a request never perturbs a live
+    neighbour's stream. ``logits [B, V]``; returns (tokens, new_keys)."""
+    ks = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
+    new_keys = jnp.where(mask[:, None], ks[:, 0], keys)
+    return sample_tokens(logits, temps, ks[:, 1]), new_keys
+
+
+def _sample_step(
+    logits: jax.Array, temps: jax.Array, keys: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Decode-tick sampling: `_sample_wave` with every slot active.
+    ``logits [B, 1, V]``; returns (tokens, new_keys)."""
+    return _sample_wave(
+        logits[:, -1, :], temps, keys,
+        jnp.ones((keys.shape[0],), bool),
+    )
 
 
 class ServeLoop:
-    """Continuous-batching decode engine over fixed batch slots."""
+    """Continuous-batching chunked-prefill / sparse-decode engine."""
 
     def __init__(
         self,
@@ -81,46 +165,176 @@ class ServeLoop:
         max_len: int = 512,
         eos_token: int = 0,
         rng: Optional[jax.Array] = None,
+        prefill_chunk: int = 64,
     ):
         self.model = model
         self.params = params
         self.batch_slots = batch_slots
         self.max_len = max_len
         self.eos = eos_token
-        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        self.prefill_chunk = max(1, min(prefill_chunk, max_len))
+        self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
+        self.prefill_fn = make_prefill_step(model)
         self.cache = model.init_cache(batch_slots, max_len)
         self.cache_index = jnp.zeros((batch_slots,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.slot_keys = jax.random.split(self._base_rng, batch_slots)
+        self._temps = np.zeros((batch_slots,), np.float32)
         self.pending: List[Request] = []
         self.completed: List[Request] = []
-        self.ticks = 0
+        self.metrics = EngineMetrics()
+
+    @property
+    def ticks(self) -> int:
+        return self.metrics.ticks
 
     # --- API -----------------------------------------------------------
     def submit(self, req: Request):
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens does not fit "
+                f"max_len={self.max_len}"
+            )
         self.pending.append(req)
 
     def _admit(self):
+        chunked, sequential = [], []
+        reset_mask = np.zeros((self.batch_slots,), bool)
         for i in range(self.batch_slots):
             if self.slots[i] is None and self.pending:
                 req = self.pending.pop(0)
                 self.slots[i] = req
-                # Prefill: feed prompt tokens one by one through the same
-                # decode step (functionally exact; a production server
-                # would use the chunked-prefill path of `model.apply`).
+                # per-request RNG stream: deterministic in uid, not in
+                # what else happens to share the batch.
+                self.slot_keys = self.slot_keys.at[i].set(
+                    jax.random.fold_in(self._base_rng, req.uid)
+                )
+                self._temps[i] = req.temperature
                 self.cache_index = self.cache_index.at[i].set(0)
-                for tok in req.prompt[:-1]:
-                    self._advance_slot(i, tok)
-                req._next_input = req.prompt[-1] if req.prompt else self.eos
+                reset_mask[i] = True
+                if self.prefill_fn is not None and len(req.prompt) > 1:
+                    chunked.append((i, req))
+                else:
+                    sequential.append((i, req))
+        if reset_mask.any():
+            # recurrent families: admitted slots must not inherit their
+            # previous occupants' accumulated state (no-op for
+            # positional KV caches); one combined-mask pass per wave.
+            self.cache = self.model.reset_decode_slots(
+                self.cache, jnp.asarray(reset_mask)
+            )
+        if sequential:
+            self._sequential_prefill_wave(sequential)
+        if chunked:
+            self._prefill_slots(chunked)
 
-    def _advance_slot(self, slot: int, token: int):
-        tokens = jnp.zeros((self.batch_slots, 1), jnp.int32)
-        tokens = tokens.at[slot, 0].set(token)
-        logits, self.cache = self.step_fn(
-            self.params, self.cache, {"tokens": tokens}, self.cache_index
+    def _prefill_slots(self, admitted):
+        """Batched chunked prefill for every slot admitted this tick:
+        chunk c of all admitted prompts rides one jitted call, so a
+        full admission wave costs ceil(max_L/C) dispatches — not
+        sum(ceil(L_i/C)). The first generated token per slot is sampled
+        straight off that slot's final prefill chunk."""
+        C = self.prefill_chunk
+        t0 = time.perf_counter()
+        n_chunks = max(
+            -(-len(req.prompt) // C) for _, req in admitted
         )
-        self.cache_index = self.cache_index.at[slot].add(1)
-        return logits
+        last_logits = {}
+        for c in range(n_chunks):
+            lo = c * C
+            toks = np.zeros((self.batch_slots, C), np.int32)
+            # position sentinel max_len ⇒ no cache write, output ignored
+            # (idle slots, already-finished prompts and ragged tails all
+            # share one compiled shape).
+            pos = np.full((self.batch_slots, C), self.max_len, np.int32)
+            for i, req in admitted:
+                part = req.prompt[lo:lo + C]
+                if part:
+                    toks[i, :len(part)] = part
+                    pos[i, :len(part)] = lo + np.arange(len(part))
+            logits, self.cache = self.prefill_fn(
+                self.params, self.cache,
+                {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos)},
+                self.cache_index,
+            )
+            self.metrics.prefill_dispatches += 1
+            for i, req in admitted:
+                length = len(req.prompt)
+                if lo < length <= lo + C:  # this slot's final chunk
+                    last_logits[i] = logits[i, length - 1 - lo]
+        # jax dispatch is async: sync before stopping the clock so the
+        # prefill/decode throughput split reflects device time, not
+        # dispatch time.
+        jax.block_until_ready(list(last_logits.values()))
+        for i, req in admitted:
+            self.cache_index = self.cache_index.at[i].set(len(req.prompt))
+            self.metrics.prefill_tokens += len(req.prompt)
+        self.metrics.prefill_time += time.perf_counter() - t0
+        # sample every admitted slot's first token in one batched call
+        zero_row = jnp.zeros_like(next(iter(last_logits.values())))
+        logits_mat = jnp.stack([
+            last_logits.get(i, zero_row) for i in range(self.batch_slots)
+        ])
+        mask = np.zeros((self.batch_slots,), bool)
+        for i, _ in admitted:
+            mask[i] = True
+        toks, self.slot_keys = _sample_wave(
+            logits_mat, jnp.asarray(self._temps), self.slot_keys,
+            jnp.asarray(mask),
+        )
+        toks = jax.device_get(toks)
+        for i, req in admitted:
+            self._commit_token(i, req, int(toks[i]))
+
+    def _sequential_prefill_wave(self, admitted):
+        """Token-by-token admission for models without a chunked-prefill
+        path (recurrent families) and ≤1-token prompts. All admitted
+        slots march together: token t of every prompt rides one
+        whole-batch decode step, so a wave costs max(L_i)-1 dispatches,
+        not sum(L_i)-k. The `active` mask gates recurrent-state updates
+        to exactly the slots that consumed a token, so live decode
+        neighbours are never advanced on garbage inputs."""
+        t0 = time.perf_counter()
+        n_steps = max(len(req.prompt) - 1 for _, req in admitted)
+        logits = None
+        for t in range(max(n_steps, 0)):
+            tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
+            active = np.zeros((self.batch_slots,), bool)
+            for i, req in admitted:
+                if t < len(req.prompt) - 1:
+                    tokens[i, 0] = req.prompt[t]
+                    active[i] = True
+            logits, self.cache = self.step_fn(
+                self.params, self.cache,
+                {"tokens": jnp.asarray(tokens),
+                 "active": jnp.asarray(active)},
+                self.cache_index,
+            )
+            self.cache_index = self.cache_index + jnp.asarray(
+                active, jnp.int32
+            )
+            self.metrics.prefill_dispatches += 1
+            self.metrics.prefill_tokens += int(active.sum())
+        if logits is not None:
+            jax.block_until_ready(logits)
+        self.metrics.prefill_time += time.perf_counter() - t0
+        for i, req in admitted:
+            req._next_input = req.prompt[-1] if req.prompt else self.eos
+
+    def _commit_token(self, i: int, req: Request, tok: int):
+        req.tokens_out.append(tok)
+        req._next_input = tok
+        limit = min(
+            req.max_new_tokens,
+            self.max_len - len(req.prompt) - 1,
+        )
+        if tok == self.eos or len(req.tokens_out) >= limit:
+            req.done = True
+            self.completed.append(req)
+            self.slots[i] = None
+            self._temps[i] = 0.0
+            self.cache_index = self.cache_index.at[i].set(0)
 
     def tick(self):
         """One engine iteration: admit, decode one token for all slots."""
@@ -128,39 +342,28 @@ class ServeLoop:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return
-        tokens = jnp.array(
-            [[self.slots[i]._next_input if self.slots[i] else self.eos]
-             for i in range(self.batch_slots)],
-            jnp.int32,
-        )
-        logits, self.cache = self.step_fn(
-            self.params, self.cache, {"tokens": tokens}, self.cache_index
-        )
-        self.cache_index = self.cache_index + jnp.array(
-            [1 if self.slots[i] else 0 for i in range(self.batch_slots)],
-            jnp.int32,
-        )
-        self.rng, key = jax.random.split(self.rng)
-        temps = [self.slots[i].temperature if self.slots[i] else 0.0
-                 for i in range(self.batch_slots)]
-        next_tokens = jax.device_get(
-            sample_token(logits, max(temps), key)
-        )
+        t0 = time.perf_counter()
+        tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
+        active = np.zeros((self.batch_slots,), bool)
         for i in live:
-            req = self.slots[i]
-            tok = int(next_tokens[i])
-            req.tokens_out.append(tok)
-            req._next_input = tok
-            limit = min(
-                req.max_new_tokens,
-                self.max_len - len(req.prompt) - 1,
-            )
-            if tok == self.eos or len(req.tokens_out) >= limit:
-                req.done = True
-                self.completed.append(req)
-                self.slots[i] = None
-                self.cache_index = self.cache_index.at[i].set(0)
-        self.ticks += 1
+            tokens[i, 0] = self.slots[i]._next_input
+            active[i] = True
+        logits, self.cache = self.step_fn(
+            self.params, self.cache,
+            {"tokens": jnp.asarray(tokens), "active": jnp.asarray(active)},
+            self.cache_index,
+        )
+        self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
+        next_tokens, self.slot_keys = _sample_step(
+            logits, jnp.asarray(self._temps), self.slot_keys
+        )
+        next_tokens = jax.device_get(next_tokens)
+        self.metrics.decode_dispatches += 1
+        self.metrics.decode_time += time.perf_counter() - t0
+        for i in live:
+            self.metrics.decode_tokens += 1
+            self._commit_token(i, self.slots[i], int(next_tokens[i]))
+        self.metrics.ticks += 1
 
     def run_until_drained(self, max_ticks: int = 10_000):
         while (self.pending or any(self.slots)) and self.ticks < max_ticks:

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import make_mesh_compat
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 
@@ -24,6 +26,7 @@ def run_subprocess(body: str) -> dict:
         import json
         import jax, jax.numpy as jnp
         import numpy as np
+        from repro.launch.mesh import make_mesh_compat
         """
     ) + textwrap.dedent(body)
     env = dict(os.environ)
@@ -43,9 +46,8 @@ class TestShardingRules:
         from repro.distributed import sharding as shd
         from repro.models import LMModel
 
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        mesh = make_mesh_compat(
+            (1, 1), ("data", "model")
         )
         for arch in ARCH_NAMES:
             model = LMModel(get_smoke_config(arch))
@@ -56,9 +58,8 @@ class TestShardingRules:
     def test_divisibility_guard(self):
         from repro.distributed import sharding as shd
 
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        mesh = make_mesh_compat(
+            (1, 1), ("data", "model")
         )
 
         class Leaf:
@@ -78,8 +79,7 @@ class TestPipelineParallel:
         result = run_subprocess("""
         from repro.distributed.pipeline import (
             pipeline_forward, split_layers_to_stages)
-        mesh = jax.make_mesh((4,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((4,), ("pod",))
         L, d = 8, 16
         ws = jax.random.normal(jax.random.PRNGKey(0), (L, d, d)) * d**-0.5
         def stage_fn(params, x):
@@ -98,8 +98,7 @@ class TestGradientCompression:
     def test_error_feedback_telescopes(self):
         result = run_subprocess("""
         from repro.distributed import compression as comp
-        mesh = jax.make_mesh((4,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh_compat((4,), ("data",))
         g = jax.random.normal(jax.random.PRNGKey(0), (128,))
         acc = jnp.zeros_like(g); err = jnp.zeros_like(g)
         for _ in range(25):
@@ -150,8 +149,7 @@ class TestShardedTrainStep:
         }
         loss_ref = float(model.loss(params, batch)[0])
 
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((4, 2), ("data", "model"))
         shd.set_active_mesh(mesh)
         p_shard = shd.param_shardings(params, mesh)
         b_shard = shd.batch_shardings(batch, mesh)
@@ -170,8 +168,7 @@ class TestShardedTrainStep:
         result = run_subprocess("""
         from repro.models import moe as M
         from repro.distributed import sharding as shd
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((2, 4), ("data", "model"))
         cfg = M.MoEConfig(num_experts=8, experts_per_token=2, d_model=32,
                           d_ff=16, capacity_factor=8.0)
         p = M.init_moe(jax.random.PRNGKey(0), cfg)
@@ -191,9 +188,8 @@ class TestElastic:
 
         params = {"w": np.random.default_rng(0).normal(size=(8, 4)).astype(
             np.float32)}
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        mesh = make_mesh_compat(
+            (1, 1), ("data", "model")
         )
         dev = elastic.reshard_params(params, mesh)
         back = elastic.gather_params(dev)

@@ -3,7 +3,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # optional dev dep — property cases skip
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import filtering as flt
 from repro.core import sparse_attention as spa
