@@ -12,6 +12,7 @@ tokens/s as separate rows.
 
 from __future__ import annotations
 
+import json
 import time
 
 import jax
@@ -80,6 +81,7 @@ def run_serving_engine(
     prefill_chunk: int = 16,
     new_tokens: int = 16,
     n_requests: int = 8,
+    pruning_ratio: float = 4.0,
 ):
     """End-to-end engine throughput: prefill vs decode, measured apart."""
     cfg = ModelConfig(
@@ -87,7 +89,8 @@ def run_serving_engine(
         num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
         vocab_size=256, dtype="float32", remat="none",
         energon=EnergonConfig(impl="mpmrf_block", min_prune_layer=1,
-                              pruning_ratio=4.0, decode_key_block=32),
+                              pruning_ratio=pruning_ratio,
+                              decode_key_block=32),
     )
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
@@ -109,6 +112,99 @@ def run_serving_engine(
                               max_new_tokens=new_tokens))
     engine.run_until_drained()
     return engine.metrics
+
+
+def _decode_step_traffic(
+    *, filter_cache: bool, max_len: int, batch: int = 2
+) -> float:
+    """Per-decode-step HLO traffic bytes (post-fusion, whole model).
+
+    Lowers the jitted one-token ``decode_step`` and walks the compiled
+    HLO with ``analysis/hlo_costs`` — the while-loop-aware parser, so
+    the scan-over-layers body is counted per layer. This is the number
+    the filter-cache tentpole moves: with the persistent quantized
+    cache, the per-step filter reads resident int16 planes instead of
+    re-quantizing the O(max_len·d) cache.
+    """
+    from repro.analysis import hlo_costs
+
+    cfg = ModelConfig(
+        name="bench-decode-hlo", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, dtype="float32", remat="none",
+        energon=EnergonConfig(
+            impl="mpmrf_block", min_prune_layer=0, pruning_ratio=4.0,
+            decode_key_block=64, filter_cache=filter_cache,
+        ),
+    )
+    model = LMModel(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    inputs = {
+        "tokens": jax.ShapeDtypeStruct((batch, 1), jnp.int32),
+    }
+    ci = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    compiled = (
+        jax.jit(model.decode_step)
+        .lower(params, cache, inputs, ci)
+        .compile()
+    )
+    return float(hlo_costs.costs_from_compiled(compiled).traffic_bytes)
+
+
+def run_decode_bench(
+    *,
+    max_len: int = 1024,
+    engine_max_len: int = 256,
+    prompt_len: int = 48,
+    new_tokens: int = 16,
+    n_requests: int = 6,
+) -> dict:
+    """Machine-readable decode-perf record (written to BENCH_decode.json).
+
+    Tracks the quantities the perf trajectory cares about from this PR
+    on: per-decode-step HLO traffic with the persistent filter cache vs
+    the re-quantize-every-step baseline (at ``max_len`` rows), and the
+    serving engine's prefill/decode tok/s at ρ=1 (keep-everything
+    contract) and ρ=4 (the paper's headline pruning ratio).
+    """
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "hlo": {"max_len": max_len},
+        "engine": {},
+    }
+    cached = _decode_step_traffic(filter_cache=True, max_len=max_len)
+    fresh = _decode_step_traffic(filter_cache=False, max_len=max_len)
+    record["hlo"]["decode_step_bytes_filter_cache"] = cached
+    record["hlo"]["decode_step_bytes_requantize"] = fresh
+    record["hlo"]["bytes_saved_per_step"] = fresh - cached
+    record["hlo"]["traffic_ratio"] = cached / max(fresh, 1.0)
+
+    for label, ratio in (("rho1", 1.0), ("rho4", 4.0)):
+        m = run_serving_engine(
+            max_len=engine_max_len, prompt_len=prompt_len,
+            new_tokens=new_tokens, n_requests=n_requests,
+            pruning_ratio=ratio,
+        )
+        record["engine"][label] = {
+            "pruning_ratio": ratio,
+            "prefill_tok_s": m.prefill_tokens_per_sec,
+            "decode_tok_s": m.decode_tokens_per_sec,
+            **{
+                f: getattr(m, f)
+                for f in ("prefill_tokens", "decode_tokens",
+                          "prefill_dispatches", "decode_dispatches")
+            },
+        }
+    return record
+
+
+def write_decode_json(path: str = "BENCH_decode.json", **kw) -> dict:
+    record = run_decode_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
 
 
 def main(emit):
@@ -134,4 +230,30 @@ def main(emit):
         f"decode_tok_s={m.decode_tokens_per_sec:.1f} "
         f"tokens={m.decode_tokens} dispatches={m.decode_dispatches}",
     )
+    # aggregate runner: emit the trajectory numbers without dropping a
+    # JSON file into the cwd (the __main__ CLI / CI smoke writes it)
+    rec = run_decode_bench()
+    emit(
+        "decode_step_hlo_bytes",
+        rec["hlo"]["decode_step_bytes_filter_cache"],
+        f"requantize={rec['hlo']['decode_step_bytes_requantize']:.0f} "
+        f"ratio={rec['hlo']['traffic_ratio']:.3f}",
+    )
     return rows
+
+
+if __name__ == "__main__":
+    # Standalone decode-bench entry (CI smoke): writes BENCH_decode.json.
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_decode.json")
+    ap.add_argument("--max-len", type=int, default=1024)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+    out = write_decode_json(
+        args.json, max_len=args.max_len, n_requests=args.requests,
+        new_tokens=args.new_tokens,
+    )
+    print(json.dumps(out, indent=2, sort_keys=True))

@@ -2,6 +2,7 @@
 
 from repro.core.energon_attention import (  # noqa: F401
     EnergonConfig,
+    decode_live_budget,
     energon_attention,
     energon_decode_attention,
 )
@@ -9,6 +10,7 @@ from repro.core.filtering import (  # noqa: F401
     FilterResult,
     MPMRFConfig,
     causal_valid_mask,
+    decode_block_tier_select,
     eq3_threshold,
     mpmrf_block_select,
     mpmrf_decode_block_select,
@@ -17,9 +19,11 @@ from repro.core.filtering import (  # noqa: F401
 )
 from repro.core.quantization import (  # noqa: F401
     QuantizedTensor,
+    blockwise_quantized_view,
     fake_quantize,
     low_bit_scores,
     quantize_int16,
+    quantize_int16_blocks,
 )
 from repro.core.sparse_attention import (  # noqa: F401
     block_gather_attention,

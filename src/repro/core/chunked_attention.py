@@ -13,6 +13,8 @@ All functions take ``[B, H, n, d]`` operands.
 
 from __future__ import annotations
 
+import math
+
 from typing import Optional, Tuple
 
 import jax
@@ -331,7 +333,7 @@ def energon_block_attention_chunked(
 ) -> jax.Array:
     """Full MP-MRF block pipeline, memory-bounded: filter → select → AU."""
     n_kb = k.shape[-2] // key_block
-    budget = max(1, int(round(n_kb / pruning_ratio)))
+    budget = max(1, math.ceil(n_kb / pruning_ratio))
     s0, s1, valid = mpmrf_block_scores_chunked(
         q, k, round_bits,
         query_block=query_block, key_block=key_block,

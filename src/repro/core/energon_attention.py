@@ -19,7 +19,8 @@ GQA head-group mapping happens in ``repro.models.attention``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import math
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +48,12 @@ class EnergonConfig:
     # little selection sharpness for gather granularity). 0 disables the
     # block decode path (row-granular filtering over the full cache).
     decode_key_block: int = 64
+    # Carry persistent int16 K codes + per-key-block scales in the
+    # decode cache (written once at prefill scatter / decode append) so
+    # every decode step's MP-MRF filter reads resident integer planes
+    # instead of re-quantizing the whole padded cache (§IV-B premise:
+    # filtering must stay cheap relative to attention).
+    filter_cache: bool = True
     keep_first: bool = True
     keep_diagonal: bool = True
     reuse_partial: bool = True
@@ -57,10 +64,21 @@ class EnergonConfig:
     # (the [n_q, n_k] score tensor would be ≥64 MB/head at f32).
     chunk_threshold: int = 2048 * 2048
 
+    @property
+    def uses_decode_block(self) -> bool:
+        """True when the block-granular decode path can engage at all."""
+        return self.impl in ("mpmrf_block", "pallas") and \
+            self.decode_key_block > 0
+
+    @property
+    def uses_filter_cache(self) -> bool:
+        """True when decode caches should carry quantized filter planes."""
+        return self.filter_cache and self.uses_decode_block
+
     def mpmrf(self, granularity: str, n_kb: Optional[int] = None) -> flt.MPMRFConfig:
         budget = None
         if granularity == "block" and n_kb is not None:
-            budget = max(1, int(round(n_kb / self.pruning_ratio)))
+            budget = max(1, math.ceil(n_kb / self.pruning_ratio))
         return flt.MPMRFConfig(
             round_bits=self.round_bits,
             alphas=self.alphas,
@@ -237,7 +255,7 @@ def energon_attention(
 
         batch, heads, _, d = q.shape
         n_kb = n_k // cfg.key_block
-        budget = max(1, int(round(n_kb / cfg.pruning_ratio)))
+        budget = max(1, math.ceil(n_kb / cfg.pruning_ratio))
         qf = q.reshape(batch * heads, n_q, d)
         kf = k.reshape(batch * heads, n_k, d)
         vf = v.reshape(batch * heads, n_k, d)
@@ -266,6 +284,23 @@ def energon_attention(
     raise ValueError(f"unknown Energon impl: {cfg.impl}")
 
 
+def decode_live_budget(
+    cache_length: jax.Array, key_block: int, pruning_ratio: float
+) -> jax.Array:
+    """Per-slot effective block budget ``ceil(ceil(len/bk) / ρ)``.
+
+    The static gather width must come from the *padded* cache (shapes),
+    but the number of blocks a slot actually keeps must come from its
+    *live* length — otherwise a long max_len silently drives the
+    effective pruning ratio toward 1 (budget ≥ live blocks ⇒ dense).
+    """
+    live_blocks = (cache_length + key_block - 1) // key_block
+    lb = jnp.ceil(
+        live_blocks.astype(jnp.float32) / max(pruning_ratio, 1e-6)
+    ).astype(jnp.int32)
+    return jnp.maximum(lb, 1)
+
+
 def energon_decode_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -276,6 +311,7 @@ def energon_decode_attention(
     layer_index: int = 10**9,
     window: Optional[int] = None,
     scale: Optional[float] = None,
+    filter_cache: Optional[Dict[str, jax.Array]] = None,
 ) -> jax.Array:
     """One-token decode attention over a (padded) KV cache.
 
@@ -285,8 +321,22 @@ def energon_decode_attention(
     group rows, all at the same position); caches ``[B, H, n, d]``;
     cache_length: ``[B]`` int32 — number of valid cache entries.
 
-    Two sparse paths (DESIGN.md §3):
+    ``filter_cache`` (optional) carries the persistent quantized filter
+    operands maintained by the serving cache (DESIGN.md §3):
+    ``{"codes": int16 [B, H, n, d], "scale": f32 [B, H, n // bk]}``.
+    When present, the MP-MRF rounds read these resident planes instead
+    of re-quantizing ``k_cache`` — the per-step filter drops from an
+    O(max_len·d) quantize + rescale chain to integer mat-vecs on data
+    already in cache layout. The invariant (block == fresh per-block
+    quantization) makes cached and fresh selection bit-identical.
 
+    Three sparse paths (DESIGN.md §3):
+
+    * **pallas** (``impl`` pallas, no window, filter cache resident):
+      fused decode kernel — two-round shift-and-add scoring straight
+      off the cached planes and block-gather flash attention behind a
+      scalar-prefetch survivor table, so unselected K/V blocks never
+      leave HBM. Interpret mode is the CPU fallback.
     * **block** (``impl`` mpmrf_block/pallas, cache divisible by
       ``cfg.decode_key_block``): pool the cache into key blocks, select
       top-B via MP-MRF, and *gather* only the survivors — FLOPs/bytes
@@ -316,7 +366,40 @@ def energon_decode_attention(
     )
     if use_block:
         n_kb = n_k // bk
-        budget = max(1, int(round(n_kb / cfg.pruning_ratio)))
+        budget = max(1, math.ceil(n_kb / cfg.pruning_ratio))
+        keep_all = cfg.pruning_ratio <= 1.0
+        live_budget = None
+        if not keep_all:
+            live_budget = decode_live_budget(
+                cache_length, bk, cfg.pruning_ratio
+            )
+
+        if (
+            cfg.impl == "pallas"
+            and filter_cache is not None
+            and window is None
+            and len(cfg.round_bits) == 2
+            # the fused kernel hard-codes Fig. 7 result reuse; the
+            # independent-rescore variant must take the XLA path
+            and cfg.reuse_partial
+        ):
+            from repro.kernels import ops as kops
+
+            return kops.fused_decode_attention(
+                q, k_cache, v_cache,
+                filter_cache["codes"], filter_cache["scale"],
+                cache_length,
+                round_bits=cfg.round_bits,
+                alphas=cfg.alphas,
+                key_block=bk,
+                block_budget=budget,
+                keep_all=keep_all,
+                keep_first=cfg.keep_first,
+                keep_diagonal=cfg.keep_diagonal,
+                live_budget=live_budget,
+                scale=scale,
+            )
+
         mcfg = flt.MPMRFConfig(
             round_bits=cfg.round_bits,
             alphas=cfg.alphas,
@@ -327,10 +410,18 @@ def energon_decode_attention(
             keep_first=cfg.keep_first,
             keep_diagonal=cfg.keep_diagonal,
             reuse_partial=cfg.reuse_partial,
-            keep_all=cfg.pruning_ratio <= 1.0,
+            keep_all=keep_all,
         )
+        k_quant = None
+        if filter_cache is not None:
+            from repro.core import quantization as qlib
+
+            k_quant = qlib.blockwise_quantized_view(
+                filter_cache["codes"], filter_cache["scale"], bk
+            )
         res = flt.mpmrf_decode_block_select(
-            q, k_cache, mcfg, valid, cache_length
+            q, k_cache, mcfg, valid, cache_length,
+            k_quant=k_quant, live_budget=live_budget,
         )
         return spa.decode_block_gather_attention(
             q, k_cache, v_cache, res.block_indices, res.block_valid,

@@ -349,12 +349,86 @@ def mpmrf_block_select(
     )
 
 
+def decode_block_tier_select(
+    blk_scores: jax.Array,
+    blk_keep: jax.Array,
+    blk_valid: jax.Array,
+    newest_block: jax.Array,
+    budget: int,
+    *,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    live_budget: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact-budget decode selection shared by the XLA and Pallas paths.
+
+    Tiered selection on integer keys: pinned ≫ survivors ≫ budget
+    fill ≫ invalid, ordered by final-round score rank inside each
+    tier. (A float offset like ``score - 1e15`` would absorb the score
+    in f32 — its ulp there is ~1e8 — silently degrading fill order to
+    block-index order.) key = tier·n_kb + (n_kb-1-rank) stays exact.
+
+    Args:
+      blk_scores: ``[..., n_kb]`` final-round real-unit block scores.
+      blk_keep: bool ``[..., n_kb]`` threshold survivors.
+      blk_valid: bool ``[..., n_kb]`` cache-length validity.
+      newest_block: int, broadcastable to ``[...]`` — the block holding
+        the newest token (the decode-time diagonal).
+      budget: static number of selected blocks (gather width).
+      live_budget: optional int32, broadcastable to ``[...]`` — the
+        per-slot effective budget ``ceil(live_blocks / ρ)``. Budget
+        slots at rank ≥ live_budget are marked invalid (pinned blocks
+        are exempt), so the *effective* pruning ratio tracks ρ no matter
+        how much cache padding the static shape carries.
+
+    Returns:
+      ``(block_indices, block_valid)`` int32 ``[..., budget]``.
+    """
+    n_kb = blk_scores.shape[-1]
+    order = jnp.argsort(-jnp.where(blk_valid, blk_scores, NEG_INF), axis=-1)
+    rank = jnp.argsort(order, axis=-1)       # rank 0 = best score
+    tier = blk_valid.astype(jnp.int32)       # valid fill candidates = 1
+    tier = jnp.where(blk_keep, 2, tier)      # threshold survivors = 2
+    kb_ids = jnp.arange(n_kb)
+    if keep_first:
+        tier = jnp.where(
+            jnp.logical_and(kb_ids == 0, blk_valid), 3, tier
+        )
+    if keep_diagonal:
+        nb = jnp.asarray(newest_block)[..., None]
+        tier = jnp.where(
+            jnp.logical_and(kb_ids == nb, blk_valid), 3, tier
+        )
+
+    b = min(budget, n_kb)
+    sel_key = tier * n_kb + (n_kb - 1 - rank)
+    top_keys, block_indices = jax.lax.top_k(sel_key, b)
+    block_valid = top_keys >= n_kb                       # tier >= 1
+    if live_budget is not None:
+        # Slots beyond the live budget carry no pruning win (the gather
+        # is static) but must not attend, or padding would silently
+        # drive the effective ratio to 1. Pinned blocks stay.
+        slot = jnp.arange(b)
+        in_live = slot < jnp.asarray(live_budget)[..., None]
+        pinned = top_keys >= 3 * n_kb
+        block_valid = jnp.logical_and(
+            block_valid, jnp.logical_or(in_live, pinned)
+        )
+    block_valid = block_valid.astype(jnp.int32)
+    block_indices = jnp.where(
+        block_valid > 0, block_indices, 0
+    ).astype(jnp.int32)
+    return block_indices, block_valid
+
+
 def mpmrf_decode_block_select(
     q: jax.Array,
     k_cache: jax.Array,
     cfg: MPMRFConfig,
     valid: jax.Array,
     cache_length: jax.Array,
+    k_quant: Optional[qlib.QuantizedTensor] = None,
+    live_budget: Optional[jax.Array] = None,
 ) -> FilterResult:
     """Block-granular MP-MRF over a padded KV cache (decode, §IV-D l=1).
 
@@ -364,12 +438,24 @@ def mpmrf_decode_block_select(
     GQA group shares one selection so each K/V block is gathered once per
     KV head).
 
+    K quantization is **per key block** (one absmax scale per block,
+    :func:`repro.core.quantization.quantize_int16_blocks`): a block's
+    codes depend only on its own rows, so serving caches keep the codes
+    and scales resident and pass them in as ``k_quant`` — the per-step
+    filter cost is then a read of resident integer planes instead of an
+    O(max_len·d) re-quantization. When ``k_quant`` is given it must obey
+    the cache invariant (block == fresh per-block quantization of the
+    same float rows); this function then never touches ``k_cache``'s
+    float values.
+
     Selection is **exact-budget**: threshold survivors rank first and any
     unused budget slots are filled with the next-best valid blocks. The
     gather cost is static in ``budget`` either way, so filling is free
     and strictly improves top-k coverage; with ``budget >= n_valid``
     every valid block is kept and the gathered attention is exactly
-    dense — the pruning_ratio=1 contract (DESIGN.md §3).
+    dense — the pruning_ratio=1 contract (DESIGN.md §3). ``live_budget``
+    (``[B]`` int32) caps the number of non-pinned survivors per slot so
+    cache padding cannot inflate the effective keep rate.
 
     Args:
       q: ``[..., n_q, d]`` query rows, all at position cache_length-1
@@ -380,6 +466,9 @@ def mpmrf_decode_block_select(
       valid: bool, broadcastable to ``[..., n_q, n_k]`` — cache-length
         and window validity.
       cache_length: ``[B]`` true lengths; leading axis of q is B.
+      k_quant: optional resident quantized cache view
+        (:func:`repro.core.quantization.blockwise_quantized_view`).
+      live_budget: optional ``[B]`` per-slot effective budget.
 
     Returns:
       FilterResult with ``block_indices``/``block_valid`` of shape
@@ -396,7 +485,11 @@ def mpmrf_decode_block_select(
     valid = jnp.broadcast_to(valid, q.shape[:-1] + (n_k,))
 
     q16 = qlib.quantize_int16(q, axis=-1)
-    k16 = qlib.quantize_int16(k_cache, axis=(-2, -1))
+    if k_quant is None:
+        codes, scales = qlib.quantize_int16_blocks(k_cache, bk)
+        k16 = qlib.blockwise_quantized_view(codes, scales, bk)
+    else:
+        k16 = k_quant
     blk_keep = None
     blk_scores = None
     blk_valid = None
@@ -413,36 +506,19 @@ def mpmrf_decode_block_select(
             blk_keep = jnp.logical_and(blk_keep, blk_scores >= theta)
         per_round.append(blk_keep)
 
-    # Tiered selection on integer keys: pinned ≫ survivors ≫ budget
-    # fill ≫ invalid, ordered by final-round score rank inside each
-    # tier. (A float offset like `score - 1e15` would absorb the score
-    # in f32 — its ulp there is ~1e8 — silently degrading fill order to
-    # block-index order.) key = tier·n_kb + (n_kb-1-rank) stays exact.
-    order = jnp.argsort(-jnp.where(blk_valid, blk_scores, NEG_INF), axis=-1)
-    rank = jnp.argsort(order, axis=-1)       # rank 0 = best score
-    tier = blk_valid.astype(jnp.int32)       # valid fill candidates = 1
-    tier = jnp.where(blk_keep, 2, tier)      # threshold survivors = 2
-    kb_ids = jnp.arange(n_kb)
-    if cfg.keep_first:
-        tier = jnp.where(
-            jnp.logical_and(kb_ids == 0, blk_valid), 3, tier
-        )
-    if cfg.keep_diagonal:
-        # decode-time diagonal: the block holding the newest token
-        batch = cache_length.shape[0]
-        last = (cache_length - 1) // bk
-        last = last.reshape((batch,) + (1,) * (tier.ndim - 1))
-        tier = jnp.where(
-            jnp.logical_and(kb_ids == last, blk_valid), 3, tier
-        )
-
-    b = min(budget, n_kb)
-    sel_key = tier * n_kb + (n_kb - 1 - rank)
-    top_keys, block_indices = jax.lax.top_k(sel_key, b)
-    block_valid = (top_keys >= n_kb).astype(jnp.int32)  # tier >= 1
-    block_indices = jnp.where(
-        block_valid > 0, block_indices, 0
-    ).astype(jnp.int32)
+    # decode-time diagonal: the block holding the newest token
+    batch = cache_length.shape[0]
+    newest = ((cache_length - 1) // bk).reshape(
+        (batch,) + (1,) * (blk_scores.ndim - 2)
+    )
+    lb = None
+    if live_budget is not None:
+        lb = live_budget.reshape((batch,) + (1,) * (blk_scores.ndim - 2))
+    block_indices, block_valid = decode_block_tier_select(
+        blk_scores, blk_keep, blk_valid, newest, budget,
+        keep_first=cfg.keep_first, keep_diagonal=cfg.keep_diagonal,
+        live_budget=lb,
+    )
 
     denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
     frac = jnp.stack(

@@ -120,6 +120,67 @@ def quantize_int16(
     return QuantizedTensor(codes=codes, scale=scale, axis=axis)
 
 
+def quantize_int16_blocks(
+    x: jax.Array,
+    block: int,
+    eps: float = 1e-8,
+) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int16 quantization with one scale per ``block`` rows.
+
+    The decode filter-cache layout: keys live in a padded cache pooled
+    into key blocks of ``block`` tokens, and each block carries its own
+    absmax scale. Unlike the per-head scale of :func:`quantize_int16`
+    (a global reduction over the whole cache — non-incremental by
+    construction), a block's (codes, scale) pair depends only on that
+    block's rows, so a decode append re-quantizes exactly one block and
+    the invariant "cached block == fresh quantization of that block"
+    holds bit-exactly at every step.
+
+    Args:
+      x: ``[..., n, d]`` float tensor, ``n`` divisible by ``block``.
+      block: rows per scale group.
+      eps: numerical floor for the scale.
+
+    Returns:
+      ``(codes, block_scales)`` — int16 codes ``[..., n, d]`` and float32
+      scales ``[..., n // block]``.
+    """
+    *lead, n, d = x.shape
+    if n % block:
+        raise ValueError(f"rows {n} not divisible by block {block}")
+    xb = x.astype(jnp.float32).reshape(*lead, n // block, block, d)
+    absmax = jnp.max(jnp.abs(xb), axis=(-2, -1), keepdims=True)
+    scale = jnp.maximum(absmax, eps) / INT16_LEVELS
+    codes = jnp.clip(
+        jnp.round(xb / scale), -INT16_LEVELS, INT16_LEVELS
+    ).astype(jnp.int16)
+    return codes.reshape(*lead, n, d), scale[..., 0, 0]
+
+
+def blockwise_quantized_view(
+    codes: jax.Array, block_scales: jax.Array, block: int
+) -> QuantizedTensor:
+    """Wrap cached block-quantized codes as a :class:`QuantizedTensor`.
+
+    The per-block scales are broadcast to per-row keepdims shape
+    ``[..., n, 1]`` so the standard plane/rescale pipeline
+    (:func:`repro.core.filtering._round_score_planes`,
+    :func:`rescale_scores`) consumes cached operands unchanged — every
+    row of a block shares its block's dequantization scale. Codes are
+    widened to int32 (the storage convention for safe shifting).
+    """
+    n = codes.shape[-2]
+    if n % block or block_scales.shape[-1] != n // block:
+        raise ValueError(
+            f"codes rows {n} / block {block} mismatch scales "
+            f"{block_scales.shape}"
+        )
+    row_scale = jnp.repeat(block_scales, block, axis=-1)[..., None]
+    return QuantizedTensor(
+        codes=codes.astype(jnp.int32), scale=row_scale, axis=(-2, -1)
+    )
+
+
 def fake_quantize(x: jax.Array, bits: int, axis: Axes = -1) -> jax.Array:
     """Quantize→truncate→dequantize round trip at ``bits`` precision.
 

@@ -309,9 +309,17 @@ def cache_pspec(path, leaf, mesh: Mesh) -> P:
         dp_size *= mesh.shape[a]
     names = _path_names(path)
     spec = [None] * leaf.ndim
-    is_kv = names and names[-1] in ("k", "v")
+    # quantized filter codes share the KV cache layout (same row axis)
+    is_kv = names and names[-1] in ("k", "v", "k_codes")
     if is_kv and leaf.ndim >= 4:
         return kv_cache_pspec(leaf.shape, mesh)
+    # per-block filter scales [..., B, KV, n_kb]: batch-shard with the
+    # cache (the generic scan below could pick the stacked layer axis)
+    if names and names[-1] == "k_scale" and leaf.ndim >= 3:
+        b_dim = leaf.ndim - 3
+        if leaf.shape[b_dim] % dp_size == 0:
+            spec[b_dim] = dp
+        return P(*spec)
     # SSM / conv states: find a batch-like dim (first dim divisible by dp)
     for d, size in enumerate(leaf.shape):
         if size % dp_size == 0 and size > 1:

@@ -9,5 +9,6 @@ from repro.kernels.ops import (  # noqa: F401
     block_sparse_attention,
     energon_block_attention,
     flash_attention,
+    fused_decode_attention,
     mpmrf_select_blocks,
 )

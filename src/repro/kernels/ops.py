@@ -25,6 +25,7 @@ from repro.core import quantization as qlib
 from repro.core import sparse_attention as spa
 from repro.kernels import block_sparse_attention as bsa_kernel
 from repro.kernels import flash_attention as fa_kernel
+from repro.kernels import mpmrf_decode as dec_kernel
 from repro.kernels import mpmrf_filter as filt_kernel
 
 NEG_INF = -1e30
@@ -156,6 +157,98 @@ def block_sparse_attention(
         causal=causal, q_offset=q_offset, scale=scale,
         interpret=interpret,
     )
+
+
+def fused_decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_codes: jax.Array,
+    k_block_scale: jax.Array,
+    cache_length: jax.Array,
+    *,
+    round_bits: Tuple[int, ...] = (2, 4),
+    alphas: Tuple[float, ...] = (0.0, 0.0),
+    key_block: int = 64,
+    block_budget: int = 8,
+    keep_all: bool = False,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    live_budget: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Pallas decode path over the resident filter cache (l = 1).
+
+    Pipeline: the decode filter kernel scores every key block straight
+    off the cached int16 codes (bit planes derived in-register, Fig. 7
+    shift-and-add), Eq. 3 thresholds + exact-budget tier selection run
+    on the tiny ``[bh, n_kb]`` score planes in XLA (the identical rule
+    the XLA path uses, so selections agree bit-for-bit), and the gather
+    kernel streams *only* the surviving K/V blocks via the
+    scalar-prefetch survivor table — unselected blocks never leave HBM.
+
+    Args:
+      q: ``[B, H, G, d]`` folded GQA query rows (H = KV heads).
+      k_cache, v_cache: ``[B, H, n_k, d]`` padded caches.
+      k_codes: int16 ``[B, H, n_k, d]`` resident filter codes.
+      k_block_scale: f32 ``[B, H, n_kb]`` resident per-block scales.
+      cache_length: int32 ``[B]`` live lengths.
+      live_budget: optional int32 ``[B]`` per-slot effective budget.
+
+    Returns:
+      ``[B, H, G, d]`` attention output (dtype of v_cache).
+    """
+    if len(round_bits) != 2:
+        raise ValueError("fused decode kernel supports 2-round configs")
+    interpret = _default_interpret() if interpret is None else interpret
+    batch, heads, g, d = q.shape
+    n_k = k_cache.shape[-2]
+    bk = key_block
+    n_kb = n_k // bk
+    bh = batch * heads
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    qp = q16.bit_plane(round_bits[-1]).reshape(bh, g, d)
+    qs = q16.scale.reshape(bh, g, 1)
+    cl_bh = jnp.repeat(cache_length.astype(jnp.int32), heads)
+
+    s0, s1 = dec_kernel.mpmrf_decode_filter_scores(
+        qp, qs,
+        k_codes.reshape(bh, n_k, d),
+        k_block_scale.reshape(bh, n_kb),
+        cl_bh,
+        round_bits=tuple(round_bits),
+        key_block=bk,
+        interpret=interpret,
+    )
+
+    blk_valid = s0 > NEG_INF / 2
+    keep = blk_valid
+    if not keep_all:
+        theta0 = flt.eq3_threshold(s0, alphas[0], keep)
+        keep = jnp.logical_and(keep, s0 >= theta0)
+        theta1 = flt.eq3_threshold(s1, alphas[1], keep)
+        keep = jnp.logical_and(keep, s1 >= theta1)
+
+    newest = (cl_bh - 1) // bk
+    lb_bh = None
+    if live_budget is not None:
+        lb_bh = jnp.repeat(live_budget.astype(jnp.int32), heads)
+    idx, val = flt.decode_block_tier_select(
+        s1, keep, blk_valid, newest, block_budget,
+        keep_first=keep_first, keep_diagonal=keep_diagonal,
+        live_budget=lb_bh,
+    )
+
+    out = dec_kernel.decode_gather_attention(
+        q.reshape(bh, g, d),
+        k_cache.reshape(bh, n_k, d),
+        v_cache.reshape(bh, n_k, d),
+        idx, val, cl_bh,
+        key_block=bk, scale=scale, interpret=interpret,
+    )
+    return out.reshape(batch, heads, g, d)
 
 
 @functools.partial(

@@ -153,3 +153,47 @@ def mpmrf_filter_ref(
         return jnp.max(t, axis=(2, 4))
 
     return pool(s0), pool(s1)
+
+
+def mpmrf_decode_filter_ref(
+    q_plane: jax.Array,
+    q_scale: jax.Array,
+    k_codes: jax.Array,
+    k_block_scale: jax.Array,
+    cache_length: jax.Array,
+    *,
+    round_bits: Tuple[int, int],
+    key_block: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused decode filter kernel.
+
+    q_plane ``[bh, G, d]`` int hi-bit plane, q_scale ``[bh, G, 1]``,
+    k_codes ``[bh, n_k, d]`` int16 resident codes, k_block_scale
+    ``[bh, n_kb]``, cache_length ``[bh]``. Returns real-unit block-max
+    score planes ``[bh, n_kb]`` for the two rounds (invalid → -inf),
+    with the rescale association of the XLA pipeline.
+    """
+    lo, hi = round_bits
+    bh, g, d = q_plane.shape
+    n_k = k_codes.shape[-2]
+    bk = key_block
+    codes = k_codes.astype(jnp.int32)
+    msb = jnp.right_shift(codes, 16 - lo)
+    rem = jnp.right_shift(codes, 16 - hi) - jnp.left_shift(msb, hi - lo)
+    qp = q_plane.astype(jnp.int32)
+    acc0 = jnp.einsum("bqd,bkd->bqk", qp, msb)
+    acc1 = jnp.left_shift(acc0, hi - lo) + jnp.einsum(
+        "bqd,bkd->bqk", qp, rem
+    )
+    qs = q_scale.astype(jnp.float32) * float(2 ** (16 - hi))
+    ks = jnp.repeat(k_block_scale, bk, axis=-1)[:, None, :]
+    s0 = (acc0.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - lo)))
+    s1 = (acc1.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - hi)))
+    ok = (jnp.arange(n_k)[None, None, :] < cache_length[:, None, None])
+    s0 = jnp.where(ok, s0, NEG_INF)
+    s1 = jnp.where(ok, s1, NEG_INF)
+
+    def pool(s):
+        return jnp.max(s.reshape(bh, g, n_k // bk, bk), axis=(1, 3))
+
+    return pool(s0), pool(s1)

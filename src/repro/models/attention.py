@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import EnergonConfig, energon_attention, energon_decode_attention
+from repro.core import quantization as qlib
 from repro.distributed import sharding as shd
 from repro.models import layers as L
 
@@ -112,12 +113,70 @@ def attention_block(
 
 
 def init_kv_cache(
-    batch: int, num_kv_heads: int, max_len: int, head_dim: int, dtype
+    batch: int,
+    num_kv_heads: int,
+    max_len: int,
+    head_dim: int,
+    dtype,
+    filter_block: int = 0,
 ) -> Dict[str, jax.Array]:
-    return {
+    """Padded decode cache; ``filter_block > 0`` adds the persistent
+    quantized filter operands (DESIGN.md §3): int16 K codes and one
+    float32 scale per ``filter_block``-token key block, maintained
+    incrementally by the cache writers so decode filtering never
+    re-quantizes the cache. ``max_len`` must then divide into blocks."""
+    cache = {
         "k": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
         "v": jnp.zeros((batch, num_kv_heads, max_len, head_dim), dtype),
     }
+    if filter_block > 0:
+        if max_len % filter_block:
+            raise ValueError(
+                f"max_len {max_len} not divisible by filter block "
+                f"{filter_block}"
+            )
+        cache["k_codes"] = jnp.zeros(
+            (batch, num_kv_heads, max_len, head_dim), jnp.int16
+        )
+        cache["k_scale"] = jnp.zeros(
+            (batch, num_kv_heads, max_len // filter_block), jnp.float32
+        )
+    return cache
+
+
+def _refresh_filter_block(
+    k_cache: jax.Array,
+    codes: jax.Array,
+    scales: jax.Array,
+    pos: jax.Array,
+    block: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Re-quantize only the key block each slot's append touched.
+
+    The incremental-append invariant: after every cache write, block j's
+    (codes, scale) equal a fresh per-block quantization of block j's
+    float rows. A decode append changes exactly one block per slot, so
+    the refresh quantizes ``block · head_dim`` values per KV head —
+    O(1) in context length — and scatters them with a one-hot block
+    mask (same idiom as the float-cache scatter, so the cache layout
+    constraint keeps everything shard-local).
+    """
+    batch, kv, max_len, hd = k_cache.shape
+    n_kb = max_len // block
+    blk = jnp.clip(pos, 0, max_len - 1) // block            # [B]
+    kb = k_cache.reshape(batch, kv, n_kb, block, hd)
+    sel = jnp.take_along_axis(
+        kb, blk[:, None, None, None, None], axis=2
+    )[:, :, 0]                                              # [B,KV,blk,hd]
+    new_codes, new_scale = qlib.quantize_int16_blocks(sel, block)
+    oh = jnp.arange(n_kb)[None, :] == blk[:, None]          # [B, n_kb]
+    codes_r = jnp.where(
+        oh[:, None, :, None, None],
+        new_codes[:, :, None],
+        codes.reshape(batch, kv, n_kb, block, hd),
+    )
+    scales_r = jnp.where(oh[:, None, :], new_scale, scales)
+    return codes_r.reshape(batch, kv, max_len, hd), scales_r
 
 
 def _project_update_fold(
@@ -130,13 +189,22 @@ def _project_update_fold(
     num_kv_heads: int,
     rope_theta: float,
     use_qk_norm: bool,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    filter_block: int = 0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
     """Shared serve-path front half (decode = the C=1 special case).
 
     Projects QKV for ``x [B, C, d]`` at absolute cache ``positions
     [B, C]``, scatters the C new K/V rows into the padded cache, and
     folds GQA head groups into the query axis. Returns
-    ``(q_folded [B, KV, G·C, hd], k_cache, v_cache)``.
+    ``(q_folded [B, KV, G·C, hd], new_cache)``.
+
+    When the cache carries the persistent filter operands (``k_codes`` /
+    ``k_scale``), they are refreshed *here*, at write time, so they can
+    never drift from the float rows: a decode append (C = 1)
+    re-quantizes exactly the one touched key block per slot; a prefill
+    chunk re-quantizes every block from the updated cache (prefill is
+    already O(C·max_len) — the refresh is not the bottleneck there, and
+    full refresh keeps ragged/sentinel writes trivially correct).
 
     Layout rules: when KV heads divide the model axis the cache is
     head-sharded → q matches; otherwise the cache is *sequence*-sharded
@@ -180,11 +248,31 @@ def _project_update_fold(
         + jnp.einsum("bcm,bhcd->bhmd", onehot, v_new)
     )
 
+    new_cache = dict(cache)
+    new_cache["k"] = k_cache
+    new_cache["v"] = v_cache
+    if "k_codes" in cache:
+        if filter_block <= 0:
+            raise ValueError(
+                "cache carries filter planes but filter_block is unset"
+            )
+        if chunk == 1:
+            codes, scales = _refresh_filter_block(
+                k_cache, cache["k_codes"], cache["k_scale"],
+                positions[:, 0], filter_block,
+            )
+        else:
+            codes, scales = qlib.quantize_int16_blocks(
+                k_cache, filter_block
+            )
+        new_cache["k_codes"] = shd.constrain_kv_cache(codes)
+        new_cache["k_scale"] = scales
+
     groups = num_heads // num_kv_heads
     head_dim = q.shape[-1]
     if groups > 1:
         q = q.reshape(batch, num_kv_heads, groups * chunk, head_dim)
-    return q, k_cache, v_cache
+    return q, new_cache
 
 
 def _unfold_heads_out(
@@ -226,21 +314,22 @@ def prefill_attention_block(
     fixed-shape jitted call.
     """
     chunk = x.shape[1]
-    qg, k_cache, v_cache = _project_update_fold(
+    qg, new_cache = _project_update_fold(
         params, x, cache, positions,
         num_heads=num_heads, num_kv_heads=num_kv_heads,
         rope_theta=rope_theta, use_qk_norm=use_qk_norm,
+        filter_block=energon.decode_key_block,
     )
     groups = num_heads // num_kv_heads
     # folded row (g, c) keeps token c's position → same per-row mask
     qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
     out = energon_attention(
-        qg, k_cache, v_cache, energon,
+        qg, new_cache["k"], new_cache["v"], energon,
         causal=True, window=window, layer_index=layer_index,
         q_positions=qpos,
     )
     y = _unfold_heads_out(out, params, num_heads, chunk)
-    return y, {"k": k_cache, "v": v_cache}
+    return y, new_cache
 
 
 def decode_attention_block(
@@ -261,16 +350,25 @@ def decode_attention_block(
 
     Updates the cache in-place (functionally) at ``cache_index`` and runs
     Energon decode attention (MP-MRF filtering over the cache, §IV-D
-    l=1 case) over the valid prefix.
+    l=1 case) over the valid prefix. When the cache carries the
+    persistent filter planes, the touched key block is re-quantized at
+    append and the filter consumes the resident codes/scales — the
+    per-step filter never re-quantizes the cache.
     """
-    qg, k_cache, v_cache = _project_update_fold(
+    qg, new_cache = _project_update_fold(
         params, x, cache, cache_index[:, None],
         num_heads=num_heads, num_kv_heads=num_kv_heads,
         rope_theta=rope_theta, use_qk_norm=use_qk_norm,
+        filter_block=energon.decode_key_block,
     )
+    filter_cache = None
+    if "k_codes" in new_cache:
+        filter_cache = {
+            "codes": new_cache["k_codes"], "scale": new_cache["k_scale"],
+        }
     out = energon_decode_attention(
-        qg, k_cache, v_cache, cache_index + 1, energon,
-        layer_index=layer_index, window=window,
+        qg, new_cache["k"], new_cache["v"], cache_index + 1, energon,
+        layer_index=layer_index, window=window, filter_cache=filter_cache,
     )
     y = _unfold_heads_out(out, params, num_heads, 1)
-    return y, {"k": k_cache, "v": v_cache}
+    return y, new_cache

@@ -316,13 +316,35 @@ class LMModel:
     # decode
     # ------------------------------------------------------------------
 
+    def decode_cache_len(self, max_len: int) -> int:
+        """Serving cache row count for a requested ``max_len``.
+
+        When the block-granular decode path is enabled, the cache is
+        rounded up to a whole number of ``decode_key_block`` blocks —
+        at least two, since the block dispatch needs n_kb > 1 — so an
+        off-size ``max_len`` can never silently fall back to the
+        row-granular path (the padding rows are masked by cache_length
+        everywhere). Callers that build position sentinels must use the
+        rounded value (see ``runtime.serve_loop.ServeLoop``)."""
+        e = self.cfg.energon
+        if e.uses_decode_block:
+            bk = e.decode_key_block
+            return max(-(-max_len // bk), 2) * bk
+        return max_len
+
     def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
         cfg = self.cfg
         dt = self._dtype
+        max_len = self.decode_cache_len(max_len)
+        filter_block = (
+            cfg.energon.decode_key_block
+            if cfg.energon.uses_filter_cache else 0
+        )
 
         def attn_cache():
             return attn_lib.init_kv_cache(
-                batch, cfg.num_kv_heads, max_len, cfg.head_dim, dt
+                batch, cfg.num_kv_heads, max_len, cfg.head_dim, dt,
+                filter_block=filter_block,
             )
 
         if cfg.family in ("dense", "moe", "vlm", "audio"):
@@ -502,21 +524,51 @@ class LMModel:
 
         return jax.tree.map(blend, new, old)
 
+    # Attention serve-cache keys (KV rows + persistent filter planes);
+    # leading axis is the stacked layer/group dim, batch axis is 1.
+    _ATTN_CACHE_KEYS = ("k", "v", "k_codes", "k_scale")
+
     def reset_decode_slots(self, cache, reset_mask: jax.Array):
-        """Zero the recurrent decode state of the masked slots
-        (``reset_mask`` ``[B]`` bool). Attention KV caches are
-        positional — rows are overwritten at their cache_index — so
-        they need no reset; recurrent states accumulate and a freshly
-        admitted slot must not inherit its previous occupant's state."""
-        if self.cfg.family not in ("ssm", "hybrid"):
-            return cache
+        """Zero the decode state of the masked slots (``reset_mask``
+        ``[B]`` bool). Recurrent states accumulate and a freshly
+        admitted slot must not inherit its previous occupant's state.
+        Attention KV rows are positional and would self-heal, but the
+        per-block filter scales are *block* aggregates: a boundary block
+        mixing a new prompt's rows with a previous occupant's stale rows
+        would quantize the real rows against an inflated stale absmax —
+        so reset slots' KV rows and filter planes are zeroed too.
+
+        (`_blend_state(new, old, active)` takes ``new`` where ``active``
+        — the reset slots are the *active* ones here; the previous
+        revision passed the complement, which zeroed every slot *except*
+        the admitted one and left the admitted slot with its previous
+        occupant's state.)"""
         out = dict(cache)
         for key, ax in self._STATE_BATCH_AXES.items():
             if key in cache:
                 out[key] = self._blend_state(
                     jax.tree.map(jnp.zeros_like, cache[key]), cache[key],
-                    jnp.logical_not(reset_mask), ax,
+                    reset_mask, ax,
                 )
+
+        def reset_attn(attn_cache):
+            return {
+                key: self._blend_state(
+                    jnp.zeros_like(leaf), leaf, reset_mask, 1
+                ) if key in self._ATTN_CACHE_KEYS else leaf
+                for key, leaf in attn_cache.items()
+            }
+
+        # Every MP-MRF impl quantizes decode caches (block impls per
+        # key block, the row path per head over the *whole* padded
+        # cache), so stale rows poison absmax scales for all of them;
+        # only pure dense decode never quantizes and keeps the free
+        # positional-self-heal path.
+        if self.cfg.energon.impl != "dense":
+            if self.cfg.family in ("dense", "moe", "vlm", "audio"):
+                out = reset_attn(out)
+            if "shared_attn" in cache:
+                out["shared_attn"] = reset_attn(cache["shared_attn"])
         return out
 
     def decode_step(

@@ -170,7 +170,11 @@ class ServeLoop:
         self.model = model
         self.params = params
         self.batch_slots = batch_slots
-        self.max_len = max_len
+        # Cache rows are rounded up to whole decode key blocks (the
+        # block path must never silently fall back to the row path);
+        # the engine's sentinels/limits must use the same rounded value
+        # or sentinel positions would land on real cache rows.
+        self.max_len = model.decode_cache_len(max_len)
         self.eos = eos_token
         self.prefill_chunk = max(1, min(prefill_chunk, max_len))
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)

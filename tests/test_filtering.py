@@ -11,6 +11,7 @@ except ModuleNotFoundError:  # optional dev dep — property cases skip
     from _hypothesis_fallback import given, settings, st
 
 from repro.core import filtering as flt
+from repro.core import quantization as qlib
 
 
 def _qkv(n=256, d=32, bh=(2, 2), seed=0):
@@ -128,6 +129,95 @@ class TestBlockSelect:
         blk, bv = flt.pool_block_scores(s, 2, 2, valid)
         assert float(blk[0, 0, 0, 1]) == 99.0
         assert bool(jnp.all(bv))
+
+
+class TestDecodeFilterCache:
+    """Cached-plane decode selection vs fresh per-block re-quantize."""
+
+    def _setup(self, seed=0, B=2, H=2, G=4, n=128, d=16, bk=16):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(B, H, G, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        cl = jnp.asarray(rng.integers(1, n + 1, size=B), jnp.int32)
+        valid = (jnp.arange(n)[None, :] < cl[:, None])[:, None, None, :]
+        valid = jnp.broadcast_to(valid, (B, H, G, n))
+        return q, k, cl, valid, bk
+
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_cached_equals_fresh_selection(self, seed):
+        q, k, cl, valid, bk = self._setup(seed)
+        cfg = flt.MPMRFConfig(
+            granularity="block", query_block=1, key_block=bk,
+            block_budget=4,
+        )
+        fresh = flt.mpmrf_decode_block_select(q, k, cfg, valid, cl)
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        cached = flt.mpmrf_decode_block_select(
+            q, k, cfg, valid, cl,
+            k_quant=qlib.blockwise_quantized_view(codes, scales, bk),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fresh.block_indices), np.asarray(cached.block_indices)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(fresh.block_valid), np.asarray(cached.block_valid)
+        )
+        np.testing.assert_allclose(
+            np.asarray(fresh.scores), np.asarray(cached.scores)
+        )
+
+    def test_live_budget_caps_effective_keep_rate(self):
+        """A short sequence in a long padded cache must keep
+        ~ceil(live_blocks/ρ) blocks, not fill the padded-cache budget."""
+        q, k, _, _, bk = self._setup(seed=4, n=256)
+        n = 256
+        cl = jnp.asarray([40, 256], jnp.int32)       # 3 vs 16 live blocks
+        valid = (jnp.arange(n)[None, :] < cl[:, None])[:, None, None, :]
+        valid = jnp.broadcast_to(valid, q.shape[:-1] + (n,))
+        n_kb = n // bk
+        budget = n_kb // 4                            # static ρ=4 budget
+        cfg = flt.MPMRFConfig(
+            granularity="block", query_block=1, key_block=bk,
+            block_budget=budget,
+        )
+        live_blocks = jnp.asarray([3, 16], jnp.int32)
+        live_budget = jnp.asarray([1, 4], jnp.int32)  # ceil(live/4)
+        res = flt.mpmrf_decode_block_select(
+            q, k, cfg, valid, cl, live_budget=live_budget,
+        )
+        kept = np.asarray(res.block_valid.sum(axis=-1))  # [B, H, 1]
+        # slot 0: 1 live-budget slot + ≤2 pinned (sink + newest) — far
+        # below the padded budget of 4; slot 1 uses the full budget.
+        assert kept[0].max() <= 3
+        assert kept[1].max() == budget
+        # without the clamp, slot 0 would fill all 3 live blocks
+        res_unclamped = flt.mpmrf_decode_block_select(q, k, cfg, valid, cl)
+        assert np.asarray(
+            res_unclamped.block_valid.sum(axis=-1)
+        )[0].max() == 3
+
+    def test_live_budget_never_drops_pinned_blocks(self):
+        q, k, _, _, bk = self._setup(seed=6, n=128)
+        n = 128
+        cl = jnp.asarray([100, 50], jnp.int32)
+        valid = (jnp.arange(n)[None, :] < cl[:, None])[:, None, None, :]
+        valid = jnp.broadcast_to(valid, q.shape[:-1] + (n,))
+        cfg = flt.MPMRFConfig(
+            granularity="block", query_block=1, key_block=bk,
+            block_budget=4,
+        )
+        res = flt.mpmrf_decode_block_select(
+            q, k, cfg, valid, cl,
+            live_budget=jnp.asarray([1, 1], jnp.int32),
+        )
+        idx = np.asarray(res.block_indices)
+        val = np.asarray(res.block_valid)
+        for b in range(2):
+            last = (int(cl[b]) - 1) // bk
+            for h in range(q.shape[1]):
+                sel = {int(i) for i, v in zip(idx[b, h, 0], val[b, h, 0])
+                       if v}
+                assert 0 in sel and last in sel
 
 
 @settings(max_examples=20, deadline=None)

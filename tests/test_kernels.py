@@ -128,6 +128,136 @@ class TestBlockSparseAttention:
         np.testing.assert_allclose(out, expected, atol=1e-5)
 
 
+class TestFusedDecodeKernel:
+    """Fused decode pipeline off the resident filter cache (l = 1)."""
+
+    def _setup(self, B=2, H=2, G=4, n=128, d=16, bk=16, seed=0):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(B, H, G, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        cl = jnp.asarray(rng.integers(1, n + 1, size=B), jnp.int32)
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        return q, k, v, cl, codes, scales, bk
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_filter_scores_vs_ref(self, seed):
+        q, k, _, cl, codes, scales, bk = self._setup(seed=seed)
+        from repro.kernels import mpmrf_decode as dk
+
+        B, H, G, d = q.shape
+        n = k.shape[-2]
+        bh = B * H
+        q16 = qlib.quantize_int16(q, axis=-1)
+        qp = q16.bit_plane(4).reshape(bh, G, d)
+        qs = q16.scale.reshape(bh, G, 1)
+        cl_bh = jnp.repeat(cl, H)
+        s0, s1 = dk.mpmrf_decode_filter_scores(
+            qp, qs, codes.reshape(bh, n, d), scales.reshape(bh, n // bk),
+            cl_bh, round_bits=(2, 4), key_block=bk, interpret=True,
+        )
+        r0, r1 = ref.mpmrf_decode_filter_ref(
+            qp, qs, codes.reshape(bh, n, d), scales.reshape(bh, n // bk),
+            cl_bh, round_bits=(2, 4), key_block=bk,
+        )
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(r0), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(r1), rtol=1e-6)
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_fused_matches_xla_decode_path(self, ratio):
+        """Selection glue is shared, so fused == XLA block decode up to
+        flash-vs-flat softmax rounding."""
+        from repro.core import energon_decode_attention, EnergonConfig
+
+        q, k, v, cl, codes, scales, bk = self._setup(seed=3)
+        fc = {"codes": codes, "scale": scales}
+        cfg_x = EnergonConfig(impl="mpmrf_block", pruning_ratio=ratio,
+                              decode_key_block=bk, min_prune_layer=0)
+        cfg_p = EnergonConfig(impl="pallas", pruning_ratio=ratio,
+                              decode_key_block=bk, min_prune_layer=0)
+        out_x = energon_decode_attention(
+            q, k, v, cl, cfg_x, layer_index=5, filter_cache=fc
+        )
+        out_p = energon_decode_attention(
+            q, k, v, cl, cfg_p, layer_index=5, filter_cache=fc
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p), np.asarray(out_x), atol=1e-5
+        )
+
+    def test_reuse_partial_false_falls_back_to_xla_path(self):
+        """The fused kernel hard-codes Fig. 7 result reuse; the
+        independent-rescore variant must dispatch to the XLA block path
+        and therefore match it exactly."""
+        from repro.core import energon_decode_attention, EnergonConfig
+
+        q, k, v, cl, codes, scales, bk = self._setup(seed=11)
+        fc = {"codes": codes, "scale": scales}
+        outs = []
+        for impl in ("pallas", "mpmrf_block"):
+            cfg = EnergonConfig(impl=impl, pruning_ratio=2.0,
+                                decode_key_block=bk, min_prune_layer=0,
+                                reuse_partial=False)
+            outs.append(energon_decode_attention(
+                q, k, v, cl, cfg, layer_index=5, filter_cache=fc
+            ))
+        np.testing.assert_array_equal(
+            np.asarray(outs[0]), np.asarray(outs[1])
+        )
+
+    def test_keep_all_budget_is_exactly_dense(self):
+        from repro.core import energon_decode_attention, EnergonConfig
+
+        q, k, v, cl, codes, scales, bk = self._setup(seed=7)
+        fc = {"codes": codes, "scale": scales}
+        cfg_p = EnergonConfig(impl="pallas", pruning_ratio=1.0,
+                              decode_key_block=bk, min_prune_layer=0)
+        out_p = energon_decode_attention(
+            q, k, v, cl, cfg_p, layer_index=5, filter_cache=fc
+        )
+        dense = energon_decode_attention(
+            q, k, v, cl, EnergonConfig(impl="dense"), layer_index=5
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p), np.asarray(dense), atol=1e-5
+        )
+
+    def test_gather_kernel_masks_invalid_slots_and_padding(self):
+        """A survivor table with padded slots and a short cache_length
+        must equal the XLA gather oracle."""
+        from repro.core import sparse_attention as spa
+        from repro.kernels import mpmrf_decode as dk
+
+        q, k, v, cl, _, _, bk = self._setup(seed=9)
+        B, H, G, d = q.shape
+        n = k.shape[-2]
+        bh = B * H
+        rng = np.random.default_rng(2)
+        budget = 4
+        n_live = np.maximum((np.asarray(cl) + bk - 1) // bk, 1)
+        idx = np.zeros((B, H, budget), np.int32)
+        val = np.zeros((B, H, budget), np.int32)
+        for b in range(B):
+            for h in range(H):
+                m = int(min(budget, n_live[b]))
+                idx[b, h, :m] = rng.choice(n_live[b], size=m, replace=False)
+                val[b, h, :m] = 1
+        out_k = dk.decode_gather_attention(
+            q.reshape(bh, G, d), k.reshape(bh, n, d), v.reshape(bh, n, d),
+            jnp.asarray(idx).reshape(bh, budget),
+            jnp.asarray(val).reshape(bh, budget),
+            jnp.repeat(cl, H), key_block=bk, interpret=True,
+        ).reshape(B, H, G, d)
+        out_ref = spa.decode_block_gather_attention(
+            q, k, v,
+            jnp.asarray(idx)[:, :, None, :], jnp.asarray(val)[:, :, None, :],
+            cl, bk,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_ref), atol=1e-5
+        )
+
+
 class TestEndToEndEnergonKernelPipeline:
     def test_matches_xla_chunked_selection_semantics(self):
         """Kernel pipeline (FU kernel + AU kernel) vs the XLA chunked

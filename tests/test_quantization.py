@@ -80,6 +80,56 @@ class TestScores:
             assert jnp.allclose(fq, manual)
 
 
+class TestBlockQuantize:
+    """Per-key-block quantization — the persistent filter-cache layout."""
+
+    def test_matches_per_block_fresh_quantize(self):
+        """Each block's (codes, scale) must equal an independent
+        quantize_int16 of just that block — the locality property the
+        incremental decode append relies on."""
+        x = _rand((2, 3, 64, 8), seed=5)
+        bk = 16
+        codes, scales = qlib.quantize_int16_blocks(x, bk)
+        assert codes.dtype == jnp.int16
+        assert scales.shape == (2, 3, 64 // bk)
+        for j in range(64 // bk):
+            blk = x[..., j * bk:(j + 1) * bk, :]
+            ref = qlib.quantize_int16(blk, axis=(-2, -1))
+            np.testing.assert_array_equal(
+                np.asarray(codes[..., j * bk:(j + 1) * bk, :]),
+                np.asarray(ref.codes),
+            )
+            np.testing.assert_allclose(
+                np.asarray(scales[..., j]),
+                np.asarray(ref.scale[..., 0, 0]),
+            )
+
+    def test_view_dequantizes_with_block_scales(self):
+        x = _rand((2, 32, 4), seed=7, scale=3.0)
+        codes, scales = qlib.quantize_int16_blocks(x, 8)
+        qt = qlib.blockwise_quantized_view(codes, scales, 8)
+        assert qt.codes.dtype == jnp.int32
+        np.testing.assert_allclose(
+            np.asarray(qt.dequantize()), np.asarray(x), atol=1e-3
+        )
+
+    def test_view_plane_algebra_holds(self):
+        x = _rand((1, 32, 8), seed=9)
+        codes, scales = qlib.quantize_int16_blocks(x, 8)
+        qt = qlib.blockwise_quantized_view(codes, scales, 8)
+        assert jnp.all(
+            qt.bit_plane(4)
+            == jnp.left_shift(qt.bit_plane(2), 2) + qt.lsb_remainder(2, 4)
+        )
+
+    def test_shape_validation(self):
+        with pytest.raises(ValueError, match="divisible"):
+            qlib.quantize_int16_blocks(_rand((10, 4)), 3)
+        codes, scales = qlib.quantize_int16_blocks(_rand((16, 4)), 4)
+        with pytest.raises(ValueError, match="mismatch"):
+            qlib.blockwise_quantized_view(codes, scales, 8)
+
+
 @settings(max_examples=30, deadline=None)
 @given(
     rows=st.integers(1, 8),

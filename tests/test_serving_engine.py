@@ -322,6 +322,149 @@ class TestBlockGranularDecode:
             )
 
 
+class TestFilterCachePersistence:
+    """The persistent quantized filter cache: incremental appends must
+    stay bit-identical to a fresh per-block re-quantization of the
+    float cache (the invariant the decode filter relies on), including
+    across long generations and slot-reuse cycles."""
+
+    BK = 16
+
+    def _model(self, filter_cache=True, impl="mpmrf_block"):
+        return _model(EnergonConfig(
+            impl=impl, pruning_ratio=2.0, query_block=8, key_block=16,
+            decode_key_block=self.BK, min_prune_layer=1,
+            filter_cache=filter_cache,
+        ))
+
+    def _assert_invariant(self, cache):
+        from repro.core import quantize_int16_blocks
+
+        codes, scales = quantize_int16_blocks(cache["k"], self.BK)
+        np.testing.assert_array_equal(
+            np.asarray(codes), np.asarray(cache["k_codes"])
+        )
+        np.testing.assert_allclose(
+            np.asarray(scales), np.asarray(cache["k_scale"])
+        )
+
+    def test_long_generation_matches_requantize_path(self):
+        """≥64 incremental decode appends: cached-plane selection must
+        equal fresh-requantize selection — asserted end-to-end as
+        bit-equal greedy continuations plus the code/scale invariant."""
+        def generate(filter_cache):
+            cfg, model, params = self._model(filter_cache)
+            cache = model.init_cache(1, 128)
+            ci = jnp.zeros((1,), jnp.int32)
+            prompt = list(range(1, 9))
+            toks = np.zeros((1, 8), np.int32)
+            toks[0] = prompt
+            pos = np.arange(8, dtype=np.int32)[None, :]
+            logits, cache = model.prefill(
+                params, cache,
+                {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos)},
+                ci,
+            )
+            ci = ci + 8
+            nxt = int(jnp.argmax(logits[0, 7]))
+            out = []
+            for _ in range(70):
+                logits, cache = model.decode_step(
+                    params, cache,
+                    {"tokens": jnp.asarray([[nxt]], jnp.int32)}, ci,
+                )
+                ci = ci + 1
+                nxt = int(jnp.argmax(logits[0, -1]))
+                out.append(nxt)
+            return out, cache
+
+        cached_toks, cache = generate(True)
+        fresh_toks, _ = generate(False)
+        assert cached_toks == fresh_toks
+        assert "k_codes" in cache
+        self._assert_invariant(cache)
+
+    def test_slot_reuse_cycle_preserves_invariant(self):
+        """More requests than slots forces reset_decode_slots reuse
+        cycles; the filter cache must hold the invariant afterwards and
+        per-request outputs must match the requantize engine exactly."""
+        def run(filter_cache):
+            cfg, model, params = self._model(filter_cache)
+            engine = ServeLoop(model, params, batch_slots=2, max_len=96,
+                               eos_token=cfg.vocab_size - 1,
+                               prefill_chunk=8)
+            rng = np.random.default_rng(0)
+            for uid in range(5):
+                engine.submit(Request(
+                    uid=uid,
+                    prompt=rng.integers(
+                        1, cfg.vocab_size - 1,
+                        size=int(rng.integers(3, 24))).tolist(),
+                    max_new_tokens=12,
+                ))
+            done = engine.run_until_drained()
+            return {r.uid: r.tokens_out for r in done}, engine.cache
+
+        toks_cached, cache = run(True)
+        toks_fresh, _ = run(False)
+        assert toks_cached == toks_fresh
+        self._assert_invariant(cache)
+
+    def test_pallas_impl_drains_and_holds_invariant(self):
+        """cfg.impl='pallas' serves through the fused decode kernel
+        (interpret mode on CPU) inside the jitted engine step."""
+        cfg, model, params = self._model(impl="pallas")
+        engine = ServeLoop(model, params, batch_slots=2, max_len=64,
+                           eos_token=cfg.vocab_size - 1, prefill_chunk=8)
+        for uid in range(3):
+            engine.submit(Request(uid=uid, prompt=[1 + uid, 2, 3, 4, 5],
+                                  max_new_tokens=6))
+        done = engine.run_until_drained()
+        assert len(done) == 3
+        for r in done:
+            assert 1 <= len(r.tokens_out) <= 6
+            assert all(0 <= t < cfg.vocab_size for t in r.tokens_out)
+        self._assert_invariant(engine.cache)
+
+    def test_cache_len_rounds_up_to_block_multiple(self):
+        cfg, model, params = self._model()
+        assert model.decode_cache_len(60) == 64
+        # ≥ 2 blocks always: the block dispatch needs n_kb > 1
+        assert model.decode_cache_len(10) == 32
+        cache = model.init_cache(1, 60)
+        assert cache["k"].shape[-2] == 64
+        assert cache["k_codes"].shape[-2] == 64
+        assert cache["k_scale"].shape[-1] == 4
+        engine = ServeLoop(model, params, batch_slots=1, max_len=60,
+                           eos_token=cfg.vocab_size - 1)
+        assert engine.max_len == 64
+        # dense impls keep the requested size and a lean cache
+        cfg_d, model_d, _ = _model(EnergonConfig(impl="dense"))
+        assert model_d.decode_cache_len(60) == 60
+        assert "k_codes" not in model_d.init_cache(1, 60)
+
+    def test_reset_decode_slots_clears_reset_slot_only(self):
+        cfg, model, params = self._model()
+        cache = model.init_cache(2, 64)
+        ci = jnp.zeros((2,), jnp.int32)
+        toks = np.asarray([[1, 2, 3, 4], [5, 6, 7, 8]], np.int32)
+        pos = np.broadcast_to(np.arange(4, dtype=np.int32), (2, 4)).copy()
+        _, cache = model.prefill(
+            params, cache,
+            {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos)}, ci,
+        )
+        assert float(jnp.abs(cache["k"][:, 1]).max()) > 0
+        reset = model.reset_decode_slots(
+            cache, jnp.asarray([False, True])
+        )
+        # slot 1 zeroed across rows, codes and scales; slot 0 untouched
+        for key in ("k", "v", "k_codes", "k_scale"):
+            assert float(jnp.abs(reset[key][:, 1].astype(jnp.float32)).max()) == 0.0
+            np.testing.assert_array_equal(
+                np.asarray(reset[key][:, 0]), np.asarray(cache[key][:, 0])
+            )
+
+
 class TestServeEngine:
     def _engine(self, energon=None, **kw):
         cfg, model, params = _model(
@@ -504,6 +647,22 @@ class TestServeEngine:
             return [r for r in done if r.uid == 0][0].tokens_out
 
         assert greedy_tokens(False) == greedy_tokens(True)
+
+    def test_reset_decode_slots_recurrent_polarity(self):
+        """reset_decode_slots must zero exactly the *masked* slots (the
+        pre-filter-cache revision zeroed the complement: every slot
+        except the admitted one, which kept its previous occupant's
+        accumulated state)."""
+        cfg, model, params = self._ssm_model()
+        cache = model.init_cache(2, 16)
+        cache = jax.tree.map(jnp.ones_like, cache)
+        out = model.reset_decode_slots(cache, jnp.asarray([False, True]))
+        for leaf in jax.tree.leaves(out["mlstm"]):   # batch axis 2
+            assert float(jnp.abs(leaf[:, :, 0]).max()) > 0
+            assert float(jnp.abs(leaf[:, :, 1]).max()) == 0
+        for leaf in jax.tree.leaves(out["slstm"]):   # batch axis 1
+            assert float(jnp.abs(leaf[:, 0]).max()) > 0
+            assert float(jnp.abs(leaf[:, 1]).max()) == 0
 
     def test_engine_metrics_split(self):
         cfg, engine = self._engine(
