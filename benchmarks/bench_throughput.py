@@ -23,7 +23,7 @@ from repro.configs.base import ModelConfig
 from repro.core import EnergonConfig, energon_attention
 from repro.core import performance_model as pm
 from repro.models import LMModel
-from repro.runtime import Request, ServeLoop
+from repro.runtime import Request, ServeLoop, attention_cache_bytes
 
 
 def _time(fn, *args, iters=3):
@@ -207,6 +207,131 @@ def write_decode_json(path: str = "BENCH_decode.json", **kw) -> dict:
     return record
 
 
+# ---------------------------------------------------------------------------
+# Mixed-length serving trace: paged vs unpaged cache (BENCH_serving.json)
+# ---------------------------------------------------------------------------
+
+# 8–512 token prompts in arrival order — short and long requests
+# interleaved so per-request sizing (paged) has stranded memory to win
+# back from the single global max_len pad (unpaged).
+SERVING_TRACE = (8, 16, 512, 32, 128, 64, 256, 384, 24, 48, 96, 192)
+
+
+def _serve_model(pruning_ratio: float = 4.0):
+    cfg = ModelConfig(
+        name="bench-serve-trace", family="dense", num_layers=2, d_model=64,
+        num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+        vocab_size=256, dtype="float32", remat="none",
+        energon=EnergonConfig(impl="mpmrf_block", min_prune_layer=1,
+                              pruning_ratio=pruning_ratio,
+                              decode_key_block=64),
+    )
+    model = LMModel(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def run_serving_trace(
+    *,
+    paged: bool,
+    num_pages=None,
+    batch_slots: int = 4,
+    max_len: int = 528,
+    prefill_chunk: int = 64,
+    new_tokens: int = 16,
+    lengths=SERVING_TRACE,
+):
+    """Drain the mixed-length trace through one engine configuration.
+
+    Returns ``(engine, completed, wall_seconds)``. The paged engine is
+    deliberately oversubscribed (``num_pages`` < slots × blocks) so the
+    run exercises continuous admission, eager frees and preemption —
+    the unpaged engine on the same trace is the ``batch × max_len``
+    footprint baseline.
+    """
+    cfg, model, params = _serve_model()
+    engine = ServeLoop(
+        model, params, batch_slots=batch_slots, max_len=max_len,
+        eos_token=cfg.vocab_size - 1, prefill_chunk=prefill_chunk,
+        paged=paged, num_pages=num_pages,
+    )
+    rng = np.random.default_rng(0)
+    for uid, L in enumerate(lengths):
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.integers(1, cfg.vocab_size - 1, size=int(L)).tolist(),
+            max_new_tokens=new_tokens,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(lengths), (len(done), len(lengths))
+    return engine, done, wall
+
+
+def run_serving_bench(*, num_pages: int = 16, new_tokens: int = 16) -> dict:
+    """Machine-readable serving-trace record (BENCH_serving.json).
+
+    Compares the paged engine (shared pool, continuous batching,
+    preemption) against the unpaged engine on the same mixed-length
+    trace: tok/s, peak pages in use, preemptions, and HBM cache bytes.
+    The acceptance gate is ``paged peak bytes < unpaged bytes`` — the
+    paged pool's *allocated* footprint is already below the
+    ``batch × max_len`` pad, and the in-use watermark is lower still.
+    """
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "trace": {"prompt_lengths": list(SERVING_TRACE),
+                  "new_tokens": new_tokens},
+    }
+    un_engine, un_done, un_wall = run_serving_trace(
+        paged=False, new_tokens=new_tokens
+    )
+    unpaged_bytes = attention_cache_bytes(un_engine.cache)
+    m = un_engine.metrics
+    record["unpaged"] = {
+        "cache_bytes": unpaged_bytes,
+        "wall_seconds": un_wall,
+        "prefill_tok_s": m.prefill_tokens_per_sec,
+        "decode_tok_s": m.decode_tokens_per_sec,
+        "total_tokens": sum(len(r.tokens_out) for r in un_done),
+    }
+
+    pg_engine, pg_done, pg_wall = run_serving_trace(
+        paged=True, num_pages=num_pages, new_tokens=new_tokens
+    )
+    pool_bytes = attention_cache_bytes(pg_engine.cache)
+    page_bytes = pool_bytes // pg_engine.layout.num_pages
+    peak_pages = pg_engine.allocator.peak_pages_in_use
+    m = pg_engine.metrics
+    record["paged"] = {
+        "num_pages": pg_engine.layout.num_pages,
+        "page_size": pg_engine.layout.page_size,
+        "pool_bytes": pool_bytes,
+        "page_bytes": page_bytes,
+        "peak_pages_in_use": peak_pages,
+        "peak_cache_bytes": peak_pages * page_bytes,
+        "preemptions": m.preemptions,
+        "wall_seconds": pg_wall,
+        "prefill_tok_s": m.prefill_tokens_per_sec,
+        "decode_tok_s": m.decode_tokens_per_sec,
+        "total_tokens": sum(len(r.tokens_out) for r in pg_done),
+        "latency": m.latency_stats(),
+    }
+    record["paged_pool_vs_unpaged"] = pool_bytes / max(unpaged_bytes, 1)
+    record["paged_peak_vs_unpaged"] = (
+        peak_pages * page_bytes / max(unpaged_bytes, 1)
+    )
+    return record
+
+
+def write_serving_json(path: str = "BENCH_serving.json", **kw) -> dict:
+    record = run_serving_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
+
+
 def main(emit):
     rows = run()
     for r in rows:
@@ -243,17 +368,33 @@ def main(emit):
 
 
 if __name__ == "__main__":
-    # Standalone decode-bench entry (CI smoke): writes BENCH_decode.json.
+    # Standalone bench entries (CI smokes): --json writes the decode
+    # record, --serving-json the paged-vs-unpaged serving-trace record.
     import argparse
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--json", default="BENCH_decode.json")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_decode.json to this path")
+    ap.add_argument("--serving-json", default=None,
+                    help="write BENCH_serving.json to this path")
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--num-pages", type=int, default=16,
+                    help="paged pool size for the serving trace "
+                         "(oversubscribed below slots*blocks)")
     args = ap.parse_args()
-    out = write_decode_json(
-        args.json, max_len=args.max_len, n_requests=args.requests,
-        new_tokens=args.new_tokens,
-    )
-    print(json.dumps(out, indent=2, sort_keys=True))
+    if args.json is None and args.serving_json is None:
+        args.json = "BENCH_decode.json"
+    if args.json is not None:
+        out = write_decode_json(
+            args.json, max_len=args.max_len, n_requests=args.requests,
+            new_tokens=args.new_tokens,
+        )
+        print(json.dumps(out, indent=2, sort_keys=True))
+    if args.serving_json is not None:
+        out = write_serving_json(
+            args.serving_json, num_pages=args.num_pages,
+            new_tokens=args.new_tokens,
+        )
+        print(json.dumps(out, indent=2, sort_keys=True))

@@ -1,11 +1,15 @@
-"""Batched serving with Energon MP-MRF decode attention.
+"""Batched serving with Energon MP-MRF decode attention over a paged
+KV cache.
 
-Continuous batching over fixed slots: prompts are admitted through the
-chunked-prefill path (one jitted call per chunk writes a whole block of
-K/V rows), then every decode step filters the KV cache with low-bit
-block scores and gathers only the surviving blocks (the paper's l=1
-text-generation pipeline, §IV-D). Per-slot RNG + temperature means the
-mixed greedy/stochastic traffic below never cross-contaminates.
+Continuous batching over a shared page pool: prompts are admitted the
+moment enough pages are free (chunked prefill writes whole blocks of
+K/V rows through the block table), then every decode step filters the
+resident cache with low-bit block scores and gathers only the surviving
+pages (the paper's l=1 text-generation pipeline, §IV-D). The pool below
+is deliberately oversubscribed — fewer pages than slots × blocks — so
+the run also exercises eager page frees and youngest-first preemption,
+while per-slot RNG + temperature keeps the mixed greedy/stochastic
+traffic deterministic per request.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -18,7 +22,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import EnergonConfig
 from repro.models import LMModel
-from repro.runtime import Request, ServeLoop
+from repro.runtime import Request, ServeLoop, attention_cache_bytes
 
 
 def main():
@@ -32,12 +36,18 @@ def main():
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    # 8 slots × 5 blocks of 32 would need 40 pages; 20 oversubscribes
+    # the pool so admission is page-driven and exhaustion preempts.
     engine = ServeLoop(model, params, batch_slots=8, max_len=160,
-                       eos_token=cfg.vocab_size - 1, prefill_chunk=16)
+                       eos_token=cfg.vocab_size - 1, prefill_chunk=16,
+                       num_pages=20)
+    assert engine.paged
     rng = np.random.default_rng(0)
     n_req = 24
     for uid in range(n_req):
-        prompt = rng.integers(1, cfg.vocab_size - 1, size=12).tolist()
+        prompt = rng.integers(
+            1, cfg.vocab_size - 1, size=int(rng.integers(6, 96))
+        ).tolist()
         engine.submit(Request(
             uid=uid, prompt=prompt, max_new_tokens=24,
             temperature=0.8 if uid % 2 else 0.0,
@@ -48,14 +58,19 @@ def main():
     dt = time.perf_counter() - t0
     m = engine.metrics
     total = sum(len(r.tokens_out) for r in done)
+    pool = attention_cache_bytes(engine.cache)
+    page = pool // engine.layout.num_pages
     print(f"[serve] {len(done)}/{n_req} requests, {total} tokens in "
           f"{dt:.1f}s ({total/dt:.1f} tok/s end-to-end)")
     print(f"[serve] {m.summary()}")
+    print(f"[serve] pool: {engine.layout.num_pages} pages × {page} B, "
+          f"peak {m.peak_pages_in_use} in use, {m.preemptions} preemptions")
     print(f"[serve] sample continuation (greedy): "
           f"{done[0].tokens_out[:12]}")
     assert len(done) == n_req
     assert m.prefill_dispatches < m.prefill_tokens, \
         "chunked prefill should batch prompt tokens into few dispatches"
+    assert m.peak_pages_in_use <= engine.layout.num_pages
 
 
 if __name__ == "__main__":

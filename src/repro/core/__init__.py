@@ -5,6 +5,7 @@ from repro.core.energon_attention import (  # noqa: F401
     decode_live_budget,
     energon_attention,
     energon_decode_attention,
+    energon_paged_decode_attention,
 )
 from repro.core.filtering import (  # noqa: F401
     FilterResult,
@@ -14,6 +15,7 @@ from repro.core.filtering import (  # noqa: F401
     eq3_threshold,
     mpmrf_block_select,
     mpmrf_decode_block_select,
+    mpmrf_paged_block_select,
     mpmrf_row_select,
     sliding_window_valid_mask,
 )
@@ -30,4 +32,5 @@ from repro.core.sparse_attention import (  # noqa: F401
     decode_block_gather_attention,
     dense_attention,
     masked_sparse_attention,
+    paged_decode_block_gather_attention,
 )

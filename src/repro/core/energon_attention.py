@@ -301,6 +301,65 @@ def decode_live_budget(
     return jnp.maximum(lb, 1)
 
 
+def _decode_valid_mask(
+    q: jax.Array, n_k: int, cache_length: jax.Array, window: Optional[int]
+) -> jax.Array:
+    """Cache-length (+ optional sliding-window) validity for one-token
+    decode, broadcast to ``[..., n_q, n_k]``. Shared by the unpaged and
+    paged entry points so their masking can never drift apart."""
+    in_range = jnp.arange(n_k)[None, :] < cache_length[:, None]
+    valid = in_range[:, None, None, :]
+    if window is not None:
+        w_lo = cache_length[:, None] - window
+        w_valid = jnp.where(
+            window > 0, jnp.arange(n_k)[None, :] >= w_lo, True
+        )
+        valid = jnp.logical_and(valid, w_valid[:, None, None, :])
+    return jnp.broadcast_to(valid, q.shape[:-2] + (q.shape[-2], n_k))
+
+
+def _decode_block_plan(cfg: EnergonConfig, n_k: int, cache_length: jax.Array):
+    """Budget/keep_all/live-budget/filter-config for the block decode
+    paths — one derivation for unpaged and paged (the paged≡unpaged
+    contract depends on these staying in lockstep)."""
+    bk = cfg.decode_key_block
+    n_kb = n_k // bk
+    budget = max(1, math.ceil(n_kb / cfg.pruning_ratio))
+    keep_all = cfg.pruning_ratio <= 1.0
+    live_budget = None
+    if not keep_all:
+        live_budget = decode_live_budget(cache_length, bk, cfg.pruning_ratio)
+    mcfg = flt.MPMRFConfig(
+        round_bits=cfg.round_bits,
+        alphas=cfg.alphas,
+        granularity="block",
+        query_block=1,
+        key_block=bk,
+        block_budget=budget,
+        keep_first=cfg.keep_first,
+        keep_diagonal=cfg.keep_diagonal,
+        reuse_partial=cfg.reuse_partial,
+        keep_all=keep_all,
+    )
+    return budget, keep_all, live_budget, mcfg
+
+
+def _fused_decode_engaged(
+    cfg: EnergonConfig, filter_planes_resident: bool, window: Optional[int]
+) -> bool:
+    """Engagement predicate of the fused Pallas decode kernels, shared
+    by the unpaged and paged dispatchers: resident filter planes, no
+    window, the default 2-round config, and Fig. 7 result reuse (the
+    kernel hard-codes it; independent-rescore takes the XLA path)."""
+    return (
+        cfg.impl == "pallas"
+        and filter_planes_resident
+        and window is None
+        and len(cfg.round_bits) == 2
+        and cfg.reuse_partial
+    )
+
+
 def energon_decode_attention(
     q: jax.Array,
     k_cache: jax.Array,
@@ -344,17 +403,8 @@ def energon_decode_attention(
     * **row** (fallback): paper-faithful token mask over the full padded
       cache (exact selection, but no skipped bytes under XLA).
     """
-    n_q = q.shape[-2]
     n_k = k_cache.shape[-2]
-    in_range = jnp.arange(n_k)[None, :] < cache_length[:, None]
-    valid = in_range[:, None, None, :]
-    if window is not None:
-        w_lo = cache_length[:, None] - window
-        w_valid = jnp.where(
-            window > 0, jnp.arange(n_k)[None, :] >= w_lo, True
-        )
-        valid = jnp.logical_and(valid, w_valid[:, None, None, :])
-    valid = jnp.broadcast_to(valid, q.shape[:-2] + (n_q, n_k))
+    valid = _decode_valid_mask(q, n_k, cache_length, window)
 
     if layer_index < cfg.min_prune_layer or cfg.impl == "dense":
         return spa.dense_attention(q, k_cache, v_cache, valid, scale)
@@ -365,24 +415,11 @@ def energon_decode_attention(
         and bk > 0 and n_k % bk == 0 and n_k // bk > 1
     )
     if use_block:
-        n_kb = n_k // bk
-        budget = max(1, math.ceil(n_kb / cfg.pruning_ratio))
-        keep_all = cfg.pruning_ratio <= 1.0
-        live_budget = None
-        if not keep_all:
-            live_budget = decode_live_budget(
-                cache_length, bk, cfg.pruning_ratio
-            )
+        budget, keep_all, live_budget, mcfg = _decode_block_plan(
+            cfg, n_k, cache_length
+        )
 
-        if (
-            cfg.impl == "pallas"
-            and filter_cache is not None
-            and window is None
-            and len(cfg.round_bits) == 2
-            # the fused kernel hard-codes Fig. 7 result reuse; the
-            # independent-rescore variant must take the XLA path
-            and cfg.reuse_partial
-        ):
+        if _fused_decode_engaged(cfg, filter_cache is not None, window):
             from repro.kernels import ops as kops
 
             return kops.fused_decode_attention(
@@ -400,18 +437,6 @@ def energon_decode_attention(
                 scale=scale,
             )
 
-        mcfg = flt.MPMRFConfig(
-            round_bits=cfg.round_bits,
-            alphas=cfg.alphas,
-            granularity="block",
-            query_block=1,
-            key_block=bk,
-            block_budget=budget,
-            keep_first=cfg.keep_first,
-            keep_diagonal=cfg.keep_diagonal,
-            reuse_partial=cfg.reuse_partial,
-            keep_all=keep_all,
-        )
         k_quant = None
         if filter_cache is not None:
             from repro.core import quantization as qlib
@@ -434,4 +459,108 @@ def energon_decode_attention(
     res = flt.mpmrf_row_select(q, k_cache, cfg.mpmrf("row"), valid)
     return spa.decode_sparse_attention(
         q, k_cache, v_cache, res.keep_mask, scale
+    )
+
+
+def energon_paged_decode_attention(
+    q: jax.Array,
+    cache: Dict[str, jax.Array],
+    block_table: jax.Array,
+    cache_length: jax.Array,
+    cfg: EnergonConfig,
+    *,
+    layer_index: int = 10**9,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """One-token decode attention over a shared page pool.
+
+    The paged counterpart of :func:`energon_decode_attention`: cache
+    state is a page pool (``repro.runtime.paged_cache`` layout — K/V
+    rows plus the resident filter operands per physical page) and each
+    slot addresses it through a block table. The contract is
+    **bit-identical outputs** to the unpaged path on the equivalent
+    logical contents, for every decode path:
+
+    * **pallas** — the paged fused kernels
+      (:func:`repro.kernels.ops.fused_paged_decode_attention`) compose
+      the survivor table with the block table inside the BlockSpec
+      index maps, so unselected *and unmapped* pages never leave HBM.
+    * **block** — :func:`repro.core.filtering.mpmrf_paged_block_select`
+      scores the resident per-page planes through the block table, then
+      only the surviving physical pages are gathered.
+    * **row / dense** (fallbacks: prefix layers, ρ≤1, row impls) — the
+      per-slot logical view is materialized transiently and fed to the
+      unpaged implementations; persistent state stays pool-sized.
+
+    Args:
+      q: ``[B, KV, n_q, d]`` folded GQA query rows.
+      cache: the layer's pool slice: ``k``/``v`` ``[KV, pool_rows, d]``
+        (+ ``k_codes``/``k_scale`` when the filter cache is resident).
+      block_table: int32 ``[B, max_blocks]``.
+      cache_length: int32 ``[B]`` live logical lengths.
+    """
+    from repro.runtime import paged_cache as pgc
+
+    bk = cfg.decode_key_block
+    if bk <= 0:
+        raise ValueError("paged decode needs decode_key_block > 0")
+    mb = block_table.shape[-1]
+    n_k = mb * bk
+    valid = _decode_valid_mask(q, n_k, cache_length, window)
+
+    def logical(name):
+        return pgc.gather_logical_rows(cache[name], block_table, bk)
+
+    if layer_index < cfg.min_prune_layer or cfg.impl == "dense":
+        return spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+
+    use_block = cfg.impl in ("mpmrf_block", "pallas") and n_k // bk > 1
+    if use_block:
+        budget, keep_all, live_budget, mcfg = _decode_block_plan(
+            cfg, n_k, cache_length
+        )
+
+        if _fused_decode_engaged(cfg, "k_codes" in cache, window):
+            from repro.kernels import ops as kops
+
+            return kops.fused_paged_decode_attention(
+                q, cache["k"], cache["v"],
+                cache["k_codes"], cache["k_scale"],
+                block_table, cache_length,
+                round_bits=cfg.round_bits,
+                alphas=cfg.alphas,
+                key_block=bk,
+                block_budget=budget,
+                keep_all=keep_all,
+                keep_first=cfg.keep_first,
+                keep_diagonal=cfg.keep_diagonal,
+                live_budget=live_budget,
+                scale=scale,
+            )
+
+        res = flt.mpmrf_paged_block_select(
+            q, cache, block_table, mcfg, valid, cache_length,
+            live_budget=live_budget,
+        )
+        return spa.paged_decode_block_gather_attention(
+            q, cache["k"], cache["v"], res.block_indices, res.block_valid,
+            block_table, cache_length, bk, window=window, scale=scale,
+        )
+
+    if cfg.pruning_ratio <= 1.0:
+        return spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+    # Row-granular selection quantizes K with a per-head absmax over the
+    # *whole* row axis; unmapped logical blocks alias page 0 (another
+    # occupant's rows), which would inflate the absmax and shift the
+    # selection. The unpaged cache holds zeros past cache_length — zero
+    # the gathered view the same way so the quantization (and therefore
+    # the selection) stays bit-identical.
+    row_ok = (
+        jnp.arange(n_k)[None, :] < cache_length[:, None]
+    )[:, None, :, None]
+    k_log = logical("k") * row_ok
+    res = flt.mpmrf_row_select(q, k_log, cfg.mpmrf("row"), valid)
+    return spa.decode_sparse_attention(
+        q, k_log, logical("v"), res.keep_mask, scale
     )

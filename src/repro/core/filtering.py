@@ -423,7 +423,7 @@ def decode_block_tier_select(
 
 def mpmrf_decode_block_select(
     q: jax.Array,
-    k_cache: jax.Array,
+    k_cache: Optional[jax.Array],
     cfg: MPMRFConfig,
     valid: jax.Array,
     cache_length: jax.Array,
@@ -478,7 +478,10 @@ def mpmrf_decode_block_select(
     if cfg.block_budget is None:
         raise ValueError("decode block selection needs cfg.block_budget")
     budget = cfg.block_budget
-    n_q, n_k = q.shape[-2], k_cache.shape[-2]
+    if k_cache is None and k_quant is None:
+        raise ValueError("need k_cache or a resident k_quant view")
+    n_q = q.shape[-2]
+    n_k = (k_quant.codes if k_cache is None else k_cache).shape[-2]
     if n_k % bk:
         raise ValueError(f"cache length {n_k} not divisible by {bk}")
     n_kb = n_k // bk
@@ -530,6 +533,54 @@ def mpmrf_decode_block_select(
         survivor_fraction=frac,
         scores=blk_scores,
         block_valid=block_valid,
+    )
+
+
+def mpmrf_paged_block_select(
+    q: jax.Array,
+    cache: dict,
+    block_table: jax.Array,
+    cfg: MPMRFConfig,
+    valid: jax.Array,
+    cache_length: jax.Array,
+    live_budget: Optional[jax.Array] = None,
+) -> FilterResult:
+    """Block-granular MP-MRF over a shared page pool (paged decode).
+
+    The filter operands live in the pool (``cache['k_codes']``
+    ``[KV, pool_rows, d]`` int16 + ``cache['k_scale']`` ``[KV, P]``, or
+    just float ``cache['k']`` when the config carries no resident
+    planes); the per-slot logical view is materialized through the
+    block table and fed to the *same* selection pipeline as the unpaged
+    path (:func:`mpmrf_decode_block_select`). Because the gathered view
+    is value-identical to the equivalent unpaged padded cache on every
+    mapped-and-valid row, and unmapped/invalid rows are NEG_INF-masked
+    by ``valid`` in both, paged and unpaged selection are bit-identical
+    — the paged≡unpaged selection-equivalence contract (DESIGN.md §4).
+
+    Args:
+      q: ``[B, KV, n_q, d]`` folded query rows.
+      cache: the layer's pool dict (``k`` and optionally
+        ``k_codes``/``k_scale``).
+      block_table: int32 ``[B, max_blocks]`` logical→physical pages.
+      cfg: filter config (``key_block`` == the page size).
+      valid / cache_length / live_budget: as in
+        :func:`mpmrf_decode_block_select`.
+    """
+    from repro.runtime import paged_cache as pgc
+
+    bk = cfg.key_block
+    if "k_codes" in cache:
+        codes = pgc.gather_logical_rows(cache["k_codes"], block_table, bk)
+        scales = pgc.gather_logical_scales(cache["k_scale"], block_table)
+        k_quant = qlib.blockwise_quantized_view(codes, scales, bk)
+        return mpmrf_decode_block_select(
+            q, None, cfg, valid, cache_length,
+            k_quant=k_quant, live_budget=live_budget,
+        )
+    k_log = pgc.gather_logical_rows(cache["k"], block_table, bk)
+    return mpmrf_decode_block_select(
+        q, k_log, cfg, valid, cache_length, live_budget=live_budget,
     )
 
 

@@ -218,7 +218,82 @@ def decode_block_gather_attention(
     idx = block_indices[..., 0, :]               # [..., B]
     kg = jnp.take_along_axis(kb, idx[..., :, None, None], axis=-3)
     vg = jnp.take_along_axis(vb, idx[..., :, None, None], axis=-3)
+    return _gathered_decode_attention(
+        q, kg, vg, idx, block_valid, cache_length, bk,
+        window=window, scale=scale,
+    )
 
+
+def paged_decode_block_gather_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_indices: jax.Array,
+    block_valid: jax.Array,
+    block_table: jax.Array,
+    cache_length: jax.Array,
+    key_block: int,
+    *,
+    window=None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Paged l=1 decode gather: survivors come out of the shared pool.
+
+    The survivor table carries *logical* block ids; composing it with
+    the slot's block table yields the physical pages, and only those
+    pages are gathered — the per-slot padded cache is never
+    materialized. The gathered tiles and all downstream math are
+    identical to :func:`decode_block_gather_attention` on the
+    equivalent unpaged cache (same values, same shapes, same reduction
+    order), so paged and unpaged decode outputs are bit-identical.
+
+    Args:
+      q: ``[B, KV, n_q, d]`` folded query rows.
+      k_pool, v_pool: ``[KV, pool_rows, d]`` shared page pools.
+      block_indices / block_valid: ``[B, KV, 1, budget]`` *logical*
+        survivor table from
+        :func:`repro.core.filtering.mpmrf_paged_block_select`.
+      block_table: int32 ``[B, max_blocks]`` logical→physical pages.
+      cache_length: ``[B]`` true lengths; key positions for masking are
+        logical (``logical_id · key_block + offset``).
+    """
+    from repro.runtime import paged_cache as pgc
+
+    bk = key_block
+    kv, pool_rows, d = k_pool.shape
+    idx = block_indices[..., 0, :]                       # [B, KV, budget]
+    phys = pgc.compose_physical_blocks(block_table, idx)  # [B, KV, budget]
+    kb = k_pool.reshape(1, kv, pool_rows // bk, bk, d)
+    vb = v_pool.reshape(1, kv, pool_rows // bk, bk, d)
+    kg = jnp.take_along_axis(kb, phys[..., :, None, None], axis=-3)
+    vg = jnp.take_along_axis(vb, phys[..., :, None, None], axis=-3)
+    return _gathered_decode_attention(
+        q, kg, vg, idx, block_valid, cache_length, bk,
+        window=window, scale=scale,
+    )
+
+
+def _gathered_decode_attention(
+    q: jax.Array,
+    kg: jax.Array,
+    vg: jax.Array,
+    idx: jax.Array,
+    block_valid: jax.Array,
+    cache_length: jax.Array,
+    bk: int,
+    *,
+    window=None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Shared tail of the (un)paged block-gather decode paths.
+
+    q ``[..., n_q, d]``; kg/vg ``[..., budget, bk, d]`` gathered tiles;
+    ``idx`` ``[..., budget]`` *logical* block ids (drives position
+    masking); block_valid ``[..., 1, budget]``.
+    """
+    d = q.shape[-1]
+    budget = idx.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
     scores = jnp.einsum(
         "...qd,...jkd->...qjk", q, kg,
         preferred_element_type=jnp.float32,
@@ -247,7 +322,7 @@ def decode_block_gather_attention(
     denom = jnp.maximum(jnp.sum(exp, axis=-1, keepdims=True), 1e-30)
     probs = (exp / denom).reshape(scores.shape)
     return jnp.einsum(
-        "...qjk,...jkd->...qd", probs.astype(v_cache.dtype), vg
+        "...qjk,...jkd->...qd", probs.astype(vg.dtype), vg
     )
 
 

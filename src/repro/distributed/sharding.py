@@ -335,6 +335,52 @@ def cache_shardings(cache_shapes: Any, mesh: Mesh):
     )
 
 
+def paged_pool_pspec(path, leaf, mesh: Mesh, page_size: int) -> P:
+    """Page-pool decode-cache shardings (paged serving, DESIGN.md §4).
+
+    Pool leaves carry **no batch axis** — slots share the pool through
+    replicated block tables — so the batch-DP rule of
+    :func:`kv_cache_pspec` does not apply:
+
+    * ``k``/``v``/``k_codes`` ``[L, KV, pool_rows, hd]``: KV heads over
+      'model' when divisible (the filter, the gather and the write
+      scatter all stay device-local, exactly like the unpaged layout);
+      otherwise the *page-row* axis shards over 'model' — but only when
+      the shard boundary is page-aligned (``shard_rows % page_size ==
+      0``), since a page split across devices would break the
+      scalar-prefetch page streaming.
+    * ``k_scale`` ``[L, KV, num_pages]``: follows the KV-head rule.
+    """
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    spec = [None] * leaf.ndim
+    if not ("model" in mesh.axis_names) or leaf.ndim < 3:
+        return P(*spec)
+    model_n = mesh.shape["model"]
+    if name in ("k", "v", "k_codes") and leaf.ndim >= 4:
+        kv_dim, row_dim = leaf.ndim - 3, leaf.ndim - 2
+        if leaf.shape[kv_dim] % model_n == 0:
+            spec[kv_dim] = "model"
+        elif (leaf.shape[row_dim] % model_n == 0
+              and (leaf.shape[row_dim] // model_n) % page_size == 0):
+            spec[row_dim] = "model"
+    elif name == "k_scale":
+        kv_dim = leaf.ndim - 2
+        if leaf.shape[kv_dim] % model_n == 0:
+            spec[kv_dim] = "model"
+    return P(*spec)
+
+
+def paged_cache_shardings(cache_shapes: Any, mesh: Mesh, page_size: int):
+    """Pytree of NamedSharding for a paged decode cache (page pools)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, paged_pool_pspec(path, leaf, mesh, page_size)
+        ),
+        cache_shapes,
+    )
+
+
 def constrain_activations(x: jax.Array, mesh: Mesh) -> jax.Array:
     """Pin token activations ``[B, n, d]`` to batch-DP sharding."""
     dp = data_axes(mesh)

@@ -10,5 +10,6 @@ from repro.kernels.ops import (  # noqa: F401
     energon_block_attention,
     flash_attention,
     fused_decode_attention,
+    fused_paged_decode_attention,
     mpmrf_select_blocks,
 )

@@ -154,6 +154,131 @@ def mpmrf_decode_filter_scores(
     return s0[:, 0, :], s1[:, 0, :]
 
 
+def _paged_filter_kernel(
+    bt_ref, cl_ref,                       # scalar-prefetch operands
+    qp_ref, qs_ref, kc_ref, ks_ref,
+    s0_ref, s1_ref,
+    *, lo: int, hi: int, block_k: int,
+):
+    """Paged variant of the decode filter: grid step (b, j) streams the
+    *physical page* ``bt[b, j]`` holding slot b's logical block j — the
+    BlockSpec index maps read the scalar-prefetched block table, so the
+    HBM→VMEM pipeline only ever touches pages the table names. The
+    in-register bit-plane math, rescale association, and logical
+    position masking are identical to ``_decode_filter_kernel``, so
+    paged and unpaged block scores are bit-identical."""
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    codes = kc_ref[...].astype(jnp.int32)             # [bk, d]
+    msb = jnp.right_shift(codes, 16 - lo)
+    hi_plane = jnp.right_shift(codes, 16 - hi)
+    rem = hi_plane - jnp.left_shift(msb, hi - lo)
+
+    qp = qp_ref[...]                                  # [G, d] int32
+    acc0 = jax.lax.dot_general(
+        qp, msb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    acc1 = jnp.left_shift(acc0, hi - lo) + jax.lax.dot_general(
+        qp, rem, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    qs = qs_ref[...] * float(2 ** (16 - hi))          # [G, 1]
+    ks = ks_ref[0]                                    # page's scale
+    s0 = (acc0.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - lo)))
+    s1 = (acc1.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - hi)))
+
+    g = qp.shape[0]
+    # positions are *logical*: block j's tokens, wherever they live
+    kpos = j * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (g, block_k), 1
+    )
+    ok = kpos < cl_ref[b]
+    s0 = jnp.where(ok, s0, NEG_INF)
+    s1 = jnp.where(ok, s1, NEG_INF)
+    s0_ref[0, j] = jnp.max(s0)
+    s1_ref[0, j] = jnp.max(s1)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("round_bits", "key_block", "interpret"),
+)
+def mpmrf_paged_filter_scores(
+    q_plane: jax.Array,
+    q_scale: jax.Array,
+    k_codes_pages: jax.Array,
+    k_page_scale: jax.Array,
+    block_table: jax.Array,
+    cache_length: jax.Array,
+    *,
+    round_bits: Tuple[int, int] = (2, 4),
+    key_block: int = 64,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Two-round block-max decode scores off the resident *page pool*.
+
+    Args:
+      q_plane: int32 ``[bh, G, d]`` query hi-bit plane.
+      q_scale: float32 ``[bh, G, 1]`` per-row quantization scales.
+      k_codes_pages: int16 ``[n_pages, bk, d]`` pool codes, page-major
+        (callers fold the KV-head axis into the page axis and offset
+        the table accordingly).
+      k_page_scale: float32 ``[n_pages, 1]`` per-page scales.
+      block_table: int32 ``[bh, mb]`` physical page of each logical
+        block (already head-offset). Unmapped blocks may alias any
+        in-range page — their logical positions are ≥ cache_length, so
+        every score they produce is NEG_INF-masked.
+      cache_length: int32 ``[bh]`` live logical lengths.
+
+    Returns:
+      ``(s0, s1)`` float32 ``[bh, mb]`` block-max scores per round.
+    """
+    lo, hi = round_bits
+    bh, g, d = q_plane.shape
+    bk = key_block
+    mb = block_table.shape[-1]
+
+    kernel = functools.partial(
+        _paged_filter_kernel, lo=lo, hi=hi, block_k=bk
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, mb),
+        in_specs=[
+            pl.BlockSpec((None, g, d), lambda b, j, bt, cl: (b, 0, 0)),
+            pl.BlockSpec((None, g, 1), lambda b, j, bt, cl: (b, 0, 0)),
+            pl.BlockSpec(
+                (None, bk, d), lambda b, j, bt, cl: (bt[b, j], 0, 0)
+            ),
+            pl.BlockSpec((None, 1), lambda b, j, bt, cl: (bt[b, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, 1, mb), lambda b, j, bt, cl: (b, 0, 0)),
+            pl.BlockSpec((None, 1, mb), lambda b, j, bt, cl: (b, 0, 0)),
+        ],
+    )
+    s0, s1 = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, 1, mb), jnp.float32),
+            jax.ShapeDtypeStruct((bh, 1, mb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        block_table.astype(jnp.int32),
+        cache_length.astype(jnp.int32),
+        q_plane.astype(jnp.int32),
+        q_scale.astype(jnp.float32),
+        k_codes_pages,
+        k_page_scale.astype(jnp.float32),
+    )
+    return s0[:, 0, :], s1[:, 0, :]
+
+
 def _decode_gather_kernel(
     idx_ref, val_ref, cl_ref,             # scalar-prefetch operands
     q_ref, k_ref, v_ref, o_ref,
@@ -274,4 +399,139 @@ def decode_gather_attention(
         block_valid.astype(jnp.int32),
         cache_length.astype(jnp.int32),
         q, k_cache, v_cache,
+    )
+
+
+def _paged_gather_kernel(
+    idx_ref, val_ref, bt_ref, cl_ref,     # scalar-prefetch operands
+    q_ref, k_ref, v_ref, o_ref,
+    m_scratch, l_scratch, acc_scratch,
+    *, sm_scale: float, block_k: int, budget: int,
+):
+    """Paged survivor-gather: the K/V BlockSpec index maps compose the
+    survivor table with the block table (``bt[b, idx[b, slot]]`` —
+    selected logical block → physical page), so the HBM→VMEM pipeline
+    streams exactly the selected resident pages: unselected *and
+    unmapped* pages never leave HBM. Flash accumulation is the same as
+    the unpaged kernel; position masking uses the *logical* block id."""
+    b = pl.program_id(0)
+    slot = pl.program_id(1)
+
+    @pl.when(slot == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    kb = idx_ref[b, slot]                 # logical block id
+    is_valid = val_ref[b, slot]
+
+    q = q_ref[...].astype(jnp.float32)                # [G, d]
+    k = k_ref[...].astype(jnp.float32)                # [bk, d]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * sm_scale                                      # [G, bk]
+
+    g = q.shape[0]
+    kpos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (g, block_k), 1
+    )
+    mask = jnp.logical_and(is_valid > 0, kpos < cl_ref[b])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[:, 0:1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_scratch[:, 0:1] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * corr + jax.lax.dot(
+        p, v_ref[...].astype(jnp.float32)
+    )
+    m_scratch[...] = jnp.broadcast_to(m_new, m_scratch.shape)
+    l_scratch[...] = jnp.broadcast_to(l_new, l_scratch.shape)
+
+    @pl.when(slot == budget - 1)
+    def _finalize():
+        o_ref[...] = (
+            acc_scratch[...] / jnp.maximum(l_scratch[:, 0:1], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("key_block", "scale", "interpret"),
+)
+def paged_decode_gather_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_indices: jax.Array,
+    block_valid: jax.Array,
+    block_table: jax.Array,
+    cache_length: jax.Array,
+    *,
+    key_block: int = 64,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Two-level survivor-table decode attention over a page pool.
+
+    Args:
+      q: ``[bh, G, d]`` folded query rows.
+      k_pages, v_pages: ``[n_pages, bk, d]`` page-major pools (KV-head
+        axis folded into the page axis by the caller).
+      block_indices / block_valid: int32 ``[bh, budget]`` — *logical*
+        survivor block ids + validity bits.
+      block_table: int32 ``[bh, mb]`` logical block → physical page
+        (head-offset). Composed with ``block_indices`` inside the
+        BlockSpec index maps.
+      cache_length: int32 ``[bh]`` live logical lengths.
+    """
+    bh, g, d = q.shape
+    bk = key_block
+    budget = block_indices.shape[-1]
+    sm_scale = scale if scale is not None else 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _paged_gather_kernel,
+        sm_scale=sm_scale, block_k=bk, budget=budget,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bh, budget),
+        in_specs=[
+            pl.BlockSpec(
+                (None, g, d), lambda b, j, idx, val, bt, cl: (b, 0, 0)
+            ),
+            pl.BlockSpec(
+                (None, bk, d),
+                lambda b, j, idx, val, bt, cl: (bt[b, idx[b, j]], 0, 0),
+            ),
+            pl.BlockSpec(
+                (None, bk, d),
+                lambda b, j, idx, val, bt, cl: (bt[b, idx[b, j]], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (None, g, d), lambda b, j, idx, val, bt, cl: (b, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((g, _LANES), jnp.float32),
+            pltpu.VMEM((g, _LANES), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, g, d), v_pages.dtype),
+        interpret=interpret,
+    )(
+        block_indices.astype(jnp.int32),
+        block_valid.astype(jnp.int32),
+        block_table.astype(jnp.int32),
+        cache_length.astype(jnp.int32),
+        q, k_pages, v_pages,
     )

@@ -223,6 +223,43 @@ def fused_decode_attention(
         interpret=interpret,
     )
 
+    idx, val = _fused_decode_select(
+        s0, s1, cl_bh,
+        alphas=alphas, key_block=bk, block_budget=block_budget,
+        keep_all=keep_all, keep_first=keep_first,
+        keep_diagonal=keep_diagonal,
+        live_budget=live_budget, heads=heads,
+    )
+
+    out = dec_kernel.decode_gather_attention(
+        q.reshape(bh, g, d),
+        k_cache.reshape(bh, n_k, d),
+        v_cache.reshape(bh, n_k, d),
+        idx, val, cl_bh,
+        key_block=bk, scale=scale, interpret=interpret,
+    )
+    return out.reshape(batch, heads, g, d)
+
+
+def _fused_decode_select(
+    s0: jax.Array,
+    s1: jax.Array,
+    cl_bh: jax.Array,
+    *,
+    alphas: Tuple[float, ...],
+    key_block: int,
+    block_budget: int,
+    keep_all: bool,
+    keep_first: bool,
+    keep_diagonal: bool,
+    live_budget: Optional[jax.Array],
+    heads: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 3 thresholds + exact-budget tier selection on the kernel's
+    ``[bh, n_kb]`` block-max score planes — the one selection rule the
+    fused unpaged and paged decode paths share with the XLA paths
+    (:func:`repro.core.filtering.decode_block_tier_select`), which is
+    what keeps all of them bit-identical in selection."""
     blk_valid = s0 > NEG_INF / 2
     keep = blk_valid
     if not keep_all:
@@ -231,21 +268,106 @@ def fused_decode_attention(
         theta1 = flt.eq3_threshold(s1, alphas[1], keep)
         keep = jnp.logical_and(keep, s1 >= theta1)
 
-    newest = (cl_bh - 1) // bk
+    newest = (cl_bh - 1) // key_block
     lb_bh = None
     if live_budget is not None:
         lb_bh = jnp.repeat(live_budget.astype(jnp.int32), heads)
-    idx, val = flt.decode_block_tier_select(
+    return flt.decode_block_tier_select(
         s1, keep, blk_valid, newest, block_budget,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
         live_budget=lb_bh,
     )
 
-    out = dec_kernel.decode_gather_attention(
+
+def fused_paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    k_codes: jax.Array,
+    k_scale: jax.Array,
+    block_table: jax.Array,
+    cache_length: jax.Array,
+    *,
+    round_bits: Tuple[int, ...] = (2, 4),
+    alphas: Tuple[float, ...] = (0.0, 0.0),
+    key_block: int = 64,
+    block_budget: int = 8,
+    keep_all: bool = False,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    live_budget: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Pallas decode over a shared page pool (paged l = 1).
+
+    Same pipeline as :func:`fused_decode_attention`, but cache state is
+    the page pool and both kernels address it through the block table:
+    the filter kernel's BlockSpec streams physical pages named by the
+    table, and the gather kernel composes the survivor table with the
+    block table inside its index maps (selected logical block →
+    physical page → stream K/V), so unselected *and unmapped* pages
+    never leave HBM. The Eq. 3 + tier-selection step between the
+    kernels is shared with the unpaged fused path and the XLA paths —
+    selections agree bit-for-bit.
+
+    Args:
+      q: ``[B, KV, G, d]`` folded GQA query rows.
+      k_pool, v_pool: ``[KV, pool_rows, d]`` shared page pools.
+      k_codes: int16 ``[KV, pool_rows, d]`` resident filter codes.
+      k_scale: f32 ``[KV, num_pages]`` resident per-page scales.
+      block_table: int32 ``[B, max_blocks]`` logical → physical pages.
+      cache_length: int32 ``[B]`` live logical lengths.
+      live_budget: optional int32 ``[B]`` per-slot effective budget.
+
+    Returns:
+      ``[B, KV, G, d]`` attention output (dtype of v_pool).
+    """
+    if len(round_bits) != 2:
+        raise ValueError("fused decode kernel supports 2-round configs")
+    interpret = _default_interpret() if interpret is None else interpret
+    batch, heads, g, d = q.shape
+    pool_rows = k_pool.shape[-2]
+    bk = key_block
+    num_pages = pool_rows // bk
+    mb = block_table.shape[-1]
+    bh = batch * heads
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    qp = q16.bit_plane(round_bits[-1]).reshape(bh, g, d)
+    qs = q16.scale.reshape(bh, g, 1)
+    cl_bh = jnp.repeat(cache_length.astype(jnp.int32), heads)
+    # Head-offset physical table: the pools fold the KV-head axis into
+    # the page axis ([KV, P, ...] → [KV·P, ...]), so row b·KV+h of the
+    # table points at head h's copy of the slot's pages.
+    head_off = (jnp.arange(heads, dtype=jnp.int32) * num_pages)
+    bt_bh = (
+        block_table.astype(jnp.int32)[:, None, :] + head_off[None, :, None]
+    ).reshape(bh, mb)
+
+    s0, s1 = dec_kernel.mpmrf_paged_filter_scores(
+        qp, qs,
+        k_codes.reshape(heads * num_pages, bk, d),
+        k_scale.reshape(heads * num_pages, 1),
+        bt_bh, cl_bh,
+        round_bits=tuple(round_bits),
+        key_block=bk,
+        interpret=interpret,
+    )
+
+    idx, val = _fused_decode_select(
+        s0, s1, cl_bh,
+        alphas=alphas, key_block=bk, block_budget=block_budget,
+        keep_all=keep_all, keep_first=keep_first,
+        keep_diagonal=keep_diagonal,
+        live_budget=live_budget, heads=heads,
+    )
+
+    out = dec_kernel.paged_decode_gather_attention(
         q.reshape(bh, g, d),
-        k_cache.reshape(bh, n_k, d),
-        v_cache.reshape(bh, n_k, d),
-        idx, val, cl_bh,
+        k_pool.reshape(heads * num_pages, bk, d),
+        v_pool.reshape(heads * num_pages, bk, d),
+        idx, val, bt_bh, cl_bh,
         key_block=bk, scale=scale, interpret=interpret,
     )
     return out.reshape(batch, heads, g, d)

@@ -1,9 +1,13 @@
-"""Serving launcher: chunked-prefill + batched sparse decode.
+"""Serving launcher: chunked-prefill + batched sparse decode over a
+paged KV cache.
 
 ``python -m repro.launch.serve --arch <id> --smoke`` starts the
 continuous-batching engine on synthetic requests and reports prefill and
-decode throughput separately. The full-size serve_step is exercised by
-the decode_* dry-run shapes.
+decode throughput plus per-request latency percentiles. The cache is
+paged whenever the arch supports it (``--unpaged`` forces the
+contiguous layout; ``--num-pages`` oversubscribes the pool below
+``slots × blocks`` to exercise preemption). The full-size serve_step is
+exercised by the decode_* dry-run shapes.
 """
 
 from __future__ import annotations
@@ -22,6 +26,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--unpaged", action="store_true",
+                    help="force the contiguous batch×max_len cache")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="paged pool size (default slots×blocks; smaller "
+                         "values oversubscribe and may preempt)")
     args = ap.parse_args()
 
     import jax
@@ -29,15 +38,17 @@ def main():
 
     from repro.configs.registry import get_config, get_smoke_config
     from repro.models import LMModel
-    from repro.runtime import Request, ServeLoop
+    from repro.runtime import Request, ServeLoop, attention_cache_bytes
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    paged = None if not args.unpaged else False
     engine = ServeLoop(
         model, params, batch_slots=args.batch_slots, max_len=args.max_len,
         eos_token=cfg.vocab_size - 1, prefill_chunk=args.prefill_chunk,
+        paged=paged, num_pages=args.num_pages,
     )
     rng = np.random.default_rng(0)
     for uid in range(args.requests):
@@ -52,6 +63,7 @@ def main():
     m = engine.metrics
     total_tokens = sum(len(r.tokens_out) for r in done)
     mode = "chunked" if engine.prefill_fn is not None else "sequential"
+    cache_mode = "paged" if engine.paged else "contiguous"
     print(f"[serve] {cfg.name}: {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s end-to-end)")
     print(f"[serve] prefill ({mode}): {m.prefill_tokens} tok in "
@@ -60,6 +72,23 @@ def main():
     print(f"[serve] decode: {m.decode_tokens} tok in "
           f"{m.decode_dispatches} dispatches "
           f"({m.decode_tokens_per_sec:.1f} tok/s, {m.ticks} ticks)")
+    lat = m.latency_stats()
+    print(f"[serve] latency: ttft p50/p95 "
+          f"{lat['ttft_p50']*1e3:.1f}/{lat['ttft_p95']*1e3:.1f} ms, "
+          f"itl p50/p95 {lat['itl_p50']*1e3:.1f}/{lat['itl_p95']*1e3:.1f} ms, "
+          f"queue p95 {lat['queue_wait_p95']*1e3:.1f} ms")
+    if engine.paged:
+        pool = attention_cache_bytes(engine.cache)
+        page = pool // engine.layout.num_pages
+        print(f"[serve] cache ({cache_mode}): "
+              f"{engine.layout.num_pages} pages × {page} B = {pool} B pool, "
+              f"peak {m.peak_pages_in_use} pages in use "
+              f"({m.peak_pages_in_use * page} B), "
+              f"{m.preemptions} preemptions")
+    else:
+        print(f"[serve] cache ({cache_mode}): "
+              f"{attention_cache_bytes(engine.cache)} B "
+              f"({args.batch_slots} slots × {engine.max_len} rows)")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,12 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import EnergonConfig, energon_attention, energon_decode_attention
+from repro.core import (
+    EnergonConfig,
+    energon_attention,
+    energon_decode_attention,
+    energon_paged_decode_attention,
+)
 from repro.core import quantization as qlib
 from repro.distributed import sharding as shd
 from repro.models import layers as L
@@ -369,6 +374,259 @@ def decode_attention_block(
     out = energon_decode_attention(
         qg, new_cache["k"], new_cache["v"], cache_index + 1, energon,
         layer_index=layer_index, window=window, filter_cache=filter_cache,
+    )
+    y = _unfold_heads_out(out, params, num_heads, 1)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV-cache serve path (shared page pool + block-table indirection)
+# ---------------------------------------------------------------------------
+
+
+def init_paged_kv_cache(
+    num_pages: int,
+    num_kv_heads: int,
+    page_size: int,
+    head_dim: int,
+    dtype,
+    filter_planes: bool = True,
+) -> Dict[str, jax.Array]:
+    """One layer's shared page pool (``repro.runtime.paged_cache``
+    layout): K/V rows ``[KV, num_pages · page_size, hd]`` plus — when
+    the decode filter cache is enabled — the per-page filter operands
+    (int16 codes in cache layout, one f32 absmax scale per physical
+    page, so the PR 2 incremental-quantization invariant holds per
+    page). There is no batch axis: slots address the pool through their
+    block tables."""
+    rows = num_pages * page_size
+    cache = {
+        "k": jnp.zeros((num_kv_heads, rows, head_dim), dtype),
+        "v": jnp.zeros((num_kv_heads, rows, head_dim), dtype),
+    }
+    if filter_planes:
+        cache["k_codes"] = jnp.zeros(
+            (num_kv_heads, rows, head_dim), jnp.int16
+        )
+        cache["k_scale"] = jnp.zeros((num_kv_heads, num_pages), jnp.float32)
+    return cache
+
+
+def _project_update_fold_paged(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,
+    block_table: jax.Array,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float,
+    use_qk_norm: bool,
+    filter_block: int = 0,
+    write_mask: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Paged serve-path front half: the write site appends *through the
+    block table*. Token (b, c) at logical position p lands in pool row
+    ``table[b, p // ps] · ps + p % ps``; sentinel positions and
+    masked-off slots resolve to an out-of-range row and the
+    ``mode="drop"`` scatter discards them (in a shared pool an idle
+    slot must not self-heal — its table may alias pages a live slot
+    owns, so idle writes are *dropped*, not overwritten later).
+
+    Filter-operand maintenance mirrors the unpaged invariant per
+    physical page: a decode append (C = 1) re-quantizes exactly the one
+    touched page per active slot; a prefill chunk re-quantizes the
+    whole pool (every page's codes/scale equal a fresh per-page
+    quantization of its float rows at every step).
+    """
+    from repro.runtime import paged_cache as pgc
+
+    batch, chunk, _ = x.shape
+    ps = filter_block if filter_block > 0 else 0
+    if ps <= 0:
+        raise ValueError("paged cache needs a positive page size")
+    q, k, v = _project_qkv(params, x, positions, use_qk_norm, rope_theta)
+    q = q.transpose(0, 2, 1, 3)              # [B, H, C, hd]
+    k_new = k.transpose(0, 2, 1, 3)          # [B, KV, C, hd]
+    v_new = v.transpose(0, 2, 1, 3)
+
+    mesh = shd.get_active_mesh()
+    kv_head_sharded = (
+        mesh is not None and "model" in mesh.axis_names
+        and num_kv_heads % mesh.shape["model"] == 0
+    )
+    q = shd.constrain(
+        q,
+        ("dp", "model" if kv_head_sharded else None, None, None),
+        allow_uneven=True,
+    )
+
+    rowid = pgc.paged_row_targets(
+        positions, block_table, ps, write_mask=write_mask
+    )                                        # [B, C]
+    flat_rows = rowid.reshape(-1)            # [B·C]
+    k_flat = k_new.transpose(1, 0, 2, 3).reshape(num_kv_heads, -1, k_new.shape[-1])
+    v_flat = v_new.transpose(1, 0, 2, 3).reshape(num_kv_heads, -1, v_new.shape[-1])
+    k_pool = cache["k"].at[:, flat_rows].set(
+        k_flat.astype(cache["k"].dtype), mode="drop"
+    )
+    v_pool = cache["v"].at[:, flat_rows].set(
+        v_flat.astype(cache["v"].dtype), mode="drop"
+    )
+
+    new_cache = dict(cache)
+    new_cache["k"] = k_pool
+    new_cache["v"] = v_pool
+    if "k_codes" in cache:
+        num_pages = cache["k_scale"].shape[-1]
+        if chunk == 1:
+            # touched-page refresh: O(ps·hd) per active slot
+            mb = block_table.shape[-1]
+            blk = jnp.clip(positions[:, 0] // ps, 0, mb - 1)
+            page = jnp.take_along_axis(
+                block_table, blk[:, None], axis=-1
+            )[:, 0]                          # [B]
+            ok = positions[:, 0] < mb * ps
+            if write_mask is not None:
+                ok = jnp.logical_and(ok, write_mask)
+            kb = k_pool.reshape(num_kv_heads, num_pages, ps, -1)
+            sel = jnp.moveaxis(
+                jnp.take(kb, page, axis=1), 1, 0
+            )                                # [B, KV, ps, hd]
+            new_codes, new_scale = qlib.quantize_int16_blocks(sel, ps)
+            page_oob = jnp.where(ok, page, jnp.int32(2 ** 30))
+            code_rows = jnp.where(
+                ok[:, None],
+                page[:, None] * ps + jnp.arange(ps)[None, :],
+                jnp.int32(2 ** 30),
+            ).reshape(-1)                    # [B·ps]
+            codes_flat = new_codes.transpose(1, 0, 2, 3).reshape(
+                num_kv_heads, -1, new_codes.shape[-1]
+            )
+            codes = cache["k_codes"].at[:, code_rows].set(
+                codes_flat.astype(jnp.int16), mode="drop"
+            )
+            scales = cache["k_scale"].at[:, page_oob].set(
+                new_scale[..., 0].T, mode="drop"
+            )
+        else:
+            # Prefill chunk: refresh every page from the updated pool —
+            # the same whole-cache choice the unpaged prefill makes
+            # (and the pool is smaller than batch×max_len, so this is
+            # strictly cheaper than the unpaged refresh). A ranged
+            # refresh of just the ≤ ceil(C/ps)+1 touched pages per slot
+            # would shrink it further, at the cost of weakening the
+            # pool-wide invariant to mapped-pages-only.
+            codes, scales = qlib.quantize_int16_blocks(k_pool, ps)
+            codes = codes.astype(jnp.int16)
+        new_cache["k_codes"] = codes
+        new_cache["k_scale"] = scales
+
+    groups = num_heads // num_kv_heads
+    head_dim = q.shape[-1]
+    if groups > 1:
+        q = q.reshape(batch, num_kv_heads, groups * chunk, head_dim)
+    return q, new_cache
+
+
+def paged_prefill_attention_block(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    positions: jax.Array,
+    block_table: jax.Array,
+    energon: EnergonConfig,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float = 10000.0,
+    use_qk_norm: bool = False,
+    window: Optional[jax.Array] = None,
+    layer_index: int = 10**9,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention against the page pool.
+
+    The chunk's K/V rows are scattered through the block table, then the
+    per-slot *logical* K/V views are materialized (a transient gather —
+    persistent state stays pool-sized) and the chunk attends them
+    through the unchanged ``energon_attention`` q_positions path. The
+    gathered view is value-identical to the equivalent unpaged cache,
+    so paged and unpaged prefill logits agree bit-for-bit.
+    """
+    from repro.runtime import paged_cache as pgc
+
+    chunk = x.shape[1]
+    ps = energon.decode_key_block
+    qg, new_cache = _project_update_fold_paged(
+        params, x, cache, positions, block_table,
+        num_heads=num_heads, num_kv_heads=num_kv_heads,
+        rope_theta=rope_theta, use_qk_norm=use_qk_norm,
+        filter_block=ps,
+    )
+    k_log = pgc.gather_logical_rows(new_cache["k"], block_table, ps)
+    v_log = pgc.gather_logical_rows(new_cache["v"], block_table, ps)
+    # Zero the view past each slot's written extent: unmapped logical
+    # blocks alias page 0 (another occupant's rows), and the per-head
+    # absmax of row/block selection would otherwise quantize against
+    # them. The unpaged cache holds zeros there — zeroing makes the
+    # views (and hence prefill logits) bit-identical. Positions are
+    # contiguous per slot (sentinels ≥ logical rows), so max+1 bounds
+    # every row written so far.
+    logical_rows = block_table.shape[-1] * ps
+    extent = jnp.max(
+        jnp.where(positions < logical_rows, positions + 1, 0), axis=1
+    )                                        # [B]
+    row_ok = (
+        jnp.arange(logical_rows)[None, :] < extent[:, None]
+    )[:, None, :, None]
+    k_log = k_log * row_ok
+    v_log = v_log * row_ok
+    groups = num_heads // num_kv_heads
+    qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
+    out = energon_attention(
+        qg, k_log, v_log, energon,
+        causal=True, window=window, layer_index=layer_index,
+        q_positions=qpos,
+    )
+    y = _unfold_heads_out(out, params, num_heads, chunk)
+    return y, new_cache
+
+
+def paged_decode_attention_block(
+    params,
+    x: jax.Array,
+    cache: Dict[str, jax.Array],
+    cache_index: jax.Array,
+    block_table: jax.Array,
+    energon: EnergonConfig,
+    *,
+    num_heads: int,
+    num_kv_heads: int,
+    rope_theta: float = 10000.0,
+    use_qk_norm: bool = False,
+    window: Optional[int] = None,
+    layer_index: int = 10**9,
+    active: Optional[jax.Array] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token paged decode step. x ``[B, 1, d]``; cache_index ``[B]``.
+
+    Appends through the block table (``active`` gates slots whose write
+    must be dropped — in a shared pool an idle slot's table may alias
+    live pages) and runs the paged Energon decode attention: selection
+    and output are bit-identical to the unpaged path on the same
+    logical contents.
+    """
+    qg, new_cache = _project_update_fold_paged(
+        params, x, cache, cache_index[:, None], block_table,
+        num_heads=num_heads, num_kv_heads=num_kv_heads,
+        rope_theta=rope_theta, use_qk_norm=use_qk_norm,
+        filter_block=energon.decode_key_block,
+        write_mask=active,
+    )
+    out = energon_paged_decode_attention(
+        qg, new_cache, block_table, cache_index + 1, energon,
+        layer_index=layer_index, window=window,
     )
     y = _unfold_heads_out(out, params, num_heads, 1)
     return y, new_cache

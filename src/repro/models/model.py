@@ -416,6 +416,70 @@ class LMModel:
         """
         return self.cfg.family in ("dense", "moe", "vlm", "audio")
 
+    @property
+    def supports_paged(self) -> bool:
+        """True when the family can serve from a shared page pool.
+
+        Needs a positional KV cache (attention families — recurrent
+        state is O(1) per slot, paging it is meaningless), a positive
+        ``decode_key_block`` (pages are exactly decode key blocks), and
+        a non-dense impl (pure dense decode has no block machinery to
+        page against).
+        """
+        e = self.cfg.energon
+        return (
+            self.supports_prefill
+            and e.decode_key_block > 0
+            and e.impl in ("mpmrf_row", "mpmrf_block", "pallas")
+        )
+
+    def init_paged_cache(self, num_pages: int) -> Dict[str, Any]:
+        """Shared page-pool decode cache (DESIGN.md §4): per-layer pools
+        with **no batch axis** — slots address them through the block
+        table the scheduler threads via ``inputs['block_table']``."""
+        cfg = self.cfg
+        if not self.supports_paged:
+            raise ValueError(
+                f"paged cache unsupported for family={cfg.family!r} / "
+                f"impl={cfg.energon.impl!r}"
+            )
+        one = attn_lib.init_paged_kv_cache(
+            num_pages, cfg.num_kv_heads, cfg.energon.decode_key_block,
+            cfg.head_dim, self._dtype,
+            filter_planes=cfg.energon.uses_filter_cache,
+        )
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(
+                a, (cfg.num_layers,) + a.shape
+            ).copy(),
+            one,
+        )
+
+    def reset_pages(self, cache, page_mask: jax.Array):
+        """Zero the K/V rows, filter codes and absmax scales of the
+        masked physical pages (``page_mask`` ``[num_pages]`` bool).
+
+        The paged analogue of :meth:`reset_decode_slots`: a page handed
+        to a new occupant still holds its previous occupant's rows, and
+        a boundary page mixing fresh rows with stale ones would
+        quantize the fresh rows against an inflated stale absmax — so
+        every freshly allocated page is zeroed before first use.
+        """
+        ps = self.cfg.energon.decode_key_block
+        row_mask = jnp.repeat(page_mask, ps)          # [pool_rows]
+        out = dict(cache)
+        for key in ("k", "v", "k_codes"):
+            if key in cache:
+                leaf = cache[key]                     # [L, KV, rows, hd]
+                out[key] = jnp.where(
+                    row_mask[None, None, :, None], 0, leaf
+                )
+        if "k_scale" in cache:
+            out["k_scale"] = jnp.where(
+                page_mask[None, None, :], 0.0, cache["k_scale"]
+            )
+        return out
+
     def prefill(
         self,
         params,
@@ -454,6 +518,10 @@ class LMModel:
         if positions is None:
             positions = cache_index[:, None] + jnp.arange(chunk)[None, :]
         positions = positions.astype(jnp.int32)
+        # paged serving: the scheduler threads the per-slot block table
+        # (logical key block → physical page) alongside the tokens; the
+        # cache write site then appends through it.
+        block_table = inputs.get("block_table")
 
         has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
         windows = self.layer_windows()
@@ -462,6 +530,7 @@ class LMModel:
             return self._prefill_attn_step(
                 layer_params, x, kv_cache,
                 window if has_windows else None, layer_idx, positions,
+                block_table,
             )
 
         x, new_cache = tfm.apply_stack_decode(
@@ -471,10 +540,20 @@ class LMModel:
         return self._logits_out(params, x), new_cache
 
     def _prefill_attn_step(self, layer_params, x, kv_cache, window,
-                           layer_idx, positions):
+                           layer_idx, positions, block_table=None):
         cfg = self.cfg
 
         def attn(p, xn, c):
+            if block_table is not None:
+                return attn_lib.paged_prefill_attention_block(
+                    p, xn, c, positions, block_table, cfg.energon,
+                    num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    rope_theta=cfg.rope_theta,
+                    use_qk_norm=cfg.use_qk_norm,
+                    window=window,
+                    layer_index=layer_idx,
+                )
             return attn_lib.prefill_attention_block(
                 p, xn, c, positions, cfg.energon,
                 num_heads=cfg.num_heads,
@@ -591,9 +670,13 @@ class LMModel:
                 self._dtype
             ) * (cfg.d_model ** 0.5)
         active = inputs.get("active")
+        block_table = inputs.get("block_table")
 
         if cfg.family in ("dense", "moe", "vlm", "audio"):
-            x, new_cache = self._decode_tfm(params, cache, x, cache_index)
+            x, new_cache = self._decode_tfm(
+                params, cache, x, cache_index,
+                block_table=block_table, active=active,
+            )
         elif cfg.family == "ssm":
             x, new_cache = self._decode_xlstm(params, cache, x)
         elif cfg.family == "hybrid":
@@ -608,10 +691,22 @@ class LMModel:
         return logits, new_cache
 
     def _decode_attn_step(self, layer_params, x, kv_cache, window,
-                          layer_idx, cache_index):
+                          layer_idx, cache_index, block_table=None,
+                          active=None):
         cfg = self.cfg
 
         def attn(p, xn, c):
+            if block_table is not None:
+                return attn_lib.paged_decode_attention_block(
+                    p, xn, c, cache_index, block_table, cfg.energon,
+                    num_heads=cfg.num_heads,
+                    num_kv_heads=cfg.num_kv_heads,
+                    rope_theta=cfg.rope_theta,
+                    use_qk_norm=cfg.use_qk_norm,
+                    window=window,
+                    layer_index=layer_idx,
+                    active=active,
+                )
             return attn_lib.decode_attention_block(
                 p, xn, c, cache_index, cfg.energon,
                 num_heads=cfg.num_heads,
@@ -624,7 +719,8 @@ class LMModel:
 
         return self._serve_block_step(layer_params, x, kv_cache, attn)
 
-    def _decode_tfm(self, params, cache, x, cache_index):
+    def _decode_tfm(self, params, cache, x, cache_index,
+                    block_table=None, active=None):
         cfg = self.cfg
         has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
         windows = self.layer_windows()
@@ -633,6 +729,7 @@ class LMModel:
             return self._decode_attn_step(
                 layer_params, x, kv_cache,
                 window if has_windows else None, layer_idx, cache_index,
+                block_table=block_table, active=active,
             )
 
         return tfm.apply_stack_decode(

@@ -5,6 +5,11 @@ from repro.runtime.fault_tolerance import (  # noqa: F401
     StragglerMonitor,
     retry_step,
 )
+from repro.runtime.paged_cache import (  # noqa: F401
+    PageAllocator,
+    PagedLayout,
+    attention_cache_bytes,
+)
 from repro.runtime.serve_loop import (  # noqa: F401
     EngineMetrics,
     Request,

@@ -1,0 +1,285 @@
+"""Paged KV-cache subsystem (vLLM-style block tables at filter granularity).
+
+The serving cache becomes a **shared page pool**: physical pages of
+``page_size`` tokens (= ``EnergonConfig.decode_key_block``, so one page
+is exactly one MP-MRF key block) hold K/V rows *plus the persistent
+quantized filter operands* (int16 ``k_codes`` + one f32 absmax scale per
+page — the PR 2 incremental-quantization invariant holds per physical
+page). Slots no longer own a contiguous ``max_len`` stripe; a host-side
+:class:`PageAllocator` hands out pages on demand and maintains per-slot
+**block tables** mapping logical key block → physical page. Device code
+sees only the pool and the table; every decode path composes its
+survivor selection with the table (two-level indirection), so HBM
+footprint is ``pages_in_use × page_bytes`` instead of
+``batch × max_len``.
+
+Split of responsibilities:
+
+* host (this module): free-list allocator, per-slot block tables,
+  watermark accounting (``pages_in_use`` / ``peak_pages_in_use``),
+  page-need arithmetic. All pure Python/numpy — deterministic (lowest
+  free page id first), no device sync.
+* device (this module's helpers + ``repro.models.attention`` /
+  ``repro.core``): logical→physical row-id computation for the cache
+  write scatter, logical-view gathers for the XLA paths, and the
+  survivor∘table composition for the gather kernels.
+
+Layout convention for pool leaves (per layer, i.e. inside the
+scan-over-layers): ``k``/``v``/``k_codes`` are ``[KV, num_pages ·
+page_size, head_dim]`` — page p owns rows ``[p·ps, (p+1)·ps)`` — and
+``k_scale`` is ``[KV, num_pages]``. There is **no batch axis**: slots
+share the pool through their block tables.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Static geometry of a page pool.
+
+    Attributes:
+      num_pages: physical pages in the pool.
+      page_size: tokens per page (== the decode key block width, so the
+        filter's block granularity and the paging granularity coincide).
+      max_blocks: logical blocks per slot — the compiled decode shape is
+        ``max_blocks · page_size`` logical rows regardless of how many
+        pages a slot actually owns.
+      batch_slots: number of engine slots sharing the pool.
+    """
+
+    num_pages: int
+    page_size: int
+    max_blocks: int
+    batch_slots: int
+
+    def __post_init__(self):
+        if self.num_pages < self.max_blocks:
+            # a lone request may need up to max_blocks pages; a smaller
+            # pool would preempt-loop forever on a long request.
+            raise ValueError(
+                f"num_pages={self.num_pages} < max_blocks="
+                f"{self.max_blocks}: one full-length request could "
+                "never be resident"
+            )
+        if self.page_size <= 0 or self.max_blocks <= 0:
+            raise ValueError("page_size and max_blocks must be positive")
+
+    @property
+    def logical_rows(self) -> int:
+        return self.max_blocks * self.page_size
+
+    @property
+    def pool_rows(self) -> int:
+        return self.num_pages * self.page_size
+
+    def blocks_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` cache rows."""
+        return max(-(-n_tokens // self.page_size), 0)
+
+
+class PageAllocator:
+    """Host-side page allocator: free list + per-slot block tables.
+
+    Allocation is deterministic — the lowest-numbered free page is
+    always handed out first (a heap, not an arbitrary set), so a given
+    request trace produces the same physical placement, the same
+    preemptions, and the same watermark on every run.
+
+    Block tables are **compacted**: a slot's table holds its pages in
+    logical-block order in entries ``[0, n_blocks)``, and every entry
+    beyond that is 0 (a safe in-range page id — device code masks those
+    logical blocks by cache length, so what page they alias is
+    irrelevant, but the gather must stay in bounds).
+    """
+
+    def __init__(self, layout: PagedLayout):
+        self.layout = layout
+        self._free: List[int] = list(range(layout.num_pages))
+        heapq.heapify(self._free)
+        self.block_tables = np.zeros(
+            (layout.batch_slots, layout.max_blocks), np.int32
+        )
+        self.n_blocks = np.zeros((layout.batch_slots,), np.int32)
+        self.pages_in_use = 0
+        self.peak_pages_in_use = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, slot: int, n_pages: int) -> Optional[List[int]]:
+        """Append ``n_pages`` fresh pages to ``slot``'s block table.
+
+        Returns the allocated page ids, or None (state unchanged) when
+        the free list cannot cover the request. The caller must zero the
+        returned pages on device before use: a reused page still holds
+        its previous occupant's rows, and a block absmax computed over
+        stale rows would poison the new occupant's filter scale (the
+        same failure reset_decode_slots guards against in the unpaged
+        cache).
+        """
+        if n_pages < 0:
+            raise ValueError(f"n_pages={n_pages}")
+        base = int(self.n_blocks[slot])
+        if base + n_pages > self.layout.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed max_blocks="
+                f"{self.layout.max_blocks}"
+            )
+        if n_pages > len(self._free):
+            return None
+        pages = [heapq.heappop(self._free) for _ in range(n_pages)]
+        self.block_tables[slot, base:base + n_pages] = pages
+        self.n_blocks[slot] = base + n_pages
+        self.pages_in_use += n_pages
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, self.pages_in_use
+        )
+        return pages
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> Optional[List[int]]:
+        """Grow ``slot``'s table to cover ``n_tokens`` rows.
+
+        Returns the newly allocated pages ([] when already covered), or
+        None when the pool is exhausted (state unchanged — the caller
+        preempts and retries).
+        """
+        need = self.layout.blocks_for(n_tokens) - int(self.n_blocks[slot])
+        if need <= 0:
+            return []
+        return self.alloc(slot, need)
+
+    def free_slot(self, slot: int) -> List[int]:
+        """Release every page ``slot`` owns and compact its table."""
+        n = int(self.n_blocks[slot])
+        pages = self.block_tables[slot, :n].tolist()
+        for p in pages:
+            heapq.heappush(self._free, int(p))
+        self.block_tables[slot, :] = 0
+        self.n_blocks[slot] = 0
+        self.pages_in_use -= n
+        return pages
+
+    def table_device(self) -> jnp.ndarray:
+        """The block tables as a device array ``[batch_slots, max_blocks]``."""
+        return jnp.asarray(self.block_tables)
+
+    def page_reset_mask(self, pages: List[int]) -> jnp.ndarray:
+        """Bool ``[num_pages]`` mask selecting ``pages`` (for
+        ``LMModel.reset_pages``)."""
+        mask = np.zeros((self.layout.num_pages,), bool)
+        mask[np.asarray(pages, np.int64)] = True
+        return jnp.asarray(mask)
+
+
+# ---------------------------------------------------------------------------
+# Device-side logical→physical indirection helpers
+# ---------------------------------------------------------------------------
+
+
+def logical_row_ids(block_table: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Physical pool row of every logical row: ``[B, mb·ps]`` int32.
+
+    ``row r`` of slot b lives at ``table[b, r // ps] · ps + r % ps``.
+    Unmapped logical blocks alias page 0 — callers mask those rows by
+    cache length before they can matter.
+    """
+    mb = block_table.shape[-1]
+    ps = page_size
+    r = jnp.arange(mb * ps, dtype=jnp.int32)
+    return block_table[..., r // ps] * ps + (r % ps)[None, :]
+
+
+def gather_logical_rows(
+    pool: jnp.ndarray, block_table: jnp.ndarray, page_size: int
+) -> jnp.ndarray:
+    """Materialize the per-slot logical view of a row-major pool leaf.
+
+    pool ``[KV, pool_rows, ...]`` → ``[B, KV, mb·ps, ...]``. The result
+    is *bit-identical* to the equivalent unpaged padded cache wherever
+    the logical row is mapped and written; unmapped rows alias page 0
+    and must stay behind a cache-length mask. This is the XLA decode /
+    prefill path's view — a transient activation, not persistent state
+    (the pool itself is the only resident copy).
+    """
+    rows = logical_row_ids(block_table, page_size)        # [B, n_log]
+    out = jnp.take(pool, rows, axis=1)                    # [KV, B, n_log, ...]
+    return jnp.moveaxis(out, 1, 0)
+
+
+def gather_logical_scales(
+    scale_pool: jnp.ndarray, block_table: jnp.ndarray
+) -> jnp.ndarray:
+    """Per-slot logical view of the per-page scales:
+    ``[KV, num_pages]`` → ``[B, KV, mb]``."""
+    out = jnp.take(scale_pool, block_table, axis=1)       # [KV, B, mb]
+    return jnp.moveaxis(out, 1, 0)
+
+
+def compose_physical_blocks(
+    block_table: jnp.ndarray, logical_indices: jnp.ndarray
+) -> jnp.ndarray:
+    """Survivor-table ∘ block-table composition (logical → physical).
+
+    block_table ``[B, mb]``; logical_indices ``[B, ..., budget]`` int32
+    → physical page ids of the selected blocks, same shape as
+    ``logical_indices``.
+    """
+    bt = block_table.reshape(
+        block_table.shape[:1]
+        + (1,) * (logical_indices.ndim - 2)
+        + block_table.shape[-1:]
+    )
+    return jnp.take_along_axis(bt, logical_indices, axis=-1)
+
+
+def paged_row_targets(
+    positions: jnp.ndarray,
+    block_table: jnp.ndarray,
+    page_size: int,
+    write_mask: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Pool row id each (slot, token) write lands in — ``[B, C]`` int32.
+
+    Sentinel positions (``>= logical_rows``) and masked-off slots map to
+    ``pool_rows`` (one past the end) so a ``mode="drop"`` scatter
+    discards them; in the unpaged cache an out-of-range one-hot row did
+    the same job. ``write_mask`` (``[B]`` bool) gates whole slots — in a
+    shared pool an idle slot's table may alias pages another slot owns,
+    so idle writes must be dropped, not self-healed.
+    """
+    mb = block_table.shape[-1]
+    ps = page_size
+    logical_rows = mb * ps
+    blk = jnp.clip(positions // ps, 0, mb - 1)
+    page = jnp.take_along_axis(block_table, blk, axis=-1)  # [B, C]
+    rowid = page * ps + positions % ps
+    ok = positions < logical_rows
+    if write_mask is not None:
+        ok = jnp.logical_and(ok, write_mask[:, None])
+    # out-of-bounds sentinel: larger than any pool row ⇒ dropped scatter
+    return jnp.where(ok, rowid, jnp.int32(2 ** 30))
+
+
+def attention_cache_bytes(cache) -> int:
+    """Total bytes of the attention K/V + filter leaves of a decode
+    cache pytree (unpaged ``[L,B,KV,n,hd]`` or paged pool
+    ``[L,KV,rows,hd]`` layout; recurses into nested caches like the
+    hybrid family's ``shared_attn``)."""
+    if not isinstance(cache, dict):
+        return 0
+    total = 0
+    for key, leaf in cache.items():
+        if isinstance(leaf, dict):
+            total += attention_cache_bytes(leaf)
+        elif key in ("k", "v", "k_codes", "k_scale"):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return total

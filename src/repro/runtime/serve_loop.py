@@ -1,29 +1,45 @@
-"""Serving runtime: batched chunked-prefill → sparse-decode engine.
+"""Serving runtime: chunked-prefill → sparse-decode engine with a paged
+KV cache and continuous batching.
 
 `make_serve_step` builds the jitted one-token decode step — this is the
 function the decode_* dry-run shapes lower. `ServeLoop` is a
-continuous-batching engine over fixed slots:
+continuous-batching engine:
 
+* **Paged cache** (default whenever the model supports it): cache state
+  is a shared page pool at exactly the decode filter's block
+  granularity (`repro.runtime.paged_cache`), addressed through per-slot
+  block tables. Admission is *continuous*: a request is admitted the
+  moment enough pages are free for its prompt — no single global
+  ``max_len`` pad, short requests stop stranding memory long ones need.
+  Decode grows a slot one page at a time; on pool exhaustion the
+  **youngest** live slot is preempted (pages freed eagerly, request
+  requeued at the front and re-prefilled on re-admission). Completion
+  frees pages eagerly. All allocator decisions are host-side and
+  deterministic (lowest free page first, admission order decides
+  youth), so a given trace preempts identically on every run.
 * **Admission** runs the model's chunked-prefill path: every slot
   admitted in a tick is prefilled together, chunk c of all their
   prompts per jitted call — a whole admission wave costs
-  ceil(max_L / prefill_chunk) dispatches (vs sum(L_i) whole-batch
-  decode steps in the naive engine). Ragged final chunks and idle slots
-  reuse the same compiled shape via position sentinels. Recurrent
-  families (ssm/hybrid) fall back to token-by-token admission.
+  ceil(max_L / prefill_chunk) dispatches. Ragged final chunks and idle
+  slots reuse the same compiled shape via position sentinels. Recurrent
+  families (ssm/hybrid) fall back to token-by-token admission (and to
+  the unpaged contiguous cache — their state is O(1) per slot).
 * **Decode** advances every live slot by one token per tick (the paper's
   l=1 pipeline, §IV-D) with per-slot RNG streams and per-slot
-  temperature sampling — one greedy request stays deterministic no
-  matter what its batch neighbours do.
-* **Metrics** track prefill vs decode tokens, dispatches, and wall time
-  so prefill and decode throughput are reported separately.
+  temperature sampling. RNG streams are deterministic in (uid, tokens
+  sampled so far), so a preempted request resumes its stream exactly.
+* **Metrics** track prefill vs decode throughput *and* per-request
+  latency: queue wait, time-to-first-token and inter-token latency with
+  p50/p95 in ``summary()`` — scheduler changes are measurable, not just
+  tok/s. Paged runs also report preemptions and the page watermark.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
-from typing import List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +48,7 @@ from jax.sharding import Mesh
 
 from repro.distributed import sharding as shd
 from repro.models import LMModel
+from repro.runtime.paged_cache import PageAllocator, PagedLayout
 
 
 @dataclasses.dataclass
@@ -43,11 +60,21 @@ class Request:
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     _next_input: int = 0
+    # latency accounting (perf_counter stamps; managed by the engine)
+    _t_submit: Optional[float] = None
+    _t_admit: Optional[float] = None
+    _t_first: Optional[float] = None
+    _t_tokens: List[float] = dataclasses.field(default_factory=list)
+
+
+def _pct(vals: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(vals), p)) if vals else 0.0
 
 
 @dataclasses.dataclass
 class EngineMetrics:
-    """Engine accounting: prefill and decode measured separately."""
+    """Engine accounting: prefill and decode measured separately, plus
+    per-request latency records and paged-scheduler counters."""
 
     prefill_tokens: int = 0
     decode_tokens: int = 0
@@ -56,6 +83,11 @@ class EngineMetrics:
     prefill_time: float = 0.0
     decode_time: float = 0.0
     ticks: int = 0
+    preemptions: int = 0
+    peak_pages_in_use: int = 0
+    request_records: List[Dict[str, Any]] = dataclasses.field(
+        default_factory=list
+    )
 
     @property
     def prefill_tokens_per_sec(self) -> float:
@@ -65,8 +97,41 @@ class EngineMetrics:
     def decode_tokens_per_sec(self) -> float:
         return self.decode_tokens / max(self.decode_time, 1e-9)
 
+    def record_request(self, req: Request) -> None:
+        """Fold a completed request's latency stamps into the records."""
+        if req._t_submit is None:
+            return
+        rec = {
+            "uid": req.uid,
+            "queue_wait": (
+                (req._t_admit - req._t_submit)
+                if req._t_admit is not None else 0.0
+            ),
+            "ttft": (
+                (req._t_first - req._t_submit)
+                if req._t_first is not None else 0.0
+            ),
+            "itl": [
+                b - a for a, b in zip(req._t_tokens, req._t_tokens[1:])
+            ],
+        }
+        self.request_records.append(rec)
+
+    def latency_stats(self) -> Dict[str, float]:
+        """p50/p95 of queue wait, TTFT and inter-token latency (seconds)
+        over every completed request."""
+        qw = [r["queue_wait"] for r in self.request_records]
+        tt = [r["ttft"] for r in self.request_records]
+        itl = [x for r in self.request_records for x in r["itl"]]
+        return {
+            "requests": float(len(self.request_records)),
+            "queue_wait_p50": _pct(qw, 50), "queue_wait_p95": _pct(qw, 95),
+            "ttft_p50": _pct(tt, 50), "ttft_p95": _pct(tt, 95),
+            "itl_p50": _pct(itl, 50), "itl_p95": _pct(itl, 95),
+        }
+
     def summary(self) -> str:
-        return (
+        s = (
             f"prefill {self.prefill_tokens} tok / "
             f"{self.prefill_dispatches} calls "
             f"({self.prefill_tokens_per_sec:.1f} tok/s) | "
@@ -75,6 +140,22 @@ class EngineMetrics:
             f"({self.decode_tokens_per_sec:.1f} tok/s) | "
             f"{self.ticks} ticks"
         )
+        if self.request_records:
+            st = self.latency_stats()
+            s += (
+                f" | queue p50/p95 {st['queue_wait_p50'] * 1e3:.1f}/"
+                f"{st['queue_wait_p95'] * 1e3:.1f} ms"
+                f" | ttft p50/p95 {st['ttft_p50'] * 1e3:.1f}/"
+                f"{st['ttft_p95'] * 1e3:.1f} ms"
+                f" | itl p50/p95 {st['itl_p50'] * 1e3:.1f}/"
+                f"{st['itl_p95'] * 1e3:.1f} ms"
+            )
+        if self.peak_pages_in_use:
+            s += (
+                f" | {self.preemptions} preemptions, "
+                f"peak {self.peak_pages_in_use} pages"
+            )
+        return s
 
 
 def make_serve_step(
@@ -82,8 +163,13 @@ def make_serve_step(
     mesh: Optional[Mesh] = None,
     max_len: int = 0,
     batch: int = 0,
+    num_pages: int = 0,
 ):
-    """Jitted ``(params, cache, inputs, cache_index) -> (logits, cache)``."""
+    """Jitted ``(params, cache, inputs, cache_index) -> (logits, cache)``.
+
+    ``num_pages > 0`` builds the sharded step for the *paged* cache
+    layout (page-pool pspecs; the block table rides ``inputs`` and stays
+    replicated)."""
 
     def step(params, cache, inputs, cache_index):
         return model.decode_step(params, cache, inputs, cache_index)
@@ -91,13 +177,22 @@ def make_serve_step(
     if mesh is None:
         return jax.jit(step, donate_argnums=(1,))
 
-    assert max_len > 0 and batch > 0, "mesh-sharded serve needs shapes"
+    assert (max_len > 0 and batch > 0) or num_pages > 0, \
+        "mesh-sharded serve needs shapes"
     params_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     p_shard = shd.param_shardings(params_shapes, mesh)
-    cache_shapes = jax.eval_shape(
-        lambda: model.init_cache(batch=batch, max_len=max_len)
-    )
-    c_shard = shd.cache_shardings(cache_shapes, mesh)
+    if num_pages > 0:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_paged_cache(num_pages)
+        )
+        c_shard = shd.paged_cache_shardings(
+            cache_shapes, mesh, model.cfg.energon.decode_key_block
+        )
+    else:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(batch=batch, max_len=max_len)
+        )
+        c_shard = shd.cache_shardings(cache_shapes, mesh)
     return jax.jit(
         step,
         in_shardings=(p_shard, c_shard, None, None),
@@ -153,8 +248,18 @@ def _sample_step(
     )
 
 
+@jax.jit
+def _advance_key(key: jax.Array, n: jax.Array) -> jax.Array:
+    """Advance an RNG key by ``n`` `_sample_wave` splits (key_{i+1} =
+    split(key_i)[0]) in one dispatch."""
+    return jax.lax.fori_loop(
+        0, n, lambda _, k: jax.random.split(k)[0], key
+    )
+
+
 class ServeLoop:
-    """Continuous-batching chunked-prefill / sparse-decode engine."""
+    """Continuous-batching chunked-prefill / sparse-decode engine over a
+    paged (default when supported) or contiguous KV cache."""
 
     def __init__(
         self,
@@ -166,25 +271,62 @@ class ServeLoop:
         eos_token: int = 0,
         rng: Optional[jax.Array] = None,
         prefill_chunk: int = 64,
+        paged: Optional[bool] = None,
+        num_pages: Optional[int] = None,
     ):
         self.model = model
         self.params = params
         self.batch_slots = batch_slots
+        self.paged = model.supports_paged if paged is None else bool(paged)
+        if self.paged and not model.supports_paged:
+            raise ValueError(
+                "paged serving needs an attention family with "
+                "decode_key_block > 0 and a non-dense impl"
+            )
         # Cache rows are rounded up to whole decode key blocks (the
         # block path must never silently fall back to the row path);
         # the engine's sentinels/limits must use the same rounded value
-        # or sentinel positions would land on real cache rows.
-        self.max_len = model.decode_cache_len(max_len)
+        # or sentinel positions would land on real cache rows. Paged
+        # mode additionally rounds for row-granular impls: pages are
+        # decode_key_block wide regardless of the filter granularity.
+        rows = model.decode_cache_len(max_len)
+        if self.paged:
+            bk = model.cfg.energon.decode_key_block
+            rows = max(-(-rows // bk), 2) * bk
+        self.max_len = rows
         self.eos = eos_token
         self.prefill_chunk = max(1, min(prefill_chunk, max_len))
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
         self.prefill_fn = make_prefill_step(model)
-        self.cache = model.init_cache(batch_slots, max_len)
+        if self.paged:
+            bk = model.cfg.energon.decode_key_block
+            mb = rows // bk
+            if num_pages is None:
+                # safe default: worst case fits with zero preemptions;
+                # callers oversubscribe explicitly (num_pages < B·mb)
+                # to realize the HBM saving.
+                num_pages = batch_slots * mb
+            self.layout = PagedLayout(
+                num_pages=num_pages, page_size=bk,
+                max_blocks=mb, batch_slots=batch_slots,
+            )
+            self.allocator = PageAllocator(self.layout)
+            self.cache = model.init_paged_cache(num_pages)
+            self._reset_pages_fn = jax.jit(
+                model.reset_pages, donate_argnums=(0,)
+            )
+        else:
+            self.layout = None
+            self.allocator = None
+            self.cache = model.init_cache(batch_slots, max_len)
         self.cache_index = jnp.zeros((batch_slots,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.slot_keys = jax.random.split(self._base_rng, batch_slots)
         self._temps = np.zeros((batch_slots,), np.float32)
+        self._lengths = np.zeros((batch_slots,), np.int64)  # host mirror
+        self._slot_order: List[Optional[int]] = [None] * batch_slots
+        self._admit_seq = itertools.count()
         self.pending: List[Request] = []
         self.completed: List[Request] = []
         self.metrics = EngineMetrics()
@@ -195,36 +337,104 @@ class ServeLoop:
 
     # --- API -----------------------------------------------------------
     def submit(self, req: Request):
-        if len(req.prompt) >= self.max_len:
+        # A prompt fits iff the (rounded-up) cache can hold every row it
+        # writes: a length-L prompt prefills L rows and its first token
+        # is sampled straight off the prefill logits, so L == rows is
+        # admissible (the per-request limit in _commit_token then caps
+        # generation so decode writes never pass the last row). The old
+        # check compared against max_len pre-headroom accounting and
+        # rejected prompts the rounded cache could actually hold.
+        if len(req.prompt) > self.max_len:
             raise ValueError(
-                f"prompt of {len(req.prompt)} tokens does not fit "
-                f"max_len={self.max_len}"
+                f"prompt of {len(req.prompt)} tokens does not fit the "
+                f"{self.max_len} cache rows"
             )
+        if req._t_submit is None:
+            req._t_submit = time.perf_counter()
         self.pending.append(req)
+
+    def _replayed_key(self, uid: int, n_sampled: int) -> jax.Array:
+        """Per-request RNG stream, deterministic in (uid, #samples):
+        `_sample_wave` advances a slot's key once per sample, so
+        re-admitting a preempted request replays the same number of
+        splits and its stochastic continuation is unchanged. The replay
+        is one jitted fori_loop dispatch, not n tiny splits."""
+        return _advance_key(
+            jax.random.fold_in(self._base_rng, uid), jnp.int32(n_sampled)
+        )
+
+    def _device_block_table(self) -> jnp.ndarray:
+        return self.allocator.table_device()
+
+    def _reset_pages(self, pages: List[int]):
+        """Zero freshly allocated pages before first use (a reused page
+        must not leak its previous occupant's rows or absmax)."""
+        return self._reset_pages_fn(
+            self.cache, self.allocator.page_reset_mask(pages)
+        )
 
     def _admit(self):
         chunked, sequential = [], []
-        reset_mask = np.zeros((self.batch_slots,), bool)
+        admitted_slots: List[int] = []
+        new_pages: List[int] = []
+        now = time.perf_counter()
         for i in range(self.batch_slots):
-            if self.slots[i] is None and self.pending:
-                req = self.pending.pop(0)
-                self.slots[i] = req
-                # per-request RNG stream: deterministic in uid, not in
-                # what else happens to share the batch.
-                self.slot_keys = self.slot_keys.at[i].set(
-                    jax.random.fold_in(self._base_rng, req.uid)
+            if self.slots[i] is not None or not self.pending:
+                continue
+            req = self.pending[0]
+            resumed = bool(req.tokens_out)
+            # a resumed (preempted) request re-prefills everything it
+            # had written: prompt + generated tokens minus the pending
+            # one (tokens_out[-1] is its _next_input, not yet written).
+            seq_tokens = (
+                req.prompt + req.tokens_out[:-1] if resumed else req.prompt
+            )
+            if self.paged:
+                pages = self.allocator.ensure_capacity(
+                    i, max(len(seq_tokens), 1)
                 )
-                self._temps[i] = req.temperature
-                self.cache_index = self.cache_index.at[i].set(0)
-                reset_mask[i] = True
-                if self.prefill_fn is not None and len(req.prompt) > 1:
-                    chunked.append((i, req))
-                else:
-                    sequential.append((i, req))
-        if reset_mask.any():
+                if pages is None:
+                    # FIFO head-of-line: wait for pages to free up
+                    break
+                new_pages += pages
+            self.pending.pop(0)
+            self.slots[i] = req
+            self._slot_order[i] = next(self._admit_seq)
+            if req._t_admit is None:
+                req._t_admit = now
+            # per-request RNG stream: deterministic in uid (and, for
+            # resumed requests, in how many tokens were sampled), not in
+            # what else happens to share the batch.
+            self.slot_keys = self.slot_keys.at[i].set(
+                self._replayed_key(req.uid, len(req.tokens_out))
+            )
+            self._temps[i] = req.temperature
+            self.cache_index = self.cache_index.at[i].set(0)
+            self._lengths[i] = 0
+            admitted_slots.append(i)
+            if resumed:
+                if seq_tokens:
+                    chunked.append((i, req, seq_tokens, True))
+                # else: nothing was ever written; _next_input resumes it
+            elif self.prefill_fn is not None and len(req.prompt) > 1:
+                chunked.append((i, req, seq_tokens, False))
+            else:
+                sequential.append((i, req))
+        if self.paged:
+            # paged slot hygiene happens per *page*, at allocation
+            if new_pages:
+                self.cache = self._reset_pages(new_pages)
+            # sync the watermark here too: a request whose prompt fills
+            # its whole allowance can complete straight off the prefill
+            # wave, never reaching tick()'s decode-branch sync.
+            self.metrics.peak_pages_in_use = \
+                self.allocator.peak_pages_in_use
+        elif admitted_slots:
             # recurrent families: admitted slots must not inherit their
             # previous occupants' accumulated state (no-op for
             # positional KV caches); one combined-mask pass per wave.
+            reset_mask = np.zeros((self.batch_slots,), bool)
+            reset_mask[admitted_slots] = True
             self.cache = self.model.reset_decode_slots(
                 self.cache, jnp.asarray(reset_mask)
             )
@@ -237,14 +447,18 @@ class ServeLoop:
         """Batched chunked prefill for every slot admitted this tick:
         chunk c of all admitted prompts rides one jitted call, so a
         full admission wave costs ceil(max_L/C) dispatches — not
-        sum(ceil(L_i/C)). The first generated token per slot is sampled
-        straight off that slot's final prefill chunk."""
+        sum(ceil(L_i/C)). A *fresh* slot's first generated token is
+        sampled straight off its final prefill chunk; a *resumed*
+        (preempted) slot only restores its cache rows — its pending
+        token is already in ``tokens_out`` and must not be re-sampled."""
         C = self.prefill_chunk
         t0 = time.perf_counter()
         n_chunks = max(
-            -(-len(req.prompt) // C) for _, req in admitted
+            -(-len(seq) // C) for _, _, seq, _ in admitted
         )
+        bt = self._device_block_table() if self.paged else None
         last_logits = {}
+        logits = None
         for c in range(n_chunks):
             lo = c * C
             toks = np.zeros((self.batch_slots, C), np.int32)
@@ -252,44 +466,52 @@ class ServeLoop:
             # (idle slots, already-finished prompts and ragged tails all
             # share one compiled shape).
             pos = np.full((self.batch_slots, C), self.max_len, np.int32)
-            for i, req in admitted:
-                part = req.prompt[lo:lo + C]
+            for i, req, seq, _ in admitted:
+                part = seq[lo:lo + C]
                 if part:
                     toks[i, :len(part)] = part
                     pos[i, :len(part)] = lo + np.arange(len(part))
+            inputs = {
+                "tokens": jnp.asarray(toks), "positions": jnp.asarray(pos),
+            }
+            if bt is not None:
+                inputs["block_table"] = bt
             logits, self.cache = self.prefill_fn(
-                self.params, self.cache,
-                {"tokens": jnp.asarray(toks), "positions": jnp.asarray(pos)},
-                self.cache_index,
+                self.params, self.cache, inputs, self.cache_index,
             )
             self.metrics.prefill_dispatches += 1
-            for i, req in admitted:
-                length = len(req.prompt)
-                if lo < length <= lo + C:  # this slot's final chunk
-                    last_logits[i] = logits[i, length - 1 - lo]
+            for i, req, seq, resumed in admitted:
+                if not resumed and lo < len(seq) <= lo + C:
+                    last_logits[i] = logits[i, len(seq) - 1 - lo]
         # jax dispatch is async: sync before stopping the clock so the
         # prefill/decode throughput split reflects device time, not
         # dispatch time.
-        jax.block_until_ready(list(last_logits.values()))
-        for i, req in admitted:
-            self.cache_index = self.cache_index.at[i].set(len(req.prompt))
-            self.metrics.prefill_tokens += len(req.prompt)
+        jax.block_until_ready(
+            list(last_logits.values()) if last_logits else logits
+        )
+        for i, req, seq, _ in admitted:
+            self.cache_index = self.cache_index.at[i].set(len(seq))
+            self._lengths[i] = len(seq)
+            self.metrics.prefill_tokens += len(seq)
         self.metrics.prefill_time += time.perf_counter() - t0
-        # sample every admitted slot's first token in one batched call
+        if not last_logits:
+            return
+        # sample every *fresh* admitted slot's first token in one call
         zero_row = jnp.zeros_like(next(iter(last_logits.values())))
         logits_mat = jnp.stack([
             last_logits.get(i, zero_row) for i in range(self.batch_slots)
         ])
         mask = np.zeros((self.batch_slots,), bool)
-        for i, _ in admitted:
+        for i in last_logits:
             mask[i] = True
         toks, self.slot_keys = _sample_wave(
             logits_mat, jnp.asarray(self._temps), self.slot_keys,
             jnp.asarray(mask),
         )
         toks = jax.device_get(toks)
-        for i, req in admitted:
-            self._commit_token(i, req, int(toks[i]))
+        for i, req, _, resumed in admitted:
+            if not resumed:
+                self._commit_token(i, req, int(toks[i]))
 
     def _sequential_prefill_wave(self, admitted):
         """Token-by-token admission for models without a chunked-prefill
@@ -309,15 +531,19 @@ class ServeLoop:
                 if t < len(req.prompt) - 1:
                     tokens[i, 0] = req.prompt[t]
                     active[i] = True
+            inputs = {
+                "tokens": jnp.asarray(tokens),
+                "active": jnp.asarray(active),
+            }
+            if self.paged:
+                inputs["block_table"] = self._device_block_table()
             logits, self.cache = self.step_fn(
-                self.params, self.cache,
-                {"tokens": jnp.asarray(tokens),
-                 "active": jnp.asarray(active)},
-                self.cache_index,
+                self.params, self.cache, inputs, self.cache_index,
             )
             self.cache_index = self.cache_index + jnp.asarray(
                 active, jnp.int32
             )
+            self._lengths += active
             self.metrics.prefill_dispatches += 1
             self.metrics.prefill_tokens += int(active.sum())
         if logits is not None:
@@ -326,19 +552,68 @@ class ServeLoop:
         for i, req in admitted:
             req._next_input = req.prompt[-1] if req.prompt else self.eos
 
+    def _release_slot(self, i: int):
+        """Clear slot state; in paged mode its pages free *eagerly*."""
+        self.slots[i] = None
+        self._temps[i] = 0.0
+        self.cache_index = self.cache_index.at[i].set(0)
+        self._lengths[i] = 0
+        self._slot_order[i] = None
+        if self.paged:
+            self.allocator.free_slot(i)
+
+    def _preempt(self, victim: int):
+        """Evict a live slot: free its pages, requeue it at the front.
+        On re-admission it re-prefills prompt + generated tokens and
+        continues — stream and RNG state are preserved exactly."""
+        req = self.slots[victim]
+        self._release_slot(victim)
+        self.pending.insert(0, req)
+        self.metrics.preemptions += 1
+
+    def _ensure_decode_capacity(self, live: List[int]) -> List[int]:
+        """Every live slot must own the page its next token's KV row
+        lands in. On pool exhaustion, preempt the *youngest* live slot
+        (latest admission) and retry — deterministic for a given trace.
+        Returns the slots still live afterwards."""
+        fresh: List[int] = []
+        for i in live:
+            while self.slots[i] is not None:
+                got = self.allocator.ensure_capacity(
+                    i, int(self._lengths[i]) + 1
+                )
+                if got is not None:
+                    fresh += got
+                    break
+                victim = max(
+                    (j for j in range(self.batch_slots)
+                     if self.slots[j] is not None),
+                    key=lambda j: self._slot_order[j],
+                )
+                self._preempt(victim)
+        if fresh:
+            self.cache = self._reset_pages(fresh)
+        return [i for i in live if self.slots[i] is not None]
+
     def _commit_token(self, i: int, req: Request, tok: int):
+        now = time.perf_counter()
+        if not req.tokens_out:
+            req._t_first = now
         req.tokens_out.append(tok)
+        req._t_tokens.append(now)
         req._next_input = tok
+        # a request generating m tokens writes prompt + m - 1 rows (the
+        # final token is sampled but never appended to the cache), so
+        # m ≤ rows - len(prompt) + 1 always fits.
         limit = min(
             req.max_new_tokens,
-            self.max_len - len(req.prompt) - 1,
+            self.max_len - len(req.prompt) + 1,
         )
         if tok == self.eos or len(req.tokens_out) >= limit:
             req.done = True
             self.completed.append(req)
-            self.slots[i] = None
-            self._temps[i] = 0.0
-            self.cache_index = self.cache_index.at[i].set(0)
+            self._release_slot(i)
+            self.metrics.record_request(req)
 
     def tick(self):
         """One engine iteration: admit, decode one token for all slots."""
@@ -346,18 +621,28 @@ class ServeLoop:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             return
+        if self.paged:
+            live = self._ensure_decode_capacity(live)
+            self.metrics.peak_pages_in_use = \
+                self.allocator.peak_pages_in_use
+            if not live:
+                return
         t0 = time.perf_counter()
         tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
         active = np.zeros((self.batch_slots,), bool)
         for i in live:
             tokens[i, 0] = self.slots[i]._next_input
             active[i] = True
+        inputs = {
+            "tokens": jnp.asarray(tokens), "active": jnp.asarray(active),
+        }
+        if self.paged:
+            inputs["block_table"] = self._device_block_table()
         logits, self.cache = self.step_fn(
-            self.params, self.cache,
-            {"tokens": jnp.asarray(tokens), "active": jnp.asarray(active)},
-            self.cache_index,
+            self.params, self.cache, inputs, self.cache_index,
         )
         self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
+        self._lengths += active
         next_tokens, self.slot_keys = _sample_step(
             logits, jnp.asarray(self._temps), self.slot_keys
         )

@@ -286,3 +286,138 @@ class TestEndToEndEnergonKernelPipeline:
         for g in grads:
             assert bool(jnp.all(jnp.isfinite(g)))
         assert float(jnp.abs(grads[2]).sum()) > 0  # dV nonzero
+
+
+class TestFusedDecodePaged:
+    """Paged fused decode: the kernels address the page pool through
+    the block table (two-level scalar-prefetch indirection) and must
+    stay bit-identical to the unpaged fused path on the same logical
+    contents."""
+
+    def _setup(self, B=2, H=2, G=4, mb=6, d=16, bk=16, seed=0,
+               num_pages=15):
+        rng = np.random.default_rng(seed)
+        n = mb * bk
+        q = _mk((B, H, G, d), seed)
+        k = _mk((B, H, n, d), seed + 1)
+        v = _mk((B, H, n, d), seed + 2)
+        cl = jnp.asarray(rng.integers(1, n + 1, size=B), jnp.int32)
+        # unpaged padding rows are zeros; pool pages are zeroed on alloc
+        mask = (jnp.arange(n)[None, :] < cl[:, None])[:, None, :, None]
+        k, v = k * mask, v * mask
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        # disjoint shuffled page assignment per slot
+        perm = rng.permutation(num_pages)
+        tables = np.asarray(
+            [perm[b * mb:(b + 1) * mb] for b in range(B)], np.int32
+        )
+        kp = np.zeros((H, num_pages * bk, d), np.float32)
+        vp = np.zeros_like(kp)
+        cp = np.zeros((H, num_pages * bk, d), np.int16)
+        sp = np.zeros((H, num_pages), np.float32)
+        for b in range(B):
+            for j in range(mb):
+                pg = int(tables[b, j])
+                sl = slice(pg * bk, (pg + 1) * bk)
+                src = slice(j * bk, (j + 1) * bk)
+                kp[:, sl] = np.asarray(k[b, :, src])
+                vp[:, sl] = np.asarray(v[b, :, src])
+                cp[:, sl] = np.asarray(codes[b, :, src])
+                sp[:, pg] = np.asarray(scales[b, :, j])
+        pool = dict(
+            k=jnp.asarray(kp), v=jnp.asarray(vp),
+            codes=jnp.asarray(cp), scale=jnp.asarray(sp),
+        )
+        return q, k, v, cl, codes, scales, tables, pool, bk
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_paged_fused_bit_identical_to_unpaged_fused(self, ratio):
+        q, k, v, cl, codes, scales, tables, pool, bk = self._setup()
+        import math
+
+        mb = tables.shape[-1]
+        budget = max(1, math.ceil(mb / ratio))
+        from repro.core import decode_live_budget
+
+        lb = decode_live_budget(cl, bk, ratio)
+        ref_out = ops.fused_decode_attention(
+            q, k, v, codes, scales, cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        out = ops.fused_paged_decode_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+    def test_paged_filter_scores_vs_unpaged_kernel(self, seed=4):
+        from repro.kernels import mpmrf_decode as dk
+
+        q, k, _, cl, codes, scales, tables, pool, bk = self._setup(seed=seed)
+        B, H, G, d = q.shape
+        n = k.shape[-2]
+        mb = n // bk
+        bh = B * H
+        num_pages = pool["scale"].shape[-1]
+        q16 = qlib.quantize_int16(q, axis=-1)
+        qp = q16.bit_plane(4).reshape(bh, G, d)
+        qs = q16.scale.reshape(bh, G, 1)
+        cl_bh = jnp.repeat(cl, H)
+        r0, r1 = dk.mpmrf_decode_filter_scores(
+            qp, qs, codes.reshape(bh, n, d), scales.reshape(bh, mb),
+            cl_bh, round_bits=(2, 4), key_block=bk, interpret=True,
+        )
+        head_off = (jnp.arange(H, dtype=jnp.int32) * num_pages)
+        bt_bh = (
+            jnp.asarray(tables)[:, None, :] + head_off[None, :, None]
+        ).reshape(bh, mb)
+        s0, s1 = dk.mpmrf_paged_filter_scores(
+            qp, qs,
+            pool["codes"].reshape(H * num_pages, bk, d),
+            pool["scale"].reshape(H * num_pages, 1),
+            bt_bh, cl_bh, round_bits=(2, 4), key_block=bk, interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(s0))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(s1))
+
+    def test_paged_gather_vs_xla_paged_oracle(self):
+        from repro.core import sparse_attention as spa
+        from repro.kernels import mpmrf_decode as dk
+
+        q, k, v, cl, _, _, tables, pool, bk = self._setup(seed=8)
+        B, H, G, d = q.shape
+        mb = tables.shape[-1]
+        bh = B * H
+        num_pages = pool["scale"].shape[-1]
+        rng = np.random.default_rng(1)
+        budget = 3
+        n_live = np.maximum((np.asarray(cl) + bk - 1) // bk, 1)
+        idx = np.zeros((B, H, budget), np.int32)
+        val = np.zeros((B, H, budget), np.int32)
+        for b in range(B):
+            for h in range(H):
+                m = int(min(budget, n_live[b]))
+                idx[b, h, :m] = rng.choice(n_live[b], size=m, replace=False)
+                val[b, h, :m] = 1
+        head_off = (jnp.arange(H, dtype=jnp.int32) * num_pages)
+        bt_bh = (
+            jnp.asarray(tables)[:, None, :] + head_off[None, :, None]
+        ).reshape(bh, mb)
+        out_k = dk.paged_decode_gather_attention(
+            q.reshape(bh, G, d),
+            pool["k"].reshape(H * num_pages, bk, d),
+            pool["v"].reshape(H * num_pages, bk, d),
+            jnp.asarray(idx).reshape(bh, budget),
+            jnp.asarray(val).reshape(bh, budget),
+            bt_bh, jnp.repeat(cl, H),
+            key_block=bk, interpret=True,
+        ).reshape(B, H, G, d)
+        out_ref = spa.paged_decode_block_gather_attention(
+            q, pool["k"], pool["v"],
+            jnp.asarray(idx)[:, :, None, :], jnp.asarray(val)[:, :, None, :],
+            jnp.asarray(tables), cl, bk,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_ref), atol=1e-5
+        )

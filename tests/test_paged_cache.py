@@ -1,0 +1,433 @@
+"""Paged KV-cache subsystem tests (DESIGN.md §4).
+
+Covers the contracts the paging tentpole introduced:
+  * the host-side page allocator — deterministic lowest-first
+    allocation, alloc/free/reuse cycles, block-table compaction,
+    watermark accounting, and exhaustion semantics;
+  * logical→physical indirection helpers;
+  * the paged≡unpaged **selection-equivalence contract**: on the same
+    logical contents every decode path (XLA row, XLA block, fused
+    Pallas) produces bit-identical outputs through the page pool;
+  * the continuous-batching scheduler: identical greedy streams paged
+    vs unpaged, deterministic pool-exhaustion preemption, eager frees;
+  * filter-plane hygiene: a reused page never leaks its previous
+    occupant's absmax, and the pool-wide code/scale invariant survives
+    engine churn.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import (
+    EnergonConfig,
+    energon_decode_attention,
+    energon_paged_decode_attention,
+    quantize_int16_blocks,
+)
+from repro.models import LMModel
+from repro.runtime import PageAllocator, PagedLayout, Request, ServeLoop
+from repro.runtime import paged_cache as pgc
+
+
+def _model(impl="mpmrf_block", **energon_kw):
+    cfg = ModelConfig(
+        name="paged-test", family="dense", num_layers=3, d_model=32,
+        num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+        dtype="float32", remat="none",
+        energon=EnergonConfig(
+            impl=impl, pruning_ratio=2.0, query_block=8, key_block=16,
+            decode_key_block=16, min_prune_layer=1, **energon_kw,
+        ),
+    )
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+class TestPagedLayout:
+    def test_geometry(self):
+        lay = PagedLayout(num_pages=10, page_size=16, max_blocks=4,
+                          batch_slots=2)
+        assert lay.logical_rows == 64
+        assert lay.pool_rows == 160
+        assert lay.blocks_for(0) == 0
+        assert lay.blocks_for(1) == 1
+        assert lay.blocks_for(16) == 1
+        assert lay.blocks_for(17) == 2
+
+    def test_pool_smaller_than_one_request_rejected(self):
+        with pytest.raises(ValueError, match="never be resident"):
+            PagedLayout(num_pages=3, page_size=16, max_blocks=4,
+                        batch_slots=2)
+
+
+class TestPageAllocator:
+    def _alloc(self, num_pages=8, max_blocks=4, slots=3):
+        return PageAllocator(PagedLayout(
+            num_pages=num_pages, page_size=16, max_blocks=max_blocks,
+            batch_slots=slots,
+        ))
+
+    def test_lowest_first_and_reuse_cycle(self):
+        a = self._alloc()
+        assert a.alloc(0, 2) == [0, 1]
+        assert a.alloc(1, 3) == [2, 3, 4]
+        a.free_slot(0)
+        # freed pages are reused lowest-id-first — deterministic layout
+        assert a.alloc(2, 3) == [0, 1, 5]
+        assert a.pages_in_use == 6
+        assert a.peak_pages_in_use == 6
+
+    def test_free_compacts_block_table(self):
+        a = self._alloc()
+        a.alloc(0, 3)
+        assert list(a.block_tables[0, :3]) == [0, 1, 2]
+        freed = a.free_slot(0)
+        assert freed == [0, 1, 2]
+        assert a.n_blocks[0] == 0
+        np.testing.assert_array_equal(a.block_tables[0], 0)
+        assert a.free_pages == 8
+
+    def test_exhaustion_leaves_state_unchanged(self):
+        a = self._alloc(num_pages=4)
+        assert a.alloc(0, 3) is not None
+        before = a.block_tables.copy()
+        assert a.alloc(1, 2) is None          # only 1 page free
+        np.testing.assert_array_equal(a.block_tables, before)
+        assert a.pages_in_use == 3
+        assert a.free_pages == 1
+
+    def test_ensure_capacity_grows_by_need(self):
+        a = self._alloc()
+        assert a.ensure_capacity(0, 16) == [0]      # 1 block
+        assert a.ensure_capacity(0, 16) == []       # already covered
+        assert a.ensure_capacity(0, 17) == [1]      # boundary crossed
+        assert a.ensure_capacity(0, 64) == [2, 3]
+
+    def test_overflow_beyond_max_blocks_raises(self):
+        a = self._alloc(max_blocks=2)
+        a.alloc(0, 2)
+        with pytest.raises(ValueError, match="max_blocks"):
+            a.alloc(0, 1)
+
+    def test_watermark_tracks_peak_not_current(self):
+        a = self._alloc()
+        a.alloc(0, 4)
+        a.alloc(1, 2)
+        a.free_slot(0)
+        assert a.pages_in_use == 2
+        assert a.peak_pages_in_use == 6
+
+
+class TestIndirectionHelpers:
+    def test_logical_row_ids(self):
+        bt = jnp.asarray([[3, 0, 2], [1, 4, 0]], jnp.int32)
+        rows = pgc.logical_row_ids(bt, 4)
+        np.testing.assert_array_equal(
+            np.asarray(rows[0]),
+            [12, 13, 14, 15, 0, 1, 2, 3, 8, 9, 10, 11],
+        )
+        np.testing.assert_array_equal(
+            np.asarray(rows[1]),
+            [4, 5, 6, 7, 16, 17, 18, 19, 0, 1, 2, 3],
+        )
+
+    def test_gather_logical_roundtrip(self):
+        rng = np.random.default_rng(0)
+        pool = jnp.asarray(rng.normal(size=(2, 5 * 4, 3)), jnp.float32)
+        bt = jnp.asarray([[4, 2], [1, 3]], jnp.int32)
+        view = pgc.gather_logical_rows(pool, bt, 4)
+        assert view.shape == (2, 2, 8, 3)
+        np.testing.assert_array_equal(
+            np.asarray(view[0, :, 0:4]), np.asarray(pool[:, 16:20])
+        )
+        np.testing.assert_array_equal(
+            np.asarray(view[1, :, 4:8]), np.asarray(pool[:, 12:16])
+        )
+
+    def test_compose_physical_blocks(self):
+        bt = jnp.asarray([[7, 5, 3], [2, 4, 6]], jnp.int32)
+        logical = jnp.asarray(
+            [[[2, 0]], [[1, 1]]], jnp.int32
+        )  # [B, 1, budget]
+        phys = pgc.compose_physical_blocks(bt, logical)
+        np.testing.assert_array_equal(
+            np.asarray(phys), [[[3, 7]], [[4, 4]]]
+        )
+
+
+def _pool_from_cache(k, v, codes, scales, tables, num_pages, bk):
+    """Scatter per-slot padded caches into a pool under ``tables``
+    (slot page sets must be disjoint)."""
+    B, KV, n, d = k.shape
+    mb = n // bk
+    kp = np.zeros((KV, num_pages * bk, d), np.float32)
+    vp = np.zeros_like(kp)
+    cache = {}
+    cp = sp = None
+    if codes is not None:
+        cp = np.zeros((KV, num_pages * bk, d), np.int16)
+        sp = np.zeros((KV, num_pages), np.float32)
+    for b in range(B):
+        for j in range(mb):
+            pg = int(tables[b, j])
+            sl = slice(pg * bk, (pg + 1) * bk)
+            src = slice(j * bk, (j + 1) * bk)
+            kp[:, sl] = np.asarray(k[b, :, src])
+            vp[:, sl] = np.asarray(v[b, :, src])
+            if codes is not None:
+                cp[:, sl] = np.asarray(codes[b, :, src])
+                sp[:, pg] = np.asarray(scales[b, :, j])
+    cache = {"k": jnp.asarray(kp), "v": jnp.asarray(vp)}
+    if codes is not None:
+        cache["k_codes"] = jnp.asarray(cp)
+        cache["k_scale"] = jnp.asarray(sp)
+    return cache
+
+
+class TestPagedDecodeEquivalence:
+    """Bit-identical outputs through the pool, per decode path."""
+
+    def _operands(self, seed=3, B=2, KV=2, G=4, mb=4, bk=16, d=16):
+        rng = np.random.default_rng(seed)
+        n = mb * bk
+        q = jnp.asarray(rng.normal(size=(B, KV, G, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, KV, n, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, KV, n, d)), jnp.float32)
+        cl = jnp.asarray([n // 3, n], jnp.int32)
+        # unpaged padding rows are zero; pool pages are zeroed on alloc
+        mask = (jnp.arange(n)[None, :] < cl[:, None])[:, None, :, None]
+        k, v = k * mask, v * mask
+        tables = np.array([[5, 2, 8, 0], [1, 10, 3, 7]], np.int32)
+        return q, k, v, cl, tables, 11, bk
+
+    @pytest.mark.parametrize("impl", ["mpmrf_block", "pallas"])
+    def test_block_paths_bit_identical(self, impl):
+        q, k, v, cl, tables, num_pages, bk = self._operands()
+        codes, scales = quantize_int16_blocks(k, bk)
+        cfg = EnergonConfig(impl=impl, pruning_ratio=2.0,
+                            decode_key_block=bk, min_prune_layer=0)
+        ref = energon_decode_attention(
+            q, k, v, cl, cfg, layer_index=5,
+            filter_cache={"codes": codes, "scale": scales},
+        )
+        cache = _pool_from_cache(k, v, codes, scales, tables, num_pages, bk)
+        out = energon_paged_decode_attention(
+            q, cache, jnp.asarray(tables), cl, cfg, layer_index=5
+        )
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_row_path_bit_identical(self):
+        q, k, v, cl, tables, num_pages, bk = self._operands(seed=5)
+        cfg = EnergonConfig(impl="mpmrf_row", pruning_ratio=4.0,
+                            decode_key_block=bk, min_prune_layer=0)
+        ref = energon_decode_attention(q, k, v, cl, cfg, layer_index=5)
+        cache = _pool_from_cache(k, v, None, None, tables, num_pages, bk)
+        out = energon_paged_decode_attention(
+            q, cache, jnp.asarray(tables), cl, cfg, layer_index=5
+        )
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_dense_prefix_layer_bit_identical(self):
+        q, k, v, cl, tables, num_pages, bk = self._operands(seed=7)
+        cfg = EnergonConfig(impl="mpmrf_block", pruning_ratio=2.0,
+                            decode_key_block=bk, min_prune_layer=2)
+        ref = energon_decode_attention(q, k, v, cl, cfg, layer_index=0)
+        cache = _pool_from_cache(k, v, None, None, tables, num_pages, bk)
+        out = energon_paged_decode_attention(
+            q, cache, jnp.asarray(tables), cl, cfg, layer_index=0
+        )
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+    def test_windowed_block_path_bit_identical(self):
+        q, k, v, cl, tables, num_pages, bk = self._operands(seed=9)
+        codes, scales = quantize_int16_blocks(k, bk)
+        cfg = EnergonConfig(impl="mpmrf_block", pruning_ratio=2.0,
+                            decode_key_block=bk, min_prune_layer=0)
+        ref = energon_decode_attention(
+            q, k, v, cl, cfg, layer_index=5, window=24,
+            filter_cache={"codes": codes, "scale": scales},
+        )
+        cache = _pool_from_cache(k, v, codes, scales, tables, num_pages, bk)
+        out = energon_paged_decode_attention(
+            q, cache, jnp.asarray(tables), cl, cfg, layer_index=5, window=24
+        )
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+class TestPagedEngine:
+    """Scheduler contracts: identical streams, deterministic
+    preemption, eager frees, filter-plane hygiene."""
+
+    def _streams(self, *, paged, impl="mpmrf_block", num_pages=None,
+                 n_req=5, slots=2, max_len=96, stochastic=False):
+        cfg, model, params = _model(impl)
+        engine = ServeLoop(
+            model, params, batch_slots=slots, max_len=max_len,
+            eos_token=cfg.vocab_size - 1, prefill_chunk=8,
+            paged=paged, num_pages=num_pages,
+        )
+        rng = np.random.default_rng(0)
+        for uid in range(n_req):
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(
+                    1, cfg.vocab_size - 1,
+                    size=int(rng.integers(3, 40))).tolist(),
+                max_new_tokens=10,
+                temperature=0.9 if (stochastic and uid % 2) else 0.0,
+            ))
+        done = engine.run_until_drained()
+        assert len(done) == n_req
+        return {r.uid: r.tokens_out for r in done}, engine
+
+    @pytest.mark.parametrize("impl", ["mpmrf_block", "pallas", "mpmrf_row"])
+    def test_streams_identical_paged_vs_unpaged(self, impl):
+        """Same request trace → identical greedy decode streams for all
+        three decode paths (XLA row, XLA block, fused Pallas)."""
+        paged, _ = self._streams(paged=True, impl=impl)
+        unpaged, _ = self._streams(paged=False, impl=impl)
+        assert paged == unpaged
+
+    def test_stochastic_streams_identical_paged_vs_unpaged(self):
+        paged, _ = self._streams(paged=True, stochastic=True)
+        unpaged, _ = self._streams(paged=False, stochastic=True)
+        assert paged == unpaged
+
+    def test_preemption_fires_deterministically_and_drains(self):
+        """An oversubscribed pool forces preemption; the run still
+        drains every request, reuses slots, and two identical runs
+        preempt identically (same streams, same counters)."""
+        kw = dict(paged=True, num_pages=7, n_req=6, slots=3, max_len=96)
+        a, ea = self._streams(**kw)
+        b, eb = self._streams(**kw)
+        assert ea.metrics.preemptions > 0
+        assert ea.metrics.preemptions == eb.metrics.preemptions
+        assert ea.metrics.peak_pages_in_use == eb.metrics.peak_pages_in_use
+        assert ea.metrics.peak_pages_in_use <= 7
+        assert a == b
+        # eager frees: a drained engine holds zero pages
+        assert ea.allocator.pages_in_use == 0
+
+    def test_preempted_streams_match_ample_pool(self):
+        """Preempt-and-requeue re-prefills prompt + generated tokens and
+        resumes: greedy continuations equal the no-preemption run."""
+        tight, et = self._streams(paged=True, num_pages=7, n_req=6,
+                                  slots=3, max_len=96)
+        ample, _ = self._streams(paged=True, num_pages=None, n_req=6,
+                                 slots=3, max_len=96)
+        assert et.metrics.preemptions > 0
+        assert tight == ample
+
+    def test_pool_invariant_after_engine_churn(self):
+        """After slot-reuse and preemption cycles, every pool page's
+        (codes, scale) still equals a fresh per-page quantization of
+        its float rows — stale pages included (they were consistent
+        when last written and untouched since)."""
+        _, engine = self._streams(paged=True, num_pages=7, n_req=6,
+                                  slots=3, max_len=96)
+        bk = engine.layout.page_size
+        codes, scales = quantize_int16_blocks(engine.cache["k"], bk)
+        np.testing.assert_array_equal(
+            np.asarray(codes), np.asarray(engine.cache["k_codes"])
+        )
+        np.testing.assert_allclose(
+            np.asarray(scales), np.asarray(engine.cache["k_scale"])
+        )
+
+    def test_reused_page_does_not_leak_previous_absmax(self):
+        """A freshly allocated page is zeroed before its first write:
+        the new occupant's block scale must equal a fresh quantization
+        of its own rows, not an absmax inflated by the page's previous
+        contents."""
+        cfg, model, params = _model()
+        cache = model.init_paged_cache(num_pages=4)
+        # poison every page with a huge stale occupant
+        cache = jax.tree.map(
+            lambda a: jnp.full_like(a, 1000.0)
+            if a.dtype == jnp.float32 else jnp.full_like(a, 30000),
+            cache,
+        )
+        # scheduler hygiene: zero the pages about to be handed out
+        cache = model.reset_pages(
+            cache, jnp.asarray([True, False, True, False])
+        )
+        for key in ("k", "v"):
+            assert float(jnp.abs(cache[key][:, :, 0:16]).max()) == 0.0
+            assert float(jnp.abs(cache[key][:, :, 16:32]).max()) == 1000.0
+        # prefill 5 tokens through a table mapping logical block 0 →
+        # physical page 2 (a zeroed, reused page)
+        bt = jnp.asarray([[2, 0]], jnp.int32)
+        toks = jnp.asarray([[1, 2, 3, 4, 5]], jnp.int32)
+        pos = jnp.arange(5, dtype=jnp.int32)[None, :]
+        _, cache = model.prefill(
+            params, cache,
+            {"tokens": toks, "positions": pos, "block_table": bt},
+            jnp.zeros((1,), jnp.int32),
+        )
+        bk = cfg.energon.decode_key_block
+        page2 = cache["k"][:, :, 2 * bk:3 * bk]
+        fresh_codes, fresh_scale = quantize_int16_blocks(page2, bk)
+        np.testing.assert_array_equal(
+            np.asarray(fresh_codes),
+            np.asarray(cache["k_codes"][:, :, 2 * bk:3 * bk]),
+        )
+        np.testing.assert_allclose(
+            np.asarray(fresh_scale[..., 0]),
+            np.asarray(cache["k_scale"][:, :, 2]),
+        )
+        # the written rows are small-magnitude; a leaked 1000.0 absmax
+        # would blow the scale up by orders of magnitude
+        assert float(cache["k_scale"][:, :, 2].max()) < 1.0
+
+    def test_paged_cache_is_smaller_and_accounted(self):
+        from repro.runtime import attention_cache_bytes
+
+        cfg, model, params = _model()
+        unpaged = ServeLoop(model, params, batch_slots=4, max_len=96,
+                            eos_token=cfg.vocab_size - 1, paged=False)
+        paged = ServeLoop(model, params, batch_slots=4, max_len=96,
+                          eos_token=cfg.vocab_size - 1, num_pages=12)
+        # 4 slots × 6 blocks = 24 worst case; 12 pages is half the HBM
+        assert attention_cache_bytes(paged.cache) * 2 == \
+            attention_cache_bytes(unpaged.cache)
+
+    def test_explicit_paged_on_unsupported_model_raises(self):
+        cfg, model, params = _model(impl="dense")
+        assert not model.supports_paged
+        with pytest.raises(ValueError, match="paged"):
+            ServeLoop(model, params, batch_slots=2, max_len=64,
+                      eos_token=cfg.vocab_size - 1, paged=True)
+        # auto mode quietly falls back to the contiguous cache
+        engine = ServeLoop(model, params, batch_slots=2, max_len=64,
+                           eos_token=cfg.vocab_size - 1)
+        assert not engine.paged
+
+
+class TestLatencyMetrics:
+    def test_per_request_latency_records(self):
+        cfg, model, params = _model()
+        engine = ServeLoop(model, params, batch_slots=2, max_len=64,
+                           eos_token=cfg.vocab_size - 1, prefill_chunk=8)
+        for uid in range(4):
+            engine.submit(Request(uid=uid, prompt=[1 + uid, 2, 3, 4],
+                                  max_new_tokens=4))
+        engine.run_until_drained()
+        m = engine.metrics
+        assert len(m.request_records) == 4
+        stats = m.latency_stats()
+        for key in ("queue_wait_p50", "queue_wait_p95", "ttft_p50",
+                    "ttft_p95", "itl_p50", "itl_p95"):
+            assert stats[key] >= 0.0
+        # ttft includes queue wait; both are real times for the later
+        # requests (slots=2 < 4 requests ⇒ somebody queued)
+        assert stats["ttft_p95"] >= stats["queue_wait_p95"]
+        assert stats["ttft_p95"] > 0.0
+        assert max(
+            r["queue_wait"] for r in m.request_records
+        ) > 0.0
+        assert "ttft p50/p95" in m.summary()
+        assert "itl p50/p95" in m.summary()

@@ -679,3 +679,61 @@ class TestServeEngine:
         assert m.prefill_tokens_per_sec > 0
         assert m.decode_tokens_per_sec > 0
         assert "prefill" in m.summary() and "decode" in m.summary()
+
+
+class TestSubmitCapacity:
+    """Regression: `submit` must validate against the *real* cache row
+    count. The old check (`len(prompt) >= max_len`) rejected prompts
+    the rounded-up cache could hold — a length-L prompt prefills L rows
+    and samples its first token straight off the prefill logits, so
+    L == rows is admissible; `_commit_token` then caps generation at
+    rows - L + 1 tokens (a request generating m tokens writes only
+    L + m - 1 rows)."""
+
+    def _engine(self, max_len, **kw):
+        cfg, model, params = _model(
+            EnergonConfig(impl="mpmrf_block", pruning_ratio=2.0,
+                          decode_key_block=16, min_prune_layer=1)
+        )
+        return cfg, ServeLoop(model, params, eos_token=cfg.vocab_size - 1,
+                              max_len=max_len, **kw)
+
+    def test_full_row_prompt_accepted_and_drains(self):
+        cfg, engine = self._engine(max_len=60, batch_slots=1,
+                                   prefill_chunk=16)
+        rows = engine.max_len
+        assert rows == 64  # rounded up to whole decode blocks
+        rng = np.random.default_rng(0)
+        # the old check rejected anything >= 60; every length up to the
+        # real row count must be admissible and produce ≥ 1 token
+        for uid, L in enumerate((60, 63, rows)):
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(1, cfg.vocab_size - 1, size=L).tolist(),
+                max_new_tokens=8,
+            ))
+        done = engine.run_until_drained()
+        assert len(done) == 3
+        for r in done:
+            L = len(r.prompt)
+            assert 1 <= len(r.tokens_out) <= min(8, rows - L + 1)
+
+    def test_oversized_prompt_rejected(self):
+        cfg, engine = self._engine(max_len=60, batch_slots=1)
+        with pytest.raises(ValueError, match="does not fit"):
+            engine.submit(Request(uid=0, prompt=[1] * (engine.max_len + 1)))
+
+    def test_generation_never_writes_past_last_row(self):
+        """A near-full prompt with a large max_new_tokens budget must be
+        clamped so decode writes stay inside the cache (the engine's
+        sentinel value == rows; writing *at* rows would be dropped and
+        the stream would silently corrupt)."""
+        cfg, engine = self._engine(max_len=32, batch_slots=1,
+                                   prefill_chunk=8)
+        rows = engine.max_len
+        prompt = list(range(1, rows - 1))  # rows-2 tokens
+        engine.submit(Request(uid=0, prompt=prompt, max_new_tokens=50))
+        done = engine.run_until_drained()
+        assert len(done) == 1
+        # limit = rows - L + 1 = 3
+        assert len(done[0].tokens_out) <= 3
