@@ -332,6 +332,115 @@ def write_serving_json(path: str = "BENCH_serving.json", **kw) -> dict:
     return record
 
 
+# ---------------------------------------------------------------------------
+# Shared-system-prompt trace: prefix sharing on vs off (BENCH_prefix.json)
+# ---------------------------------------------------------------------------
+
+# Multi-user traffic with one shared system prompt: every request is
+# system prompt + a short per-user suffix. Prefix sharing should turn
+# the system-prompt prefill from O(requests) into O(1) — the trace is
+# the ROADMAP's heavy-multi-user-traffic shape in miniature.
+PREFIX_SYSTEM_LEN = 192           # 3 × decode_key_block(64) full pages
+PREFIX_SUFFIX_LENS = (8, 24, 16, 40, 12, 32, 20, 28, 36, 4)
+
+
+def run_prefix_trace(
+    *,
+    sharing: bool,
+    batch_slots: int = 4,
+    max_len: int = 320,
+    prefill_chunk: int = 64,
+    new_tokens: int = 8,
+    system_len: int = PREFIX_SYSTEM_LEN,
+    suffix_lens=PREFIX_SUFFIX_LENS,
+):
+    """Drain the shared-system-prompt trace through one paged engine
+    (sharing on or off). Returns ``(engine, completed, wall_seconds,
+    streams)`` — streams let the caller assert sharing is invisible."""
+    cfg, model, params = _serve_model()
+    engine = ServeLoop(
+        model, params, batch_slots=batch_slots, max_len=max_len,
+        eos_token=cfg.vocab_size - 1, prefill_chunk=prefill_chunk,
+        paged=True, prefix_sharing=sharing,
+    )
+    rng = np.random.default_rng(7)
+    system = rng.integers(1, cfg.vocab_size - 1, size=system_len).tolist()
+    for uid, L in enumerate(suffix_lens):
+        suffix = rng.integers(1, cfg.vocab_size - 1, size=int(L)).tolist()
+        engine.submit(Request(
+            uid=uid, prompt=system + suffix, max_new_tokens=new_tokens,
+        ))
+    t0 = time.perf_counter()
+    done = engine.run_until_drained()
+    wall = time.perf_counter() - t0
+    assert len(done) == len(suffix_lens), (len(done), len(suffix_lens))
+    streams = {r.uid: list(r.tokens_out) for r in done}
+    return engine, done, wall, streams
+
+
+def run_prefix_bench(*, new_tokens: int = 8) -> dict:
+    """Machine-readable prefix-sharing record (BENCH_prefix.json).
+
+    Same shared-system-prompt trace through the paged engine with
+    sharing on and off: prefill tokens/dispatches (the shared run must
+    do strictly less of both), hit rate, pages shared, CoW clones —
+    and a hard equality check that both runs produced identical token
+    streams (sharing must be invisible to outputs).
+    """
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "trace": {
+            "system_prompt_len": PREFIX_SYSTEM_LEN,
+            "suffix_lens": list(PREFIX_SUFFIX_LENS),
+            "new_tokens": new_tokens,
+        },
+    }
+    off_engine, _, off_wall, off_streams = run_prefix_trace(
+        sharing=False, new_tokens=new_tokens
+    )
+    m = off_engine.metrics
+    record["unshared"] = {
+        "prefill_tokens": m.prefill_tokens,
+        "prefill_dispatches": m.prefill_dispatches,
+        "prefill_tok_s": m.prefill_tokens_per_sec,
+        "decode_tok_s": m.decode_tokens_per_sec,
+        "peak_pages_in_use": m.peak_pages_in_use,
+        "wall_seconds": off_wall,
+    }
+    on_engine, _, on_wall, on_streams = run_prefix_trace(
+        sharing=True, new_tokens=new_tokens
+    )
+    m = on_engine.metrics
+    record["shared"] = {
+        "prefill_tokens": m.prefill_tokens,
+        "prefill_dispatches": m.prefill_dispatches,
+        "prefill_tok_s": m.prefill_tokens_per_sec,
+        "decode_tok_s": m.decode_tokens_per_sec,
+        "peak_pages_in_use": m.peak_pages_in_use,
+        "prefix_hit_rate": m.prefix_hit_rate,
+        "prefix_hits": m.prefix_hits,
+        "prefix_lookups": m.prefix_lookups,
+        "pages_shared": m.pages_shared,
+        "prefill_tokens_skipped": m.prefill_tokens_skipped,
+        "cow_clones": m.cow_clones,
+        "wall_seconds": on_wall,
+    }
+    record["streams_identical"] = on_streams == off_streams
+    record["prefill_tokens_saved"] = (
+        record["unshared"]["prefill_tokens"]
+        - record["shared"]["prefill_tokens"]
+    )
+    return record
+
+
+def write_prefix_json(path: str = "BENCH_prefix.json", **kw) -> dict:
+    record = run_prefix_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
+
+
 def main(emit):
     rows = run()
     for r in rows:
@@ -377,6 +486,9 @@ if __name__ == "__main__":
                     help="write BENCH_decode.json to this path")
     ap.add_argument("--serving-json", default=None,
                     help="write BENCH_serving.json to this path")
+    ap.add_argument("--prefix-json", default=None,
+                    help="write BENCH_prefix.json (shared-system-prompt "
+                         "trace, prefix sharing on vs off) to this path")
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -384,7 +496,8 @@ if __name__ == "__main__":
                     help="paged pool size for the serving trace "
                          "(oversubscribed below slots*blocks)")
     args = ap.parse_args()
-    if args.json is None and args.serving_json is None:
+    if (args.json is None and args.serving_json is None
+            and args.prefix_json is None):
         args.json = "BENCH_decode.json"
     if args.json is not None:
         out = write_decode_json(
@@ -396,5 +509,10 @@ if __name__ == "__main__":
         out = write_serving_json(
             args.serving_json, num_pages=args.num_pages,
             new_tokens=args.new_tokens,
+        )
+        print(json.dumps(out, indent=2, sort_keys=True))
+    if args.prefix_json is not None:
+        out = write_prefix_json(
+            args.prefix_json, new_tokens=args.new_tokens,
         )
         print(json.dumps(out, indent=2, sort_keys=True))

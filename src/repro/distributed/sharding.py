@@ -350,6 +350,12 @@ def paged_pool_pspec(path, leaf, mesh: Mesh, page_size: int) -> P:
       0``), since a page split across devices would break the
       scalar-prefetch page streaming.
     * ``k_scale`` ``[L, KV, num_pages]``: follows the KV-head rule.
+
+    Prefix sharing changes nothing here: shared pages are ordinary pool
+    pages (sharing lives entirely in the host-side block tables, which
+    keep replicating — a table entry may now alias a page another slot
+    maps, but the device never sees refcounts), so the pool pspec is
+    identical with sharing on or off.
     """
     names = _path_names(path)
     name = names[-1] if names else ""

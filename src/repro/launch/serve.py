@@ -31,6 +31,12 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="paged pool size (default slots×blocks; smaller "
                          "values oversubscribe and may preempt)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable the shared-prefix page cache "
+                         "(copy-on-write prefix reuse across requests)")
+    ap.add_argument("--system-prompt-len", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every request (exercises prefix sharing)")
     args = ap.parse_args()
 
     import jax
@@ -49,10 +55,15 @@ def main():
         model, params, batch_slots=args.batch_slots, max_len=args.max_len,
         eos_token=cfg.vocab_size - 1, prefill_chunk=args.prefill_chunk,
         paged=paged, num_pages=args.num_pages,
+        prefix_sharing=(False if (args.no_prefix_sharing or args.unpaged)
+                        else None),
     )
     rng = np.random.default_rng(0)
+    system = rng.integers(
+        1, cfg.vocab_size - 1, size=args.system_prompt_len
+    ).tolist()
     for uid in range(args.requests):
-        prompt = rng.integers(
+        prompt = system + rng.integers(
             1, cfg.vocab_size - 1, size=args.prompt_len
         ).tolist()
         engine.submit(Request(uid=uid, prompt=prompt,
@@ -85,6 +96,13 @@ def main():
               f"peak {m.peak_pages_in_use} pages in use "
               f"({m.peak_pages_in_use * page} B), "
               f"{m.preemptions} preemptions")
+        if engine.sharing:
+            print(f"[serve] prefix cache: hit-rate "
+                  f"{m.prefix_hit_rate:.2f} "
+                  f"({m.prefix_hits}/{m.prefix_lookups} admissions), "
+                  f"{m.pages_shared} pages shared, "
+                  f"{m.prefill_tokens_skipped} prefill tok skipped, "
+                  f"{m.cow_clones} CoW clones")
     else:
         print(f"[serve] cache ({cache_mode}): "
               f"{attention_cache_bytes(engine.cache)} B "

@@ -434,6 +434,14 @@ def _project_update_fold_paged(
     slot must not self-heal — its table may alias pages a live slot
     owns, so idle writes are *dropped*, not overwritten later).
 
+    Prefix sharing strengthens that aliasing: a *live* slot's table may
+    alias pages other live slots also map (shared prompt prefixes).
+    The scheduler guarantees writes only ever target exclusively-owned
+    pages — a slot about to write a shared or content-registered page
+    gets a copy-on-write clone first (``PageAllocator.cow`` +
+    ``LMModel.clone_pages``) — so this function needs no extra masking:
+    by construction, positions it writes resolve to single-writer rows.
+
     Filter-operand maintenance mirrors the unpaged invariant per
     physical page: a decode append (C = 1) re-quantizes exactly the one
     touched page per active slot; a prefill chunk re-quantizes the

@@ -480,6 +480,21 @@ class LMModel:
             )
         return out
 
+    def clone_pages(self, cache, src_pages, dst_pages):
+        """Copy-on-write device step: duplicate whole physical pages
+        (K/V rows + filter codes + per-page scale) of the paged cache.
+
+        The prefix-sharing scheduler calls this when a slot must mutate
+        a page that is shared (refcount > 1) or content-registered: the
+        slot gets an exclusive bit-identical clone and the original
+        stays immutable for its other readers. Destinations are fully
+        overwritten, so they need no prior zeroing."""
+        from repro.runtime import paged_cache as pgc
+
+        return pgc.clone_page_rows(
+            cache, self.cfg.energon.decode_key_block, src_pages, dst_pages
+        )
+
     def prefill(
         self,
         params,

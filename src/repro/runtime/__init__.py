@@ -9,6 +9,7 @@ from repro.runtime.paged_cache import (  # noqa: F401
     PageAllocator,
     PagedLayout,
     attention_cache_bytes,
+    clone_page_rows,
 )
 from repro.runtime.serve_loop import (  # noqa: F401
     EngineMetrics,

@@ -24,6 +24,20 @@ Split of responsibilities:
   write scatter, logical-view gathers for the XLA paths, and the
   survivor∘table composition for the gather kernels.
 
+Prefix sharing (DESIGN.md §4): the MP-MRF filter state of a page —
+K/V rows, int16 ``k_codes``, per-page ``k_scale`` — is a pure function
+of the token ids the page covers and their absolute positions, so
+pages holding identical prompt prefixes are bit-identical and can be
+physically shared. The allocator keeps a **per-page refcount**, a
+host-side **prefix trie** keyed on token-id chunks of exactly
+``page_size`` tokens (content addressing by token equality — no hash
+collisions to reason about), and a **cached** set of zero-refcount
+pages whose registered contents survive their writer until the pool
+needs the capacity back (evicted oldest-first, deterministically).
+Shared pages are immutable: any write into a page that is registered
+or referenced by more than one table goes through **copy-on-write**
+(:meth:`PageAllocator.cow` + :func:`clone_page_rows` on device).
+
 Layout convention for pool leaves (per layer, i.e. inside the
 scan-over-layers): ``k``/``v``/``k_codes`` are ``[KV, num_pages ·
 page_size, head_dim]`` — page p owns rows ``[p·ps, (p+1)·ps)`` — and
@@ -35,7 +49,8 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import List, Optional
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -85,19 +100,51 @@ class PagedLayout:
         return max(-(-n_tokens // self.page_size), 0)
 
 
+class _TrieNode:
+    """One prefix-trie node: a ``page_size``-token chunk of a prefix.
+
+    ``children`` maps the *next* chunk (an exact token tuple — content
+    addressing by equality, so there is no hash-collision failure mode)
+    to its node. ``page`` is the physical page currently holding this
+    chunk's K/V + filter state, or None when that page was evicted —
+    the node survives as structure and can be re-filled by the next
+    registration of the same content."""
+
+    __slots__ = ("children", "page", "parent", "key")
+
+    def __init__(self, parent=None, key=None):
+        self.children: Dict[Tuple[int, ...], "_TrieNode"] = {}
+        self.page: Optional[int] = None
+        self.parent: Optional["_TrieNode"] = parent
+        self.key: Optional[Tuple[int, ...]] = key
+
+
 class PageAllocator:
-    """Host-side page allocator: free list + per-slot block tables.
+    """Host-side page allocator: free list + per-slot block tables +
+    refcounted prefix sharing.
 
     Allocation is deterministic — the lowest-numbered free page is
-    always handed out first (a heap, not an arbitrary set), so a given
-    request trace produces the same physical placement, the same
-    preemptions, and the same watermark on every run.
+    always handed out first (a heap, not an arbitrary set), and cached
+    zero-refcount pages are evicted oldest-first — so a given request
+    trace produces the same physical placement, the same preemptions,
+    and the same watermark on every run.
 
     Block tables are **compacted**: a slot's table holds its pages in
     logical-block order in entries ``[0, n_blocks)``, and every entry
     beyond that is 0 (a safe in-range page id — device code masks those
     logical blocks by cache length, so what page they alias is
     irrelevant, but the gather must stay in bounds).
+
+    Page lifecycle with sharing:
+
+    * ``ref[p] == 0`` and on the free heap — truly free; zeroed on
+      reuse before first write.
+    * ``ref[p] >= 1`` — live: mapped by ``ref[p]`` table entries across
+      slots. Writable only when ``ref == 1`` *and* unregistered.
+    * ``ref[p] == 0`` but **cached** — its content is registered in the
+      prefix trie and survives its last reference (a shared page
+      survives its writer); evicted (and deregistered) oldest-first
+      when the heap runs dry.
     """
 
     def __init__(self, layout: PagedLayout):
@@ -108,20 +155,136 @@ class PageAllocator:
             (layout.batch_slots, layout.max_blocks), np.int32
         )
         self.n_blocks = np.zeros((layout.batch_slots,), np.int32)
+        self.ref = np.zeros((layout.num_pages,), np.int32)
         self.pages_in_use = 0
         self.peak_pages_in_use = 0
+        # prefix sharing state
+        self._root = _TrieNode()
+        self._page_node: Dict[int, _TrieNode] = {}
+        self._cached: "OrderedDict[int, None]" = OrderedDict()
 
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Pages allocatable right now: the free heap plus evictable
+        cached (zero-refcount, registered) pages."""
+        return len(self._free) + len(self._cached)
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._cached)
+
+    # --- prefix trie ---------------------------------------------------
+
+    def _chunks(self, tokens: Sequence[int]):
+        ps = self.layout.page_size
+        for j in range(len(tokens) // ps):
+            yield tuple(int(t) for t in tokens[j * ps:(j + 1) * ps])
+
+    def match_prefix(self, tokens: Sequence[int]) -> List[int]:
+        """Longest registered prefix of ``tokens``, as physical pages.
+
+        Walks the trie one full ``page_size`` chunk at a time and stops
+        at the first chunk with no resident page. Every returned page
+        is either live or cached — both hold exactly the chunk's
+        content. The caller *must* attach (``share``) before any
+        further allocation, or an eviction could reuse a cached match.
+        """
+        pages: List[int] = []
+        node = self._root
+        for chunk in self._chunks(tokens):
+            child = node.children.get(chunk)
+            if child is None or child.page is None:
+                break
+            pages.append(child.page)
+            node = child
+            if len(pages) >= self.layout.max_blocks:
+                break
+        return pages
+
+    def register_prefix(self, slot: int, tokens: Sequence[int]) -> int:
+        """Content-address ``slot``'s full pages under ``tokens``.
+
+        Chunk j's trie node gets ``slot``'s physical page for logical
+        block j — unless the node already holds a (different) page with
+        the same content, in which case the existing registration wins
+        and ``slot``'s copy stays private. Registered pages are
+        immutable from then on: the write guard (:meth:`writable`)
+        forces copy-on-write. Returns the number of pages newly
+        registered."""
+        node = self._root
+        added = 0
+        for j, chunk in enumerate(self._chunks(tokens)):
+            if j >= int(self.n_blocks[slot]):
+                break
+            child = node.children.get(chunk)
+            if child is None:
+                child = _TrieNode(parent=node, key=chunk)
+                node.children[chunk] = child
+            if child.page is None:
+                page = int(self.block_tables[slot, j])
+                if page not in self._page_node:
+                    child.page = page
+                    self._page_node[page] = child
+                    added += 1
+            node = child
+        return added
+
+    def _deregister(self, page: int) -> None:
+        node = self._page_node.pop(page, None)
+        if node is None:
+            return
+        node.page = None
+        # prune now-empty structure so the trie stays bounded
+        while (
+            node.parent is not None
+            and node.page is None
+            and not node.children
+        ):
+            del node.parent.children[node.key]
+            node = node.parent
+
+    def is_registered(self, page: int) -> bool:
+        return int(page) in self._page_node
+
+    # --- page handout --------------------------------------------------
+
+    def _take_page(self) -> Optional[int]:
+        """Lowest free page, else evict the oldest cached page (its
+        registration is dropped first). None when neither exists."""
+        if self._free:
+            return heapq.heappop(self._free)
+        if self._cached:
+            page, _ = self._cached.popitem(last=False)
+            self._deregister(page)
+            return page
+        return None
+
+    def _retire_page(self, page: int) -> None:
+        """Route a page whose refcount just hit zero: registered pages
+        survive in the cached set, anonymous pages rejoin the heap."""
+        if page in self._page_node:
+            self._cached[page] = None
+        else:
+            heapq.heappush(self._free, page)
+
+    def _append_block(self, slot: int, page: int) -> None:
+        base = int(self.n_blocks[slot])
+        if base + 1 > self.layout.max_blocks:
+            raise ValueError(
+                f"slot {slot} would exceed max_blocks="
+                f"{self.layout.max_blocks}"
+            )
+        self.block_tables[slot, base] = page
+        self.n_blocks[slot] = base + 1
 
     def alloc(self, slot: int, n_pages: int) -> Optional[List[int]]:
         """Append ``n_pages`` fresh pages to ``slot``'s block table.
 
         Returns the allocated page ids, or None (state unchanged) when
-        the free list cannot cover the request. The caller must zero the
-        returned pages on device before use: a reused page still holds
-        its previous occupant's rows, and a block absmax computed over
+        neither the free list nor the evictable cache can cover the
+        request. Every returned page had refcount 0; the caller must
+        zero it on device before use: a reused page still holds its
+        previous occupant's rows, and a block absmax computed over
         stale rows would poison the new occupant's filter scale (the
         same failure reset_decode_slots guards against in the unpaged
         cache).
@@ -134,11 +297,13 @@ class PageAllocator:
                 f"slot {slot} would exceed max_blocks="
                 f"{self.layout.max_blocks}"
             )
-        if n_pages > len(self._free):
+        if n_pages > self.free_pages:
             return None
-        pages = [heapq.heappop(self._free) for _ in range(n_pages)]
+        pages = [self._take_page() for _ in range(n_pages)]
         self.block_tables[slot, base:base + n_pages] = pages
         self.n_blocks[slot] = base + n_pages
+        for p in pages:
+            self.ref[p] = 1
         self.pages_in_use += n_pages
         self.peak_pages_in_use = max(
             self.peak_pages_in_use, self.pages_in_use
@@ -157,15 +322,68 @@ class PageAllocator:
             return []
         return self.alloc(slot, need)
 
+    def share(self, slot: int, page: int) -> None:
+        """Attach an existing page (live or cached) as ``slot``'s next
+        logical block: pure block-table aliasing, no copy, no zeroing —
+        the attached content is live data."""
+        page = int(page)
+        self._append_block(slot, page)
+        if self.ref[page] == 0:
+            self._cached.pop(page, None)
+            self.pages_in_use += 1
+            self.peak_pages_in_use = max(
+                self.peak_pages_in_use, self.pages_in_use
+            )
+        self.ref[page] += 1
+
+    def writable(self, slot: int, block: int) -> bool:
+        """True when ``slot`` may mutate logical ``block`` in place:
+        exactly one table reference and no content registration."""
+        page = int(self.block_tables[slot, block])
+        return int(self.ref[page]) == 1 and page not in self._page_node
+
+    def cow(self, slot: int, block: int) -> Optional[Tuple[int, int]]:
+        """Copy-on-write ``slot``'s logical ``block``: swap in a fresh
+        exclusive page for the shared/registered one it maps.
+
+        Returns ``(src, dst)`` — the caller must copy src's rows, codes
+        and scale to dst on device (``clone_page_rows``) *before* the
+        next cache write; dst is **not** zeroed (the clone overwrites
+        the whole page). Returns None (state unchanged) when the pool
+        cannot supply a page; the caller preempts and retries.
+        """
+        src = int(self.block_tables[slot, block])
+        dst = self._take_page()
+        if dst is None:
+            return None
+        self.block_tables[slot, block] = dst
+        self.ref[dst] = 1
+        self.pages_in_use += 1
+        self.ref[src] -= 1
+        if self.ref[src] == 0:
+            self._retire_page(src)
+            self.pages_in_use -= 1
+        self.peak_pages_in_use = max(
+            self.peak_pages_in_use, self.pages_in_use
+        )
+        return src, dst
+
     def free_slot(self, slot: int) -> List[int]:
-        """Release every page ``slot`` owns and compact its table."""
+        """Drop every table reference ``slot`` holds and compact its
+        table. Refcounts decrement; a page only leaves live use when
+        its last reference goes — shared pages survive their writer,
+        and registered pages retire to the cached set instead of the
+        heap."""
         n = int(self.n_blocks[slot])
         pages = self.block_tables[slot, :n].tolist()
         for p in pages:
-            heapq.heappush(self._free, int(p))
+            p = int(p)
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self._retire_page(p)
+                self.pages_in_use -= 1
         self.block_tables[slot, :] = 0
         self.n_blocks[slot] = 0
-        self.pages_in_use -= n
         return pages
 
     def table_device(self) -> jnp.ndarray:
@@ -267,6 +485,38 @@ def paged_row_targets(
         ok = jnp.logical_and(ok, write_mask[:, None])
     # out-of-bounds sentinel: larger than any pool row ⇒ dropped scatter
     return jnp.where(ok, rowid, jnp.int32(2 ** 30))
+
+
+def clone_page_rows(
+    cache: Dict[str, jnp.ndarray],
+    page_size: int,
+    src_pages: Sequence[int],
+    dst_pages: Sequence[int],
+) -> Dict[str, jnp.ndarray]:
+    """Device-side copy-on-write: duplicate whole physical pages.
+
+    Copies the K/V rows, filter codes and per-page scales of
+    ``src_pages`` into ``dst_pages`` across every layer of a paged
+    cache pytree (leaves ``[L, KV, pool_rows, hd]`` / scales
+    ``[L, KV, num_pages]``). The destination pages need no prior
+    zeroing — every row and the scale are overwritten. Bit-exact by
+    construction, so a cloned page is indistinguishable from the
+    shared original to every decode path.
+    """
+    src = jnp.asarray(np.asarray(src_pages, np.int32))
+    dst = jnp.asarray(np.asarray(dst_pages, np.int32))
+    ps = page_size
+    row_src = (src[:, None] * ps + jnp.arange(ps)[None, :]).reshape(-1)
+    row_dst = (dst[:, None] * ps + jnp.arange(ps)[None, :]).reshape(-1)
+    out = dict(cache)
+    for key in ("k", "v", "k_codes"):
+        if key in cache:
+            leaf = cache[key]
+            out[key] = leaf.at[..., row_dst, :].set(leaf[..., row_src, :])
+    if "k_scale" in cache:
+        leaf = cache["k_scale"]
+        out["k_scale"] = leaf.at[..., dst].set(leaf[..., src])
+    return out
 
 
 def attention_cache_bytes(cache) -> int:

@@ -28,10 +28,20 @@ continuous-batching engine:
   l=1 pipeline, §IV-D) with per-slot RNG streams and per-slot
   temperature sampling. RNG streams are deterministic in (uid, tokens
   sampled so far), so a preempted request resumes its stream exactly.
+* **Prefix sharing** (paged default): admission looks the prompt up in
+  the allocator's token-chunk prefix trie and attaches the longest
+  cached prefix by block-table aliasing — those pages' prefill chunks
+  never dispatch. Writes into shared or content-registered pages go
+  through copy-on-write clones, completed pages outlive their writer
+  in a cached set until the pool needs them back, and the whole
+  mechanism is invisible to outputs: shared ≡ unshared ≡ unpaged
+  streams are bit-identical, greedy and stochastic (DESIGN.md §4).
 * **Metrics** track prefill vs decode throughput *and* per-request
   latency: queue wait, time-to-first-token and inter-token latency with
   p50/p95 in ``summary()`` — scheduler changes are measurable, not just
-  tok/s. Paged runs also report preemptions and the page watermark.
+  tok/s. Paged runs also report preemptions, the page watermark, and
+  the prefix cache's hit-rate / pages shared / prefill tokens skipped /
+  CoW clones.
 """
 
 from __future__ import annotations
@@ -85,6 +95,12 @@ class EngineMetrics:
     ticks: int = 0
     preemptions: int = 0
     peak_pages_in_use: int = 0
+    # prefix-sharing counters (paged engines with sharing enabled)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    pages_shared: int = 0
+    prefill_tokens_skipped: int = 0
+    cow_clones: int = 0
     request_records: List[Dict[str, Any]] = dataclasses.field(
         default_factory=list
     )
@@ -96,6 +112,12 @@ class EngineMetrics:
     @property
     def decode_tokens_per_sec(self) -> float:
         return self.decode_tokens / max(self.decode_time, 1e-9)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prefix-cache lookups (one per admission) that
+        attached at least one shared page."""
+        return self.prefix_hits / max(self.prefix_lookups, 1)
 
     def record_request(self, req: Request) -> None:
         """Fold a completed request's latency stamps into the records."""
@@ -154,6 +176,13 @@ class EngineMetrics:
             s += (
                 f" | {self.preemptions} preemptions, "
                 f"peak {self.peak_pages_in_use} pages"
+            )
+        if self.prefix_lookups:
+            s += (
+                f" | prefix hit-rate {self.prefix_hit_rate:.2f} "
+                f"({self.pages_shared} pages shared, "
+                f"{self.prefill_tokens_skipped} prefill tok skipped, "
+                f"{self.cow_clones} CoW clones)"
             )
         return s
 
@@ -273,6 +302,7 @@ class ServeLoop:
         prefill_chunk: int = 64,
         paged: Optional[bool] = None,
         num_pages: Optional[int] = None,
+        prefix_sharing: Optional[bool] = None,
     ):
         self.model = model
         self.params = params
@@ -283,6 +313,16 @@ class ServeLoop:
                 "paged serving needs an attention family with "
                 "decode_key_block > 0 and a non-dense impl"
             )
+        # Prefix sharing rides the paged pool (block-table aliasing is
+        # the attach mechanism); default on whenever paged. Sharing is
+        # invisible to outputs — shared and unshared engines produce
+        # bit-identical streams — so the flag only trades host-side
+        # bookkeeping for skipped prefill work.
+        if prefix_sharing is None:
+            prefix_sharing = self.paged
+        if prefix_sharing and not self.paged:
+            raise ValueError("prefix_sharing requires the paged cache")
+        self.sharing = bool(prefix_sharing)
         # Cache rows are rounded up to whole decode key blocks (the
         # block path must never silently fall back to the row path);
         # the engine's sentinels/limits must use the same rounded value
@@ -373,6 +413,48 @@ class ServeLoop:
             self.cache, self.allocator.page_reset_mask(pages)
         )
 
+    def _plan_prefix_attach(self, seq_tokens: List[int], resumed: bool):
+        """Longest-cached-prefix plan for one admission.
+
+        Returns ``(skip, attach_pages, clone_src)``: the number of
+        leading tokens whose prefill is skipped entirely, the full
+        shared pages to attach by block-table aliasing, and — when the
+        skip boundary lands mid-page — the shared page the slot must
+        clone (copy-on-write) because the ragged tail chunk will write
+        into it.
+
+        Skip geometry: recomputed chunks must stay on the global
+        ``prefill_chunk`` grid — MP-MRF prefill selection pools scores
+        per query block, so a shifted chunk would change the pooled
+        planes and break the shared ≡ unshared / preempted ≡ ample
+        bit-exactness contracts. A *fresh* request additionally caps
+        the skip at L−1: its last prompt token's logits seed sampling.
+        A *resumed* request needs no logits (its pending token is
+        already sampled), so when the match covers everything it wrote
+        it skips prefill outright, grid notwithstanding — a pure table
+        aliasing restore recomputes nothing.
+        """
+        matched = self.allocator.match_prefix(seq_tokens)
+        if not matched:
+            return 0, [], None
+        bk = self.layout.page_size
+        if resumed:
+            skip = min(len(matched) * bk, len(seq_tokens))
+            if skip < len(seq_tokens):
+                # some re-prefill remains: its chunks must sit on the
+                # same grid the original admission used (only a fully
+                # covered restore — pure table aliasing, no recompute —
+                # may end off-grid).
+                skip = (skip // self.prefill_chunk) * self.prefill_chunk
+        else:
+            skip = min(len(matched) * bk, len(seq_tokens) - 1)
+            skip = (skip // self.prefill_chunk) * self.prefill_chunk
+        if skip <= 0:
+            return 0, [], None
+        n_attach = skip // bk
+        clone_src = matched[n_attach] if skip % bk else None
+        return skip, matched[:n_attach], clone_src
+
     def _admit(self):
         chunked, sequential = [], []
         admitted_slots: List[int] = []
@@ -389,14 +471,56 @@ class ServeLoop:
             seq_tokens = (
                 req.prompt + req.tokens_out[:-1] if resumed else req.prompt
             )
+            skip = 0
             if self.paged:
-                pages = self.allocator.ensure_capacity(
-                    i, max(len(seq_tokens), 1)
+                attach, clone_src = [], None
+                use_chunked = resumed or (
+                    self.prefill_fn is not None and len(req.prompt) > 1
                 )
+                if self.sharing and use_chunked and len(seq_tokens) > 1:
+                    skip, attach, clone_src = self._plan_prefix_attach(
+                        seq_tokens, resumed
+                    )
+                # attach-then-alloc with rollback: shared pages are
+                # refcounted *before* fresh allocation so an eviction
+                # can never reclaim a page this admission depends on;
+                # on pool exhaustion every acquired reference is
+                # released and the request waits at the queue head.
+                pair = None
+                for p in attach:
+                    self.allocator.share(i, p)
+                if clone_src is not None:
+                    self.allocator.share(i, clone_src)
+                    pair = self.allocator.cow(i, len(attach))
+                    if pair is not None:
+                        # copy *now*: the cow just dropped the source
+                        # to refcount 0 (cached), so a later allocation
+                        # in this very pass may evict it into new_pages
+                        # — and the end-of-admission zeroing must never
+                        # beat the clone to its source.
+                        self.cache = self.model.clone_pages(
+                            self.cache, [pair[0]], [pair[1]]
+                        )
+                pages = None
+                if clone_src is None or pair is not None:
+                    pages = self.allocator.ensure_capacity(
+                        i, max(len(seq_tokens), 1)
+                    )
                 if pages is None:
                     # FIFO head-of-line: wait for pages to free up
+                    self.allocator.free_slot(i)
                     break
                 new_pages += pages
+                if self.sharing and use_chunked and len(seq_tokens) > 1:
+                    self.metrics.prefix_lookups += 1
+                if pair is not None:
+                    self.metrics.cow_clones += 1
+                if skip > 0:
+                    self.metrics.prefix_hits += 1
+                    self.metrics.pages_shared += len(attach) + (
+                        clone_src is not None
+                    )
+                    self.metrics.prefill_tokens_skipped += skip
             self.pending.pop(0)
             self.slots[i] = req
             self._slot_order[i] = next(self._admit_seq)
@@ -414,14 +538,18 @@ class ServeLoop:
             admitted_slots.append(i)
             if resumed:
                 if seq_tokens:
-                    chunked.append((i, req, seq_tokens, True))
+                    chunked.append((i, req, seq_tokens, True, skip))
                 # else: nothing was ever written; _next_input resumes it
             elif self.prefill_fn is not None and len(req.prompt) > 1:
-                chunked.append((i, req, seq_tokens, False))
+                chunked.append((i, req, seq_tokens, False, skip))
             else:
                 sequential.append((i, req))
         if self.paged:
-            # paged slot hygiene happens per *page*, at allocation
+            # paged slot hygiene happens per *page*, at allocation:
+            # fresh pages are zeroed, attached pages carry live shared
+            # data (never zeroed), CoW destinations were overwritten
+            # whole by their (already applied) clones — zeroing them
+            # would destroy the copy, so they are never in new_pages.
             if new_pages:
                 self.cache = self._reset_pages(new_pages)
             # sync the watermark here too: a request whose prompt fills
@@ -450,23 +578,29 @@ class ServeLoop:
         sum(ceil(L_i/C)). A *fresh* slot's first generated token is
         sampled straight off its final prefill chunk; a *resumed*
         (preempted) slot only restores its cache rows — its pending
-        token is already in ``tokens_out`` and must not be re-sampled."""
+        token is already in ``tokens_out`` and must not be re-sampled.
+
+        A slot admitted with a shared-prefix attach starts its chunks
+        at ``skip`` — the aliased pages already hold those rows, so the
+        skipped chunks never dispatch. A fully-covered resumed slot
+        contributes nothing and restores purely by table aliasing.
+        """
         C = self.prefill_chunk
         t0 = time.perf_counter()
         n_chunks = max(
-            -(-len(seq) // C) for _, _, seq, _ in admitted
+            -(-(len(seq) - skip) // C) for _, _, seq, _, skip in admitted
         )
         bt = self._device_block_table() if self.paged else None
         last_logits = {}
         logits = None
         for c in range(n_chunks):
-            lo = c * C
             toks = np.zeros((self.batch_slots, C), np.int32)
             # position sentinel max_len ⇒ no cache write, output ignored
             # (idle slots, already-finished prompts and ragged tails all
             # share one compiled shape).
             pos = np.full((self.batch_slots, C), self.max_len, np.int32)
-            for i, req, seq, _ in admitted:
+            for i, req, seq, _, skip in admitted:
+                lo = skip + c * C
                 part = seq[lo:lo + C]
                 if part:
                     toks[i, :len(part)] = part
@@ -480,20 +614,28 @@ class ServeLoop:
                 self.params, self.cache, inputs, self.cache_index,
             )
             self.metrics.prefill_dispatches += 1
-            for i, req, seq, resumed in admitted:
+            for i, req, seq, resumed, skip in admitted:
+                lo = skip + c * C
                 if not resumed and lo < len(seq) <= lo + C:
                     last_logits[i] = logits[i, len(seq) - 1 - lo]
         # jax dispatch is async: sync before stopping the clock so the
         # prefill/decode throughput split reflects device time, not
         # dispatch time.
-        jax.block_until_ready(
-            list(last_logits.values()) if last_logits else logits
-        )
-        for i, req, seq, _ in admitted:
+        if last_logits or logits is not None:
+            jax.block_until_ready(
+                list(last_logits.values()) if last_logits else logits
+            )
+        for i, req, seq, _, skip in admitted:
             self.cache_index = self.cache_index.at[i].set(len(seq))
             self._lengths[i] = len(seq)
-            self.metrics.prefill_tokens += len(seq)
+            self.metrics.prefill_tokens += len(seq) - skip
         self.metrics.prefill_time += time.perf_counter() - t0
+        if self.paged and self.sharing:
+            # content-address every page the wave filled. Registration
+            # happens only now — mid-wave, a sharer could have read a
+            # page its writer had not finished.
+            for i, req, seq, _, _ in admitted:
+                self.allocator.register_prefix(i, seq)
         if not last_logits:
             return
         # sample every *fresh* admitted slot's first token in one call
@@ -509,7 +651,7 @@ class ServeLoop:
             jnp.asarray(mask),
         )
         toks = jax.device_get(toks)
-        for i, req, _, resumed in admitted:
+        for i, req, _, resumed, _ in admitted:
             if not resumed:
                 self._commit_token(i, req, int(toks[i]))
 
@@ -573,9 +715,14 @@ class ServeLoop:
 
     def _ensure_decode_capacity(self, live: List[int]) -> List[int]:
         """Every live slot must own the page its next token's KV row
-        lands in. On pool exhaustion, preempt the *youngest* live slot
-        (latest admission) and retry — deterministic for a given trace.
-        Returns the slots still live afterwards."""
+        lands in — *exclusively*: a slot about to append into a shared
+        or content-registered page first swaps in a copy-on-write clone
+        (the engine's admission geometry makes this rare, but the guard
+        makes "no slot ever writes a page another reader maps" an
+        invariant rather than a schedule accident). On pool exhaustion,
+        preempt the *youngest* live slot (latest admission) and retry —
+        deterministic for a given trace. Returns the slots still live
+        afterwards."""
         fresh: List[int] = []
         for i in live:
             while self.slots[i] is not None:
@@ -584,6 +731,25 @@ class ServeLoop:
                 )
                 if got is not None:
                     fresh += got
+                if got is not None and self.sharing:
+                    blk = int(self._lengths[i]) // self.layout.page_size
+                    if not self.allocator.writable(i, blk):
+                        pair = self.allocator.cow(i, blk)
+                        if pair is None:
+                            # the clone needs a page we don't have:
+                            # preempt below and retry (the grown pages
+                            # stay — ensure_capacity is then a no-op).
+                            got = None
+                        else:
+                            # applied immediately: a later preemption in
+                            # this same pass may free + recycle the
+                            # clone's page, and the final fresh-page
+                            # zeroing must win over the copy.
+                            self.cache = self.model.clone_pages(
+                                self.cache, [pair[0]], [pair[1]]
+                            )
+                            self.metrics.cow_clones += 1
+                if got is not None:
                     break
                 victim = max(
                     (j for j in range(self.batch_slots)
@@ -643,6 +809,25 @@ class ServeLoop:
         )
         self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
         self._lengths += active
+        if self.paged and self.sharing:
+            # a decode append that just *filled* a page freezes it:
+            # register its content (prompt + written generations) so a
+            # preempted-and-resumed twin — or an identical re-request —
+            # can attach instead of re-prefilling. Registered pages are
+            # immutable; the slot's next append starts a new page. The
+            # registration re-walks the slot's chain from the root —
+            # O(len) host work per page fill, bounded by the engine's
+            # rows ≤ max_len invariant (≤ max_len²/bk per request, dict
+            # lookups on small tuples) — noise next to a decode
+            # dispatch.
+            bk = self.layout.page_size
+            for i in live:
+                n = int(self._lengths[i])
+                if n and n % bk == 0:
+                    req = self.slots[i]
+                    self.allocator.register_prefix(
+                        i, req.prompt + req.tokens_out
+                    )
         next_tokens, self.slot_keys = _sample_step(
             logits, jnp.asarray(self._temps), self.slot_keys
         )

@@ -1,0 +1,25 @@
+"""Shared test configuration.
+
+Registers the ``ci`` hypothesis profile CI selects with
+``--hypothesis-profile=ci``: derandomized (a fixed seed, so a red run
+reproduces exactly), no per-example deadline (jit compiles inside
+examples blow any wall-clock budget), and health checks relaxed for the
+engine-level fuzz cases whose first example compiles XLA programs.
+Guarded import: the suite must collect and run (property cases skip)
+when hypothesis is not installed — see ``_hypothesis_fallback``.
+"""
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci",
+        derandomize=True,
+        deadline=None,
+        suppress_health_check=[
+            HealthCheck.too_slow,
+            HealthCheck.data_too_large,
+        ],
+    )
+except ImportError:  # pragma: no cover - optional dev dep
+    pass

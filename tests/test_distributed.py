@@ -253,6 +253,78 @@ class TestPagedCacheSharding:
         # misaligned shard boundary ⇒ the pool replicates instead
         assert spec[1] is None and spec[2] is None
 
+    def test_prefix_sharing_leaves_pool_pspec_unchanged(self):
+        """Prefix sharing lives entirely in the host-side block tables
+        (which replicate as `inputs`, aliased entries or not): the pool
+        pspec derivation takes only shapes, so a sharing engine's cache
+        shards exactly like a non-sharing one."""
+        from repro.configs.base import ModelConfig
+        from repro.core import EnergonConfig
+        from repro.distributed import sharding as shd
+        from repro.models import LMModel
+
+        mesh = make_mesh_compat((1, 1), ("data", "model"))
+        cfg = ModelConfig(
+            name="paged-shard-share", family="dense", num_layers=2,
+            d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+            vocab_size=64, dtype="float32", remat="none",
+            energon=EnergonConfig(impl="mpmrf_block", decode_key_block=16),
+        )
+        model = LMModel(cfg)
+        shapes = jax.eval_shape(lambda: model.init_paged_cache(8))
+        specs = shd.paged_cache_shardings(shapes, mesh, 16)
+        # no per-page refcount/trie state ever reaches the device tree
+        assert set(shapes.keys()) == {"k", "v", "k_codes", "k_scale"}
+        for key, leaf in shapes.items():
+            respec = shd.paged_pool_pspec(
+                (jax.tree_util.DictKey(key),), leaf, mesh, 16
+            )
+            assert specs[key].spec == respec
+
+    def test_paged_sharded_step_runs_with_aliased_tables(self):
+        """A block table whose slots alias the *same* physical pages
+        (the prefix-sharing attach) lowers and runs through the sharded
+        serve step unchanged — sharing is invisible to the device."""
+        result = run_subprocess("""
+        from repro.configs.base import ModelConfig
+        from repro.core import EnergonConfig
+        from repro.distributed import sharding as shd
+        from repro.models import LMModel
+        from repro.runtime import make_serve_step
+        cfg = ModelConfig(
+            name="mesh-paged-alias", family="dense", num_layers=2,
+            d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+            vocab_size=64, dtype="float32", remat="none",
+            energon=EnergonConfig(impl="mpmrf_block", pruning_ratio=2.0,
+                                  query_block=8, key_block=16,
+                                  decode_key_block=16, min_prune_layer=1))
+        model = LMModel(cfg)
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
+        with mesh:
+            shd.set_active_mesh(mesh)
+            step = make_serve_step(model, mesh, num_pages=8)
+            params = model.init(jax.random.PRNGKey(0))
+            cache = model.init_paged_cache(8)
+            # slot 1 aliases slot 0's prefix pages (0, 1); its own
+            # tail diverges to private pages (4, 5)
+            bt = jnp.asarray([[0, 1, 2, 3], [0, 1, 4, 5]], jnp.int32)
+            inputs = {"tokens": jnp.asarray([[3], [5]], jnp.int32),
+                      "active": jnp.asarray([True, True]),
+                      "block_table": bt}
+            logits, cache = step(
+                params, cache,
+                jax.tree.map(lambda a: a, inputs),
+                jnp.asarray([40, 36], jnp.int32))
+            shd.set_active_mesh(None)
+        print(json.dumps({
+            "shape": list(logits.shape),
+            "kv_spec": str(cache["k"].sharding.spec),
+            "finite": bool(jnp.all(jnp.isfinite(logits))),
+        }))
+        """)
+        assert result["shape"] == [2, 1, 64]
+        assert result["finite"]
+
     def test_paged_sharded_serve_step_runs(self):
         result = run_subprocess("""
         from repro.configs.base import ModelConfig

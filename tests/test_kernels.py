@@ -421,3 +421,163 @@ class TestFusedDecodePaged:
         np.testing.assert_allclose(
             np.asarray(out_k), np.asarray(out_ref), atol=1e-5
         )
+
+
+class TestFusedDecodePagedEdges:
+    """Fused paged-kernel edge cases: a slot with exactly one mapped
+    page, a live budget exceeding the mapped pages, and survivor
+    tables referencing the highest physical page index — all must stay
+    bit-identical to the unpaged fused path / XLA oracle."""
+
+    def _pool_of(self, k, v, codes, scales, tables, num_pages, bk):
+        B, H, n, d = k.shape
+        mb = n // bk
+        kp = np.zeros((H, num_pages * bk, d), np.float32)
+        vp = np.zeros_like(kp)
+        cp = np.zeros((H, num_pages * bk, d), np.int16)
+        sp = np.zeros((H, num_pages), np.float32)
+        for b in range(B):
+            for j in range(mb):
+                pg = int(tables[b, j])
+                sl = slice(pg * bk, (pg + 1) * bk)
+                src = slice(j * bk, (j + 1) * bk)
+                kp[:, sl] = np.asarray(k[b, :, src])
+                vp[:, sl] = np.asarray(v[b, :, src])
+                cp[:, sl] = np.asarray(codes[b, :, src])
+                sp[:, pg] = np.asarray(scales[b, :, j])
+        return dict(k=jnp.asarray(kp), v=jnp.asarray(vp),
+                    codes=jnp.asarray(cp), scale=jnp.asarray(sp))
+
+    def _operands(self, cl_rows, tables, num_pages, B=2, H=2, G=4,
+                  mb=4, d=16, bk=16, seed=11):
+        n = mb * bk
+        q = _mk((B, H, G, d), seed)
+        k = _mk((B, H, n, d), seed + 1)
+        v = _mk((B, H, n, d), seed + 2)
+        cl = jnp.asarray(cl_rows, jnp.int32)
+        mask = (jnp.arange(n)[None, :] < cl[:, None])[:, None, :, None]
+        k, v = k * mask, v * mask
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        pool = self._pool_of(k, v, codes, scales, tables, num_pages, bk)
+        return q, k, v, cl, codes, scales, pool, bk
+
+    def test_exactly_one_mapped_page(self):
+        """cache_length within the first block: each slot maps exactly
+        one real page; every other table entry is the compacted-table
+        filler (page 0) and must never influence the output."""
+        import math
+        from repro.core import decode_live_budget
+
+        num_pages, mb, bk = 9, 4, 16
+        # slot 0's single real page is NOT page 0; fillers alias 0
+        tables = np.array(
+            [[7, 0, 0, 0], [3, 0, 0, 0]], np.int32
+        )
+        q, k, v, cl, codes, scales, pool, bk = self._operands(
+            [5, 16], tables, num_pages
+        )
+        budget = max(1, math.ceil(mb / 2.0))
+        lb = decode_live_budget(cl, bk, 2.0)
+        assert int(jnp.max(lb)) == 1          # exactly one live block
+        ref_out = ops.fused_decode_attention(
+            q, k, v, codes, scales, cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        out = ops.fused_paged_decode_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+    def test_live_budget_exceeding_mapped_pages(self):
+        """A per-slot live budget larger than the slot's mapped pages:
+        the surplus survivor entries carry dead valid bits and the
+        masked gather must not read past the mapped region (unmapped
+        entries alias page 0 — a foreign slot's live page)."""
+        import math
+
+        num_pages, mb, bk = 9, 4, 16
+        tables = np.array(
+            [[4, 5, 0, 0], [1, 2, 6, 0]], np.int32
+        )
+        q, k, v, cl, codes, scales, pool, bk = self._operands(
+            [20, 40], tables, num_pages
+        )
+        budget = mb                            # gather width = all blocks
+        lb = jnp.asarray([mb, mb], jnp.int32)  # ≫ mapped pages (2 / 3)
+        ref_out = ops.fused_decode_attention(
+            q, k, v, codes, scales, cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        out = ops.fused_paged_decode_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+    def test_survivor_table_hits_highest_physical_page(self):
+        """A survivor entry whose block table maps the pool's *last*
+        physical page: the composed index map must address the final
+        page without clamping or wrapping."""
+        from repro.core import sparse_attention as spa
+        from repro.kernels import mpmrf_decode as dk
+
+        num_pages, mb, bk = 9, 4, 16
+        last = num_pages - 1
+        tables = np.array(
+            [[2, last, 1, 0], [last, 4, 5, 6]], np.int32
+        )
+        n = mb * bk
+        q, k, v, cl, _, _, pool, bk = self._operands(
+            [n, n], tables, num_pages
+        )
+        B, H, G, d = q.shape
+        bh = B * H
+        # survivors pick exactly the logical blocks mapped to `last`
+        idx = np.array([[1, 0], [0, 2]], np.int32)[:, None, :].repeat(
+            H, axis=1
+        )
+        val = np.ones_like(idx)
+        budget = idx.shape[-1]
+        head_off = jnp.arange(H, dtype=jnp.int32) * num_pages
+        bt_bh = (
+            jnp.asarray(tables)[:, None, :] + head_off[None, :, None]
+        ).reshape(bh, mb)
+        out_k = dk.paged_decode_gather_attention(
+            q.reshape(bh, G, d),
+            pool["k"].reshape(H * num_pages, bk, d),
+            pool["v"].reshape(H * num_pages, bk, d),
+            jnp.asarray(idx).reshape(bh, budget),
+            jnp.asarray(val).reshape(bh, budget),
+            bt_bh, jnp.repeat(cl, H),
+            key_block=bk, interpret=True,
+        ).reshape(B, H, G, d)
+        out_ref = spa.paged_decode_block_gather_attention(
+            q, pool["k"], pool["v"],
+            jnp.asarray(idx)[:, :, None, :],
+            jnp.asarray(val)[:, :, None, :],
+            jnp.asarray(tables), cl, bk,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_k), np.asarray(out_ref), atol=1e-5
+        )
+        # and end-to-end through the fused dispatcher with the same
+        # tables: bit-identical to the unpaged fused path
+        import math
+        from repro.core import decode_live_budget
+
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        budget = max(1, math.ceil(mb / 2.0))
+        lb = decode_live_budget(cl, bk, 2.0)
+        ref_out = ops.fused_decode_attention(
+            q, k, v, codes, scales, cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        out = ops.fused_paged_decode_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), cl,
+            key_block=bk, block_budget=budget, live_budget=lb,
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))

@@ -12,13 +12,31 @@ Covers the contracts the paging tentpole introduced:
     vs unpaged, deterministic pool-exhaustion preemption, eager frees;
   * filter-plane hygiene: a reused page never leaks its previous
     occupant's absmax, and the pool-wide code/scale invariant survives
-    engine churn.
+    engine churn;
+
+and the prefix-sharing extension:
+  * refcounted page sharing, the token-chunk prefix trie, cached
+    zero-refcount survival + deterministic eviction, copy-on-write;
+  * a property-based allocator fuzzer (hypothesis; skips without it)
+    driving random admit/grow/free/preempt/share interleavings against
+    the allocator invariants;
+  * shared ≡ unshared ≡ unpaged engine equivalence — bit-identical
+    greedy and stochastic streams on overlapping-prefix traces,
+    including under preemption with mid-decode CoW clones (the PR 3
+    preempted ≡ ample-pool assertion extended to shared pages).
 """
+
+import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dev dep
+    from _hypothesis_fallback import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.core import (
@@ -431,3 +449,588 @@ class TestLatencyMetrics:
         ) > 0.0
         assert "ttft p50/p95" in m.summary()
         assert "itl p50/p95" in m.summary()
+
+
+class TestPrefixSharingAllocator:
+    """Refcounted sharing, the token-chunk trie, cached survival,
+    deterministic eviction and copy-on-write — allocator level."""
+
+    def _alloc(self, num_pages=8, max_blocks=4, slots=3, ps=4):
+        return PageAllocator(PagedLayout(
+            num_pages=num_pages, page_size=ps, max_blocks=max_blocks,
+            batch_slots=slots,
+        ))
+
+    def test_share_refcounts_and_writability(self):
+        a = self._alloc()
+        assert a.alloc(0, 2) == [0, 1]
+        a.share(1, 0)
+        assert int(a.ref[0]) == 2 and int(a.ref[1]) == 1
+        assert a.pages_in_use == 2          # physical pages, not refs
+        assert not a.writable(0, 0) and not a.writable(1, 0)
+        assert a.writable(0, 1)
+        # the shared page survives its writer
+        a.free_slot(0)
+        assert int(a.ref[0]) == 1 and a.pages_in_use == 1
+        assert int(a.ref[1]) == 0 and 1 not in a._cached  # unregistered → heap
+
+    def test_register_match_and_cached_survival(self):
+        a = self._alloc()
+        tokens = list(range(10))            # 2 full chunks + ragged tail
+        a.alloc(0, 3)
+        assert a.register_prefix(0, tokens) == 2
+        assert a.match_prefix(tokens) == [0, 1]
+        assert a.match_prefix(tokens[:7]) == [0]       # longest full chunk
+        assert a.match_prefix([9] + tokens[1:]) == []  # first chunk differs
+        # free: registered pages retire to the cached set, not the heap
+        a.free_slot(0)
+        assert a.pages_in_use == 0
+        assert a.cached_pages == 2
+        assert a.free_pages == 8
+        assert a.match_prefix(tokens) == [0, 1]
+        # share revives a cached page into live use
+        a.share(1, 0)
+        assert a.pages_in_use == 1 and a.cached_pages == 1
+        assert int(a.ref[0]) == 1
+        assert not a.writable(1, 0)         # registered ⇒ immutable
+
+    def test_register_dedup_keeps_first_page(self):
+        a = self._alloc()
+        tokens = list(range(8))
+        a.alloc(0, 2)
+        a.alloc(1, 2)
+        a.register_prefix(0, tokens)
+        assert a.register_prefix(1, tokens) == 0
+        assert a.match_prefix(tokens) == [0, 1]  # slot 0's pages won
+
+    def test_eviction_is_oldest_first_and_deregisters(self):
+        a = self._alloc(num_pages=4, max_blocks=4, slots=2)
+        a.alloc(0, 2)
+        a.register_prefix(0, list(range(8)))
+        a.free_slot(0)                       # pages 0,1 cached
+        a.alloc(0, 2)                        # heap pages 2,3
+        a.register_prefix(0, list(range(100, 108)))
+        a.free_slot(0)                       # pages 2,3 cached (younger)
+        assert a.cached_pages == 4 and a.free_pages == 4
+        got = a.alloc(1, 1)                  # heap empty → evict oldest
+        assert got == [0]
+        assert a.match_prefix(list(range(8))) == []       # chain broken
+        assert a.match_prefix(list(range(100, 108))) == [2, 3]
+
+    def test_cow_swaps_in_exclusive_clone(self):
+        a = self._alloc()
+        a.alloc(0, 2)
+        a.register_prefix(0, list(range(8)))
+        a.share(1, 0)
+        a.share(1, 1)
+        assert not a.writable(1, 1)
+        pair = a.cow(1, 1)
+        assert pair == (1, 2)                # lowest free page is the clone
+        assert list(a.block_tables[1, :2]) == [0, 2]
+        assert int(a.ref[1]) == 1 and int(a.ref[2]) == 1
+        assert a.writable(1, 1)              # clone is private
+        assert a.pages_in_use == 3
+        # original stays registered and mapped by slot 0
+        assert a.match_prefix(list(range(8))) == [0, 1]
+
+    def test_cow_exhaustion_leaves_state_unchanged(self):
+        a = self._alloc(num_pages=4, max_blocks=4, slots=2)
+        a.alloc(0, 4)
+        a.share(1, 0)
+        before = a.block_tables.copy()
+        assert a.cow(1, 0) is None
+        np.testing.assert_array_equal(a.block_tables, before)
+        assert int(a.ref[0]) == 2
+
+    def test_trie_node_refills_after_eviction(self):
+        """An evicted chunk's trie node survives as structure and is
+        re-filled by the next registration of the same content."""
+        a = self._alloc(num_pages=4, max_blocks=4, slots=2)
+        tokens = list(range(8))
+        a.alloc(0, 2)
+        a.register_prefix(0, tokens)
+        a.free_slot(0)
+        a.alloc(0, 4)                        # evicts pages 0,1 (+ heap 2,3)
+        assert a.match_prefix(tokens) == []
+        a.free_slot(0)
+        a.alloc(1, 2)
+        assert a.register_prefix(1, tokens) == 2
+        assert a.match_prefix(tokens) == [int(a.block_tables[1, 0]),
+                                          int(a.block_tables[1, 1])]
+
+
+class _AllocatorFuzzDriver:
+    """Replays random admit/grow/free/preempt/share interleavings the
+    way the scheduler would, asserting the allocator invariants after
+    every op:
+
+    * refcounts equal live table references, exactly;
+    * a page mapped by >1 table (or content-registered) is writable by
+      nobody — there is never a second writer;
+    * pages_in_use + free (heap + cached) == pool size;
+    * every page handed out for writing (alloc or CoW destination) had
+      refcount 0 at handout — zero-on-reuse only ever applies at
+      refcount 0, and live data is never handed out.
+    """
+
+    def __init__(self, num_pages=10, max_blocks=5, slots=3, ps=4):
+        self.a = PageAllocator(PagedLayout(
+            num_pages=num_pages, page_size=ps, max_blocks=max_blocks,
+            batch_slots=slots,
+        ))
+        self.ps = ps
+        self.tokens = [None] * slots
+        self._fresh = itertools.count(10_000)
+
+    def _assert_handout(self, pages, ref_before):
+        for p in pages:
+            assert ref_before[p] == 0, (p, ref_before[p])
+
+    def admit(self, slot, base, length):
+        a = self.a
+        if self.tokens[slot] is not None or length <= 0:
+            return
+        length = min(length, self.a.layout.logical_rows)
+        seq = [(base + 1) * 1000 + j for j in range(length)]
+        matched = a.match_prefix(seq)
+        skip = min(len(matched) * self.ps, length - 1)
+        n_attach = skip // self.ps
+        for p in matched[:n_attach]:
+            a.share(slot, p)
+        ref_before = a.ref.copy()
+        if skip % self.ps:
+            a.share(slot, matched[n_attach])
+            pair = a.cow(slot, n_attach)
+            if pair is None:
+                a.free_slot(slot)
+                return
+            self._assert_handout([pair[1]], ref_before)
+        ref_before = a.ref.copy()
+        pages = a.ensure_capacity(slot, length)
+        if pages is None:
+            a.free_slot(slot)
+            return
+        self._assert_handout(pages, ref_before)
+        self.tokens[slot] = seq
+        a.register_prefix(slot, seq)
+
+    def grow(self, slot, n):
+        a = self.a
+        if self.tokens[slot] is None or n <= 0:
+            return
+        seq = self.tokens[slot]
+        n = min(n, self.a.layout.logical_rows - len(seq))
+        if n <= 0:
+            return
+        ref_before = a.ref.copy()
+        pages = a.ensure_capacity(slot, len(seq) + n)
+        if pages is None:
+            return
+        self._assert_handout(pages, ref_before)
+        blk = len(seq) // self.ps
+        if not a.writable(slot, blk):
+            ref_before = a.ref.copy()
+            pair = a.cow(slot, blk)
+            if pair is None:
+                return
+            self._assert_handout([pair[1]], ref_before)
+        seq.extend(next(self._fresh) for _ in range(n))
+        a.register_prefix(slot, seq)
+
+    def free(self, slot):
+        if self.tokens[slot] is not None:
+            self.a.free_slot(slot)
+            self.tokens[slot] = None
+
+    def check_invariants(self):
+        a = self.a
+        lay = a.layout
+        counts = np.zeros(lay.num_pages, np.int64)
+        for s in range(lay.batch_slots):
+            n = int(a.n_blocks[s])
+            for j in range(n):
+                counts[int(a.block_tables[s, j])] += 1
+            assert (a.block_tables[s, n:] == 0).all()
+        np.testing.assert_array_equal(counts, a.ref)
+        live = int((a.ref >= 1).sum())
+        assert a.pages_in_use == live
+        assert live + len(a._free) + a.cached_pages == lay.num_pages
+        assert not set(a._free) & set(a._cached)
+        for p in list(a._free) + list(a._cached):
+            assert int(a.ref[p]) == 0
+        for s in range(lay.batch_slots):
+            for j in range(int(a.n_blocks[s])):
+                p = int(a.block_tables[s, j])
+                if counts[p] > 1 or a.is_registered(p):
+                    assert not a.writable(s, j)
+
+    def run(self, ops):
+        for code, slot, base, amt in ops:
+            slot = slot % self.a.layout.batch_slots
+            if code == 0:
+                self.admit(slot, base % 3, amt)
+            elif code == 1:
+                self.grow(slot, amt % 7)
+            else:
+                self.free(slot)
+            self.check_invariants()
+
+
+_FUZZ_OPS = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=2),   # admit / grow / free
+        st.integers(min_value=0, max_value=2),   # slot
+        st.integers(min_value=0, max_value=2),   # shared-prefix family
+        st.integers(min_value=1, max_value=20),  # length / growth
+    ),
+    max_size=80,
+)
+
+
+class TestAllocatorFuzz:
+    def test_deterministic_interleaving_example(self):
+        """Fixed op sequence exercising attach, CoW, growth past shared
+        pages, eviction under pressure and slot reuse — the same driver
+        the hypothesis fuzz runs, so the invariants are enforced even
+        where hypothesis is not installed."""
+        ops = [
+            (0, 0, 0, 11), (0, 1, 0, 13), (1, 0, 0, 5), (2, 0, 0, 1),
+            (0, 2, 0, 18), (1, 1, 0, 6), (0, 0, 1, 9), (2, 1, 0, 1),
+            (0, 1, 1, 17), (1, 2, 0, 4), (2, 2, 0, 1), (0, 2, 2, 20),
+            (0, 0, 0, 11), (1, 0, 0, 6), (2, 0, 0, 1), (0, 0, 0, 12),
+        ]
+        d = _AllocatorFuzzDriver()
+        d.run(ops)
+        # the schedule really exercised the interesting states: live
+        # slots remain, and prefix content survived in the trie/cache
+        assert any(t is not None for t in d.tokens)
+        assert d.a.cached_pages + d.a.pages_in_use > 0
+        d.check_invariants()
+
+    @settings(max_examples=120, deadline=None)
+    @given(ops=_FUZZ_OPS)
+    def test_random_interleavings_hold_invariants(self, ops):
+        _AllocatorFuzzDriver().run(ops)
+
+    @settings(max_examples=60, deadline=None)
+    @given(ops=_FUZZ_OPS)
+    def test_random_interleavings_tiny_pool(self, ops):
+        """Same invariants under constant pool pressure (heavy eviction
+        and exhaustion paths)."""
+        _AllocatorFuzzDriver(num_pages=5, max_blocks=5, slots=3).run(ops)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing engine: shared ≡ unshared ≡ unpaged, CoW, preemption
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_trace(n_req=6, prefix_len=40, stochastic=True):
+    """Deterministic overlapping-prefix request trace: three shared
+    prefix families plus per-request suffixes (some empty, some whole
+    multiples of the page size, some ragged)."""
+    def tok(fam, j):
+        return (fam * 97 + j * 31) % 61 + 1
+
+    trace = []
+    for uid in range(n_req):
+        fam = uid % 3
+        prefix = [tok(fam, j) for j in range(prefix_len)]
+        extra = (uid * 7) % 13
+        suffix = [tok(fam + 5, uid * 17 + j) for j in range(extra)]
+        trace.append({
+            "uid": uid,
+            "prompt": prefix + suffix,
+            "max_new_tokens": 4 + (uid % 5),
+            "temperature": 0.8 if (stochastic and uid % 2) else 0.0,
+        })
+    return trace
+
+
+def _drain_trace(trace, *, mode, model_tuple, num_pages=None, slots=2,
+                 max_len=96, prefill_chunk=8):
+    """Run one trace through one engine configuration; returns
+    (streams by uid, per-request generated-token counts, engine)."""
+    cfg, model, params = model_tuple
+    kw = dict(
+        batch_slots=slots, max_len=max_len,
+        eos_token=cfg.vocab_size - 1, prefill_chunk=prefill_chunk,
+    )
+    if mode == "unpaged":
+        kw.update(paged=False)
+    else:
+        kw.update(paged=True, num_pages=num_pages,
+                  prefix_sharing=(mode == "shared"))
+    engine = ServeLoop(model, params, **kw)
+    for r in trace:
+        engine.submit(Request(**r))
+    done = engine.run_until_drained()
+    assert len(done) == len(trace)
+    streams = {r.uid: list(r.tokens_out) for r in done}
+    counts = {r.uid: len(r.tokens_out) for r in done}
+    return streams, counts, engine
+
+
+class TestPrefixSharingEngine:
+    """Sharing must be invisible to outputs: bit-identical greedy and
+    stochastic streams vs the unshared paged and unpaged engines, with
+    strictly less prefill work on overlapping-prefix traces."""
+
+    def test_shared_streams_identical_and_prefill_skipped(self):
+        mt = _model()
+        trace = _shared_prefix_trace()
+        sh, sh_counts, es = _drain_trace(trace, mode="shared",
+                                         model_tuple=mt)
+        un, un_counts, eu = _drain_trace(trace, mode="unshared",
+                                         model_tuple=mt)
+        fl, fl_counts, _ = _drain_trace(trace, mode="unpaged",
+                                        model_tuple=mt)
+        assert sh == un == fl
+        assert sh_counts == un_counts == fl_counts
+        m = es.metrics
+        assert m.prefix_hits > 0
+        assert m.prefix_hit_rate > 0.0
+        assert m.pages_shared > 0
+        assert m.prefill_tokens_skipped > 0
+        assert m.prefill_tokens == eu.metrics.prefill_tokens \
+            - m.prefill_tokens_skipped
+        assert m.prefill_dispatches < eu.metrics.prefill_dispatches
+        assert eu.metrics.prefix_lookups == 0
+        assert "prefix hit-rate" in m.summary()
+
+    @pytest.mark.parametrize("impl", ["pallas", "mpmrf_row"])
+    def test_shared_streams_identical_other_decode_paths(self, impl):
+        mt = _model(impl)
+        trace = _shared_prefix_trace(n_req=4)
+        sh, _, es = _drain_trace(trace, mode="shared", model_tuple=mt)
+        un, _, _ = _drain_trace(trace, mode="unshared", model_tuple=mt)
+        assert sh == un
+        assert es.metrics.prefill_tokens_skipped > 0
+
+    def test_identical_prompts_cow_and_identical_streams(self):
+        """Fully-identical block-aligned prompts: the sharer attaches
+        every matched page, and recomputing the last prompt token makes
+        the ragged tail chunk clone the final shared page (CoW) before
+        writing — greedy and stochastic streams still bit-identical."""
+        mt = _model()
+        prompt = [(j * 11) % 61 + 1 for j in range(48)]  # 3 full pages
+        trace = [
+            {"uid": uid, "prompt": list(prompt), "max_new_tokens": 6,
+             "temperature": 0.7 if uid % 2 else 0.0}
+            for uid in range(4)
+        ]
+        sh, _, es = _drain_trace(trace, mode="shared", model_tuple=mt)
+        un, _, _ = _drain_trace(trace, mode="unshared", model_tuple=mt)
+        assert sh == un
+        assert es.metrics.cow_clones > 0
+        assert es.metrics.prefill_tokens_skipped > 0
+
+    def test_cow_under_preemption_resumes_same_stream(self):
+        """Regression (CoW × preemption): slots whose shared pages were
+        CoW-cloned get preempted mid-decode by a tight pool; on resume
+        they re-attach the surviving prefix, re-prefill the rest, and
+        must continue the exact ample-pool stream — the PR 3 preempted
+        ≡ ample assertion extended to shared + cloned pages."""
+        mt = _model()
+        prompt = [(j * 13) % 61 + 1 for j in range(48)]  # 3 full pages
+        trace = [
+            {"uid": uid, "prompt": list(prompt), "max_new_tokens": 8,
+             "temperature": 0.6 if uid % 2 else 0.0}
+            for uid in range(6)
+        ]
+        tight, _, et = _drain_trace(trace, mode="shared", model_tuple=mt,
+                                    slots=3, num_pages=7)
+        ample, _, _ = _drain_trace(trace, mode="shared", model_tuple=mt,
+                                   slots=3, num_pages=None)
+        base, _, _ = _drain_trace(trace, mode="unshared", model_tuple=mt,
+                                  slots=3, num_pages=None)
+        assert et.metrics.preemptions > 0
+        assert et.metrics.cow_clones > 0
+        assert tight == ample == base
+        # eager refcount hygiene: a drained engine holds no live pages
+        assert et.allocator.pages_in_use == 0
+
+    def test_resumed_request_reattaches_own_pages(self):
+        """A preempted request's registered pages survive in the cached
+        set and are re-attached on resume: its re-prefill skips every
+        surviving full page, and the continuation equals the
+        never-preempted run. The prompt is unique, so every skipped
+        token is proof of *self* re-attach, not cross-request sharing."""
+        cfg, model, params = _model()
+
+        def build():
+            e = ServeLoop(model, params, batch_slots=2, max_len=96,
+                          eos_token=cfg.vocab_size - 1, prefill_chunk=8)
+            e.submit(Request(
+                uid=0,
+                prompt=[(j * 19) % 61 + 1 for j in range(33)],  # 2 pages +
+                max_new_tokens=16,                              # ragged tail
+            ))
+            return e
+
+        baseline = build()
+        baseline.run_until_drained()
+
+        e = build()
+        for _ in range(6):
+            e.tick()
+        assert e.slots[0] is not None          # mid-decode
+        e._preempt(0)                          # deterministic eviction
+        e.run_until_drained()
+        m = e.metrics
+        assert m.preemptions == 1
+        # the two full prompt pages were registered, survived the free
+        # as cached pages, and the resume attached them: 32 of the 33+
+        # re-prefill tokens never dispatched
+        assert m.prefill_tokens_skipped >= 32
+        assert m.prefix_hits >= 1
+        assert e.completed[0].tokens_out == baseline.completed[0].tokens_out
+
+    def test_pool_invariant_after_shared_churn(self):
+        """Every pool page's (codes, scale) still equals a fresh
+        per-page quantization of its float rows after sharing, CoW and
+        eviction churn (scales to jit-vs-eager division rounding)."""
+        mt = _model()
+        trace = _shared_prefix_trace()
+        _, _, e = _drain_trace(trace, mode="shared", model_tuple=mt,
+                               slots=3, num_pages=8)
+        bk = e.layout.page_size
+        codes, scales = quantize_int16_blocks(e.cache["k"], bk)
+        np.testing.assert_array_equal(
+            np.asarray(codes), np.asarray(e.cache["k_codes"])
+        )
+        np.testing.assert_allclose(
+            np.asarray(scales), np.asarray(e.cache["k_scale"]),
+            rtol=2e-7,
+        )
+
+    def test_resumed_skip_stays_on_chunk_grid(self):
+        """Regression: a resumed request whose matched pages end off
+        the prefill-chunk grid (page_size % prefill_chunk != 0) must
+        floor its skip to the grid — prefill selection pools per query
+        block, so off-grid recompute windows would rewrite different
+        K/V rows than the original run. Forced preempt, then the
+        continuation must equal the never-preempted stream."""
+        cfg, model, params = _model()
+
+        def build():
+            # C=12 does not divide bk=16: an unaligned resume skip of
+            # 16 would shift every recomputed chunk window.
+            e = ServeLoop(model, params, batch_slots=2, max_len=96,
+                          eos_token=cfg.vocab_size - 1, prefill_chunk=12)
+            e.submit(Request(
+                uid=0,
+                prompt=[(j * 29) % 61 + 1 for j in range(30)],
+                max_new_tokens=16,
+            ))
+            return e
+
+        baseline = build()
+        baseline.run_until_drained()
+
+        e = build()
+        for _ in range(8):
+            e.tick()
+        assert e.slots[0] is not None
+        e._preempt(0)
+        e.run_until_drained()
+        assert e.metrics.preemptions == 1
+        assert e.completed[0].tokens_out == baseline.completed[0].tokens_out
+
+    def test_eviction_churn_with_cow_keeps_streams(self):
+        """Regression (CoW source evicted in the same admission pass):
+        identical block-aligned prompts force a CoW clone on every hit,
+        and a minimal pool forces the allocator to evict cached pages —
+        including, at times, the just-retired clone source — while the
+        admission is still allocating. The clone must be applied before
+        any such eviction's zeroing, or streams corrupt silently."""
+        mt = _model()
+        prompt = [(j * 7) % 61 + 1 for j in range(48)]   # 3 full pages
+        trace = [
+            {"uid": uid, "prompt": list(prompt), "max_new_tokens": 6,
+             "temperature": 0.5 if uid % 3 == 1 else 0.0}
+            for uid in range(8)
+        ]
+        for pool in (6, 7):
+            sh, _, es = _drain_trace(trace, mode="shared", model_tuple=mt,
+                                     slots=2, num_pages=pool)
+            un, _, _ = _drain_trace(trace, mode="unshared", model_tuple=mt,
+                                    slots=2, num_pages=None)
+            assert sh == un, f"streams diverged at num_pages={pool}"
+            assert es.metrics.cow_clones > 0
+
+    def test_sharing_requires_paged(self):
+        cfg, model, params = _model()
+        with pytest.raises(ValueError, match="prefix_sharing"):
+            ServeLoop(model, params, batch_slots=2, max_len=64,
+                      eos_token=cfg.vocab_size - 1, paged=False,
+                      prefix_sharing=True)
+
+
+_TRACE_STRATEGY = st.lists(
+    st.tuples(
+        st.integers(min_value=0, max_value=2),    # prefix family
+        st.integers(min_value=0, max_value=14),   # suffix length
+        st.integers(min_value=1, max_value=6),    # max_new_tokens
+        st.booleans(),                            # stochastic?
+    ),
+    min_size=1, max_size=6,
+)
+
+
+class TestDifferentialEngineFuzz:
+    """Random mixed-length overlapping-prefix traces through the
+    paged-shared, paged-unshared and unpaged engines must produce
+    identical token streams and per-request token counts."""
+
+    _model_tuple = None
+
+    @classmethod
+    def _mt(cls):
+        if cls._model_tuple is None:
+            cls._model_tuple = _model()
+        return cls._model_tuple
+
+    @staticmethod
+    def _trace_from(spec):
+        trace = []
+        for uid, (fam, extra, mnt, hot) in enumerate(spec):
+            prefix = [(fam * 89 + j * 23) % 61 + 1 for j in range(24)]
+            suffix = [(uid * 41 + j * 7) % 61 + 1 for j in range(extra)]
+            trace.append({
+                "uid": uid, "prompt": prefix + suffix,
+                "max_new_tokens": mnt,
+                "temperature": 0.9 if hot else 0.0,
+            })
+        return trace
+
+    def _assert_differential(self, spec, num_pages=None):
+        trace = self._trace_from(spec)
+        mt = self._mt()
+        sh, shc, _ = _drain_trace(trace, mode="shared", model_tuple=mt,
+                                  num_pages=num_pages)
+        un, unc, _ = _drain_trace(trace, mode="unshared", model_tuple=mt,
+                                  num_pages=num_pages)
+        fl, flc, _ = _drain_trace(trace, mode="unpaged", model_tuple=mt)
+        assert sh == un == fl
+        assert shc == unc == flc
+
+    def test_differential_example(self):
+        """Fixed-spec instance of the fuzz property — runs in every
+        environment, hypothesis installed or not."""
+        self._assert_differential(
+            [(0, 5, 4, False), (0, 0, 3, True), (1, 14, 2, False),
+             (0, 5, 6, True), (2, 8, 1, False)]
+        )
+
+    def test_differential_example_tight_pool(self):
+        self._assert_differential(
+            [(1, 3, 5, True), (1, 3, 5, False), (0, 12, 4, True),
+             (1, 0, 6, False)],
+            num_pages=7,
+        )
+
+    @settings(max_examples=5, deadline=None)
+    @given(spec=_TRACE_STRATEGY)
+    def test_differential_fuzz(self, spec):
+        self._assert_differential(spec)
