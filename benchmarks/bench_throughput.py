@@ -181,6 +181,19 @@ def run_decode_bench(
     record["hlo"]["bytes_saved_per_step"] = fresh - cached
     record["hlo"]["traffic_ratio"] = cached / max(fresh, 1.0)
 
+    # crossover gate: below FILTER_CACHE_AUTO_MIN_LEN the auto threshold
+    # withholds the planes entirely, so the short-context build must not
+    # pay the resident-plane overhead the 1.01 ratio at 512 used to show
+    short_len = 512
+    short_cached = _decode_step_traffic(filter_cache=True, max_len=short_len)
+    short_fresh = _decode_step_traffic(filter_cache=False, max_len=short_len)
+    record["hlo"]["short"] = {
+        "max_len": short_len,
+        "decode_step_bytes_filter_cache": short_cached,
+        "decode_step_bytes_requantize": short_fresh,
+        "traffic_ratio": short_cached / max(short_fresh, 1.0),
+    }
+
     for label, ratio in (("rho1", 1.0), ("rho4", 4.0)):
         m = run_serving_engine(
             max_len=engine_max_len, prompt_len=prompt_len,
@@ -217,14 +230,15 @@ def write_decode_json(path: str = "BENCH_decode.json", **kw) -> dict:
 SERVING_TRACE = (8, 16, 512, 32, 128, 64, 256, 384, 24, 48, 96, 192)
 
 
-def _serve_model(pruning_ratio: float = 4.0):
+def _serve_model(pruning_ratio: float = 4.0, **energon_kw):
+    energon_kw.setdefault("impl", "mpmrf_block")
     cfg = ModelConfig(
         name="bench-serve-trace", family="dense", num_layers=2, d_model=64,
         num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
         vocab_size=256, dtype="float32", remat="none",
-        energon=EnergonConfig(impl="mpmrf_block", min_prune_layer=1,
+        energon=EnergonConfig(min_prune_layer=1,
                               pruning_ratio=pruning_ratio,
-                              decode_key_block=64),
+                              decode_key_block=64, **energon_kw),
     )
     model = LMModel(cfg)
     return cfg, model, model.init(jax.random.PRNGKey(0))
@@ -239,6 +253,7 @@ def run_serving_trace(
     prefill_chunk: int = 64,
     new_tokens: int = 16,
     lengths=SERVING_TRACE,
+    energon_kw=None,
 ):
     """Drain the mixed-length trace through one engine configuration.
 
@@ -248,7 +263,7 @@ def run_serving_trace(
     the unpaged engine on the same trace is the ``batch × max_len``
     footprint baseline.
     """
-    cfg, model, params = _serve_model()
+    cfg, model, params = _serve_model(**(energon_kw or {}))
     engine = ServeLoop(
         model, params, batch_slots=batch_slots, max_len=max_len,
         eos_token=cfg.vocab_size - 1, prefill_chunk=prefill_chunk,
@@ -441,6 +456,124 @@ def write_prefix_json(path: str = "BENCH_prefix.json", **kw) -> dict:
     return record
 
 
+# ---------------------------------------------------------------------------
+# Fused prefill: survivor-only K/V streaming vs XLA re-quantize
+# (BENCH_prefill.json)
+# ---------------------------------------------------------------------------
+
+PREFILL_CONTEXTS = (512, 1024, 2048)
+
+
+def _prefill_chunk_xla_bytes(
+    *, n_k: int, chunk: int = 64, batch: int = 2, heads: int = 4,
+    head_dim: int = 16, key_block: int = 64,
+) -> float:
+    """HLO traffic bytes for one XLA-path prefill chunk at the attention op.
+
+    Compiles ``energon_attention`` with ``impl="mpmrf_block"`` and *no*
+    filter cache — the path that re-quantizes the whole resident K cache
+    and materializes both bit planes in HBM for every chunk. Measured at
+    the attention op (not the whole model) so the MLP does not dilute
+    the number the fused kernel actually moves.
+    """
+    from repro.analysis import hlo_costs
+    from repro.core import EnergonConfig as ECfg
+    from repro.core import energon_attention
+
+    cfg = ECfg(
+        impl="mpmrf_block", pruning_ratio=4.0, min_prune_layer=0,
+        query_block=chunk, key_block=key_block, decode_key_block=key_block,
+    )
+    q = jax.ShapeDtypeStruct((batch, heads, chunk, head_dim), jnp.float32)
+    kv = jax.ShapeDtypeStruct((batch, heads, n_k, head_dim), jnp.float32)
+    qpos = jax.ShapeDtypeStruct((batch, chunk), jnp.int32)
+
+    def fn(q, k, v, q_positions):
+        return energon_attention(
+            q, k, v, cfg, q_positions=q_positions, layer_index=5,
+        )
+
+    compiled = jax.jit(fn).lower(q, kv, kv, qpos).compile()
+    return float(hlo_costs.costs_from_compiled(compiled).traffic_bytes)
+
+
+def run_prefill_bench(
+    *, contexts=PREFILL_CONTEXTS, chunk: int = 64, new_tokens: int = 8,
+) -> dict:
+    """Machine-readable fused-prefill record (BENCH_prefill.json).
+
+    Two sections. ``hlo``: per-chunk attention-op traffic at each
+    resident context length — the XLA re-quantize path costed from its
+    compiled HLO vs the fused Pallas path priced analytically from its
+    BlockSpec geometry (``analysis/kernel_traffic``; interpret-mode HLO
+    on a CPU host reflects the emulation, not the kernel's tile
+    streams, so the fused side is closed-form by construction).
+    ``engine``: end-to-end prefill tok/s on the mixed serving trace,
+    fused prefill on (``impl="pallas"``) vs off, planes resident in
+    both so only the prefill path differs.
+    """
+    import math as _math
+
+    from repro.analysis import kernel_traffic
+
+    batch, heads, head_dim, key_block = 2, 4, 16, 64
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "hlo": {"chunk": chunk, "contexts": list(contexts)},
+        "engine": {},
+    }
+    for n_k in contexts:
+        xla = _prefill_chunk_xla_bytes(
+            n_k=n_k, chunk=chunk, batch=batch, heads=heads,
+            head_dim=head_dim, key_block=key_block,
+        )
+        n_kb = n_k // key_block
+        fused = kernel_traffic.fused_prefill_traffic(
+            bh=batch * heads, n_q=chunk, n_k=n_k, d=head_dim,
+            query_block=chunk, key_block=key_block,
+            filter_block=key_block,
+            block_budget=max(1, _math.ceil(n_kb / 4.0)),
+        )
+        record["hlo"][str(n_k)] = {
+            "xla_requantize_bytes": xla,
+            "fused_bytes": float(fused.total_bytes),
+            "fused_breakdown": {
+                "quantize": fused.quantize_bytes,
+                "filter": fused.filter_bytes,
+                "select": fused.select_bytes,
+                "gather": fused.gather_bytes,
+            },
+            "bytes_saved": xla - fused.total_bytes,
+            "traffic_ratio": fused.total_bytes / max(xla, 1.0),
+        }
+
+    for label, energon_kw in (
+        ("fused", {"impl": "pallas", "filter_cache_min_len": 0}),
+        ("xla", {"impl": "mpmrf_block", "filter_cache_min_len": 0}),
+    ):
+        engine, done, wall = run_serving_trace(
+            paged=False, new_tokens=new_tokens, energon_kw=energon_kw,
+        )
+        m = engine.metrics
+        record["engine"][label] = {
+            "prefill_tok_s": m.prefill_tokens_per_sec,
+            "decode_tok_s": m.decode_tokens_per_sec,
+            "prefill_tokens": m.prefill_tokens,
+            "prefill_dispatches": m.prefill_dispatches,
+            "wall_s": wall,
+            "completed": len(done),
+        }
+    return record
+
+
+def write_prefill_json(path: str = "BENCH_prefill.json", **kw) -> dict:
+    record = run_prefill_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
+
+
 def main(emit):
     rows = run()
     for r in rows:
@@ -489,6 +622,10 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-json", default=None,
                     help="write BENCH_prefix.json (shared-system-prompt "
                          "trace, prefix sharing on vs off) to this path")
+    ap.add_argument("--prefill-json", default=None,
+                    help="write BENCH_prefill.json (fused Pallas prefill "
+                         "traffic vs XLA re-quantize + trace tok/s) to "
+                         "this path")
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -497,7 +634,7 @@ if __name__ == "__main__":
                          "(oversubscribed below slots*blocks)")
     args = ap.parse_args()
     if (args.json is None and args.serving_json is None
-            and args.prefix_json is None):
+            and args.prefix_json is None and args.prefill_json is None):
         args.json = "BENCH_decode.json"
     if args.json is not None:
         out = write_decode_json(
@@ -515,4 +652,7 @@ if __name__ == "__main__":
         out = write_prefix_json(
             args.prefix_json, new_tokens=args.new_tokens,
         )
+        print(json.dumps(out, indent=2, sort_keys=True))
+    if args.prefill_json is not None:
+        out = write_prefill_json(args.prefill_json)
         print(json.dumps(out, indent=2, sort_keys=True))

@@ -1,5 +1,6 @@
 """Analysis: HLO structural costs, analytic FLOPs, roofline assembly."""
 
 from repro.analysis.hlo_costs import compute_costs, costs_from_compiled  # noqa: F401
+from repro.analysis.kernel_traffic import PrefillTraffic, fused_prefill_traffic  # noqa: F401
 from repro.analysis.flops import model_flops, param_counts  # noqa: F401
 from repro.analysis.roofline import RooflineReport, build_report  # noqa: F401

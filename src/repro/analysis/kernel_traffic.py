@@ -1,0 +1,122 @@
+"""Analytic HBM traffic for the fused Pallas prefill kernels.
+
+``hlo_costs`` measures the XLA path from compiled HLO, but the fused
+Pallas path cannot be costed the same way on a CPU host: interpret-mode
+HLO reflects the *emulation* (dense gathers, per-element loops), not the
+tile streams the kernel issues on an accelerator, and non-interpret
+Pallas does not lower on CPU at all.  Instead we price the fused path
+directly from its BlockSpec geometry, which is exact for a Pallas grid:
+every grid step fetches precisely the tiles its index maps name, so the
+byte count is a closed-form function of the shapes.
+
+Conventions (conservative — they overcount the fused side):
+
+* A tile whose index map varies along the innermost grid axis is
+  re-fetched at every step of that axis (no residency credit).
+* A tile whose index map is constant along inner axes is fetched once
+  per change of the outer axes (exactly how Pallas revisits blocks).
+* Host-side glue that runs under XLA (query quantisation, the shared
+  exact-budget tier select on the pooled planes) is priced at full
+  operand + output bytes, mirroring ``hlo_costs``'s fusion accounting.
+
+The model matches the kernels in ``repro.kernels.mpmrf_prefill`` and the
+wrappers in ``repro.kernels.ops``; if their BlockSpecs change, update
+this file in the same commit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+_F32 = 4
+_I32 = 4
+_I16 = 2
+
+# Plane-shaped passes in the shared tier-select glue (Eq. 3 round
+# scores -> masks -> per-tier top-k -> survivor compaction).  Counted
+# as full read+write sweeps over the [bh, n_qb, n_kb] score planes.
+_SELECT_PLANE_SWEEPS = 8
+
+
+@dataclass(frozen=True)
+class PrefillTraffic:
+    """Byte breakdown of one fused prefill chunk (filter + select + gather)."""
+
+    quantize_bytes: int
+    filter_bytes: int
+    select_bytes: int
+    gather_bytes: int
+
+    @property
+    def total_bytes(self) -> int:
+        return (self.quantize_bytes + self.filter_bytes
+                + self.select_bytes + self.gather_bytes)
+
+
+def fused_prefill_traffic(
+    *,
+    bh: int,
+    n_q: int,
+    n_k: int,
+    d: int,
+    query_block: int,
+    key_block: int,
+    filter_block: int,
+    block_budget: int,
+) -> PrefillTraffic:
+    """Analytic HBM bytes for one fused prefill chunk.
+
+    Args:
+      bh: folded batch*heads rows.
+      n_q: chunk query rows, divisible by ``query_block``.
+      n_k: resident key rows, divisible by ``key_block``.
+      d: head dim.
+      query_block / key_block: kernel tile sizes.
+      filter_block: quantisation block of the resident ``k_codes``.
+      block_budget: survivor key blocks kept per query block.
+    """
+    if n_q % query_block or n_k % key_block or n_k % filter_block:
+        raise ValueError("tile sizes must divide chunk/context lengths")
+    n_qb = n_q // query_block
+    n_kb = n_k // key_block
+    budget = min(block_budget, n_kb)
+
+    q_bytes = bh * n_q * d * _F32
+    plane_bytes = bh * n_qb * n_kb * _I32
+
+    # --- host-side query quantisation (XLA): read q, write int32 plane
+    # + per-row scale; the resident k planes are *not* touched here —
+    # that is the whole point of the fused path.
+    quantize = q_bytes + (bh * n_q * d * _I32) + (bh * n_q * _F32)
+    # ks_row expansion: per-block scales broadcast to per-row.
+    quantize += (bh * (n_k // filter_block) * _F32) + (bh * n_k * _F32)
+
+    # --- filter kernel, grid (bh, n_qb, n_kb), j innermost.
+    # q plane / q scale / q positions index as (b, i, 0): constant over j.
+    filt = (bh * n_q * d * _I32) + (bh * n_q * _F32) + (bh * n_q * _I32)
+    # k_codes tile indexes as (b, j, 0): streamed anew for every (i, j).
+    filt += bh * n_qb * n_k * d * _I16
+    # per-row k scales, same revisit factor.
+    filt += bh * n_qb * n_k * _F32
+    # two pooled score planes out, one row per (b, i).
+    filt += 2 * plane_bytes
+
+    # --- shared exact-budget tier select on the pooled planes (XLA).
+    select = _SELECT_PLANE_SWEEPS * plane_bytes
+    # survivor indices + validity out.
+    select += 2 * bh * n_qb * budget * _I32
+
+    # --- gather kernel, grid (bh, n_qb, budget), s innermost.
+    # q / q_positions / out index as (b, i, 0): constant over s.
+    gather = 2 * q_bytes + bh * n_q * _I32
+    # k and v survivor tiles: one (key_block, d) block per (b, i, s).
+    gather += 2 * bh * n_qb * budget * key_block * d * _F32
+    # scalar-prefetched survivor table + validity.
+    gather += 2 * bh * n_qb * budget * _I32
+
+    return PrefillTraffic(
+        quantize_bytes=quantize,
+        filter_bytes=filt,
+        select_bytes=select,
+        gather_bytes=gather,
+    )

@@ -1,11 +1,13 @@
 """Energon core: dynamic sparse attention via MP-MRF (the paper's contribution)."""
 
 from repro.core.energon_attention import (  # noqa: F401
+    FILTER_CACHE_AUTO_MIN_LEN,
     EnergonConfig,
     decode_live_budget,
     energon_attention,
     energon_decode_attention,
     energon_paged_decode_attention,
+    energon_paged_prefill_attention,
 )
 from repro.core.filtering import (  # noqa: F401
     FilterResult,
@@ -14,6 +16,7 @@ from repro.core.filtering import (  # noqa: F401
     decode_block_tier_select,
     eq3_threshold,
     mpmrf_block_select,
+    prefill_block_select_from_planes,
     mpmrf_decode_block_select,
     mpmrf_paged_block_select,
     mpmrf_row_select,

@@ -28,6 +28,13 @@ import jax.numpy as jnp
 from repro.core import filtering as flt
 from repro.core import sparse_attention as spa
 
+# Measured crossover of the resident filter cache (BENCH_decode.json,
+# CPU host): below ~1k cache rows the plane maintenance + state traffic
+# costs more than the re-quantize it saves (traffic ratio 1.01 at
+# max_len 512, < 1 from 1024 up). Contexts shorter than this default
+# run with fresh quantization unless the config pins the gate open.
+FILTER_CACHE_AUTO_MIN_LEN = 1024
+
 
 @dataclasses.dataclass(frozen=True)
 class EnergonConfig:
@@ -54,6 +61,13 @@ class EnergonConfig:
     # instead of re-quantizing the whole padded cache (§IV-B premise:
     # filtering must stay cheap relative to attention).
     filter_cache: bool = True
+    # Context-length crossover gate for the resident filter cache:
+    # caches shorter than this never allocate (or maintain) the
+    # quantized planes and fall back to fresh per-block quantization —
+    # at short context the plane upkeep costs more HBM traffic than the
+    # re-quantize it avoids. ``None`` → the auto-measured default
+    # (``FILTER_CACHE_AUTO_MIN_LEN``); ``0`` → always engage.
+    filter_cache_min_len: Optional[int] = None
     keep_first: bool = True
     keep_diagonal: bool = True
     reuse_partial: bool = True
@@ -74,6 +88,24 @@ class EnergonConfig:
     def uses_filter_cache(self) -> bool:
         """True when decode caches should carry quantized filter planes."""
         return self.filter_cache and self.uses_decode_block
+
+    def filter_cache_engages(self, max_len: int) -> bool:
+        """Crossover gate: do resident planes pay off at ``max_len``?
+
+        Cache initializers consult this with their (rounded) context
+        capacity — below the threshold the planes are simply never
+        allocated, so every consumer (decode filter, fused kernels,
+        prefill selection) falls back to fresh quantization without a
+        second dispatch-level switch. Selection is bit-identical either
+        way: fresh quantization at the same per-block granularity obeys
+        the same invariant the resident planes are maintained under.
+        """
+        if not self.uses_filter_cache:
+            return False
+        threshold = self.filter_cache_min_len
+        if threshold is None:
+            threshold = FILTER_CACHE_AUTO_MIN_LEN
+        return max_len >= threshold
 
     def mpmrf(self, granularity: str, n_kb: Optional[int] = None) -> flt.MPMRFConfig:
         budget = None
@@ -106,6 +138,7 @@ def energon_attention(
     q_positions: Optional[jax.Array] = None,
     kv_length: Optional[jax.Array] = None,
     scale: Optional[float] = None,
+    filter_cache: Optional[Dict[str, jax.Array]] = None,
 ) -> jax.Array:
     """Multi-head attention with Energon dynamic sparse attention.
 
@@ -123,22 +156,19 @@ def energon_attention(
         Overrides ``q_offset`` for masking.
       kv_length: optional ``[B]`` true cache lengths for padded caches.
       scale: score scale; default 1/√d.
+      filter_cache: optional resident quantized filter planes of ``k``
+        (DESIGN.md §3 layout: ``{"codes": int16 [..., n_k, d], "scale":
+        f32 [..., n_k // cfg.decode_key_block]}``). When present, the
+        block-granular selection paths read them instead of
+        re-quantizing ``k`` — and the ``pallas`` chunked-prefill path
+        (``q_positions`` set) engages the fused prefill kernels, which
+        derive both rounds' bit planes from the resident codes
+        in-register and stream only survivor K/V blocks.
 
     Returns:
       ``[B, H, n_q, d]`` attention output (dtype of v).
     """
     n_q, n_k = q.shape[-2], k.shape[-2]
-    # Above this size, materialized [n_q, n_k] scores/masks do not fit
-    # HBM: switch to the scan-over-query-blocks (flash-style) paths.
-    # The q_positions (serve-prefill) form has no chunked variant, so
-    # enforce the guard instead of silently materializing past it.
-    if q_positions is not None and n_q * n_k > cfg.chunk_threshold:
-        raise ValueError(
-            f"q_positions attention materializes [{n_q}, {n_k}] masks "
-            f"past chunk_threshold={cfg.chunk_threshold}; lower the "
-            "prefill chunk (or raise chunk_threshold)"
-        )
-    chunked = n_q * n_k > cfg.chunk_threshold
 
     impl = cfg.impl
     if layer_index < cfg.min_prune_layer and impl != "dense":
@@ -150,6 +180,51 @@ def energon_attention(
             impl = "mpmrf_row"
         elif n_k // cfg.key_block <= 1:
             impl = "mpmrf_row"
+
+    # Fused Pallas prefill: resident planes + per-row positions. This
+    # short-circuits *before* the [n_q, n_k] mask/score materialization
+    # (causality, sentinels and pooling all happen on-chip per tile),
+    # which is also why the chunk_threshold guard below does not apply
+    # to it.
+    if (
+        impl == "pallas" and q_positions is not None and causal
+        and _fused_prefill_engaged(
+            cfg, filter_cache is not None, window, kv_length, n_k
+        )
+    ):
+        from repro.kernels import ops as kops
+
+        n_kb = n_k // cfg.key_block
+        return kops.fused_prefill_attention(
+            q, k, v,
+            filter_cache["codes"], filter_cache["scale"],
+            q_positions,
+            round_bits=cfg.round_bits,
+            alphas=cfg.alphas,
+            query_block=cfg.query_block,
+            key_block=cfg.key_block,
+            filter_block=cfg.decode_key_block,
+            block_budget=max(1, math.ceil(n_kb / cfg.pruning_ratio)),
+            keep_all=cfg.pruning_ratio <= 1.0,
+            keep_first=cfg.keep_first,
+            keep_diagonal=cfg.keep_diagonal,
+            diag_blocks=_prefill_diag_blocks(
+                q_positions, cfg.query_block, cfg.key_block, n_k
+            ),
+            scale=scale,
+        )
+
+    # Above this size, materialized [n_q, n_k] scores/masks do not fit
+    # HBM: switch to the scan-over-query-blocks (flash-style) paths.
+    # The q_positions (serve-prefill) form has no chunked variant, so
+    # enforce the guard instead of silently materializing past it.
+    if q_positions is not None and n_q * n_k > cfg.chunk_threshold:
+        raise ValueError(
+            f"q_positions attention materializes [{n_q}, {n_k}] masks "
+            f"past chunk_threshold={cfg.chunk_threshold}; lower the "
+            "prefill chunk (or raise chunk_threshold)"
+        )
+    chunked = n_q * n_k > cfg.chunk_threshold
 
     if chunked:
         from repro.core import chunked_attention as chk
@@ -209,13 +284,28 @@ def energon_attention(
     # local block is position//key_block, not the offset-0 default.
     diag_blocks = None
     if q_positions is not None and impl in ("mpmrf_block", "pallas"):
-        eff = jnp.where(q_positions < n_k, q_positions, -1)  # drop sentinels
-        qb_pos = jnp.max(
-            eff.reshape(eff.shape[0], n_q // cfg.query_block,
-                        cfg.query_block),
-            axis=-1,
+        diag_blocks = _prefill_diag_blocks(
+            q_positions, cfg.query_block, cfg.key_block, n_k
         )
-        diag_blocks = jnp.clip(qb_pos, 0, n_k - 1) // cfg.key_block
+
+    # Resident planes (when the caller carries them) replace the fresh
+    # per-head quantization in *every* block-granular selection — the
+    # XLA paths must consume the same operands the fused kernels read,
+    # or "fused on" and "fused off" would select from differently
+    # quantized scores and the bit-exactness contract would break.
+    k_quant = None
+    if (
+        filter_cache is not None
+        and impl in ("mpmrf_block", "pallas")
+        and cfg.decode_key_block > 0
+        and n_k % cfg.decode_key_block == 0
+    ):
+        from repro.core import quantization as qlib
+
+        k_quant = qlib.blockwise_quantized_view(
+            filter_cache["codes"], filter_cache["scale"],
+            cfg.decode_key_block,
+        )
 
     if impl == "dense":
         return spa.dense_attention(q, k, v, valid, scale)
@@ -227,7 +317,8 @@ def energon_attention(
     if impl == "mpmrf_block":
         n_kb = n_k // cfg.key_block
         res = flt.mpmrf_block_select(
-            q, k, cfg.mpmrf("block", n_kb), valid, diag_blocks=diag_blocks
+            q, k, cfg.mpmrf("block", n_kb), valid, diag_blocks=diag_blocks,
+            k_quant=k_quant,
         )
         return spa.block_gather_attention(
             q, k, v, res.block_indices, valid,
@@ -238,13 +329,14 @@ def energon_attention(
     if impl == "pallas":
         # Imported lazily: pallas lowering only exists for the TPU target;
         # tests exercise it via interpret mode. Window / padded-cache /
-        # per-row-position masks are not in the kernel contract — fall
-        # back to XLA block.
+        # per-row-position masks (when the fused prefill kernel did not
+        # engage above) are not in the kernel contract — fall back to
+        # XLA block.
         if window is not None or kv_length is not None or q_positions is not None:
             n_kb = n_k // cfg.key_block
             res = flt.mpmrf_block_select(
                 q, k, cfg.mpmrf("block", n_kb), valid,
-                diag_blocks=diag_blocks,
+                diag_blocks=diag_blocks, k_quant=k_quant,
             )
             return spa.block_gather_attention(
                 q, k, v, res.block_indices, valid,
@@ -357,6 +449,172 @@ def _fused_decode_engaged(
         and window is None
         and len(cfg.round_bits) == 2
         and cfg.reuse_partial
+    )
+
+
+def _prefill_diag_blocks(
+    q_positions: jax.Array, query_block: int, key_block: int, n_k: int
+) -> jax.Array:
+    """keep_diagonal target per query block at absolute positions.
+
+    ``[B, n_q]`` per-row positions → ``[B, n_qb]`` local key-block index
+    (position // key_block of the block's highest real row). Sentinel
+    rows (≥ n_k) are dropped from the max so a ragged tail block aims
+    at its last *real* row's diagonal. One derivation shared by the XLA
+    selection, the fused prefill dispatch and the paged prefill entry —
+    the bit-exactness contract needs them in lockstep.
+    """
+    n_q = q_positions.shape[-1]
+    eff = jnp.where(q_positions < n_k, q_positions, -1)  # drop sentinels
+    qb_pos = jnp.max(
+        eff.reshape(eff.shape[0], n_q // query_block, query_block),
+        axis=-1,
+    )
+    return jnp.clip(qb_pos, 0, n_k - 1) // key_block
+
+
+def _fused_prefill_engaged(
+    cfg: EnergonConfig,
+    filter_planes_resident: bool,
+    window: Optional[int],
+    kv_length: Optional[jax.Array],
+    n_k: int,
+) -> bool:
+    """Engagement predicate of the fused Pallas prefill kernels.
+
+    Mirrors :func:`_fused_decode_engaged` (resident planes, no window,
+    2 rounds, Fig. 7 reuse) plus the prefill-only constraints: no
+    padded-cache ``kv_length`` masking (the kernel masks by per-row
+    positions alone) and a cache length divisible into the resident
+    plane blocks the codes are scaled by. Callers additionally require
+    ``q_positions`` + ``causal`` — the kernel's on-chip mask is exactly
+    ``key_pos ≤ query_pos < n_k``.
+    """
+    return (
+        cfg.impl == "pallas"
+        and filter_planes_resident
+        and window is None
+        and kv_length is None
+        and len(cfg.round_bits) == 2
+        and cfg.reuse_partial
+        and cfg.decode_key_block > 0
+        and n_k % cfg.decode_key_block == 0
+    )
+
+
+def energon_paged_prefill_attention(
+    q: jax.Array,
+    cache: Dict[str, jax.Array],
+    block_table: jax.Array,
+    q_positions: jax.Array,
+    cfg: EnergonConfig,
+    *,
+    layer_index: int = 10**9,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Chunked-prefill attention straight against the page pool.
+
+    The paged counterpart of the ``q_positions`` form of
+    :func:`energon_attention`. When the fused prefill kernels engage
+    (resident planes, page size == key tile, block-divisible shapes),
+    the chunk attends the pool *in place*: the filter kernel scores the
+    per-page codes through the block table and the gather kernel's
+    BlockSpec index maps compose survivor table ∘ block table, so
+    unselected and unmapped pages never leave HBM. Otherwise the
+    per-slot logical K/V views are materialized transiently (zeroed
+    past each slot's written extent, exactly as before) and fed to
+    ``energon_attention`` — with the *gathered* resident planes as its
+    filter operands, so fused and fallback selection stay bit-identical
+    on the same pool contents.
+
+    Args:
+      q: ``[B, KV, n_q, d]`` folded GQA query rows.
+      cache: one layer's pool slice (``k``/``v`` ``[KV, pool_rows, d]``
+        + ``k_codes``/``k_scale`` when the filter cache is resident).
+      block_table: int32 ``[B, max_blocks]``.
+      q_positions: int32 ``[B, n_q]`` absolute logical positions
+        (sentinels ≥ logical rows are inert).
+    """
+    from repro.runtime import paged_cache as pgc
+
+    ps = cfg.decode_key_block
+    if ps <= 0:
+        raise ValueError("paged prefill needs decode_key_block > 0")
+    mb = block_table.shape[-1]
+    n_k = mb * ps
+    n_q = q.shape[-2]
+
+    fused = (
+        layer_index >= cfg.min_prune_layer
+        and _fused_prefill_engaged(cfg, "k_codes" in cache, window,
+                                   None, n_k)
+        # the paged kernels address one page per key tile: the survivor
+        # ∘ block-table index composition only lines up when the two
+        # granularities coincide
+        and cfg.key_block == ps
+        and n_q % cfg.query_block == 0
+        and n_k // cfg.key_block > 1
+    )
+    if fused:
+        from repro.kernels import ops as kops
+
+        n_kb = n_k // cfg.key_block
+        return kops.fused_paged_prefill_attention(
+            q, cache["k"], cache["v"],
+            cache["k_codes"], cache["k_scale"],
+            block_table, q_positions,
+            round_bits=cfg.round_bits,
+            alphas=cfg.alphas,
+            query_block=cfg.query_block,
+            key_block=cfg.key_block,
+            block_budget=max(1, math.ceil(n_kb / cfg.pruning_ratio)),
+            keep_all=cfg.pruning_ratio <= 1.0,
+            keep_first=cfg.keep_first,
+            keep_diagonal=cfg.keep_diagonal,
+            diag_blocks=_prefill_diag_blocks(
+                q_positions, cfg.query_block, cfg.key_block, n_k
+            ),
+            scale=scale,
+        )
+
+    k_log = pgc.gather_logical_rows(cache["k"], block_table, ps)
+    v_log = pgc.gather_logical_rows(cache["v"], block_table, ps)
+    # Zero the view past each slot's written extent: unmapped logical
+    # blocks alias page 0 (another occupant's rows), and the per-head
+    # absmax of row/block selection would otherwise quantize against
+    # them. The unpaged cache holds zeros there — zeroing makes the
+    # views (and hence prefill logits) bit-identical. Positions are
+    # contiguous per slot (sentinels ≥ logical rows), so max+1 bounds
+    # every row written so far.
+    extent = jnp.max(
+        jnp.where(q_positions < n_k, q_positions + 1, 0), axis=1
+    )                                        # [B]
+    row_ok = (
+        jnp.arange(n_k)[None, :] < extent[:, None]
+    )[:, None, :, None]
+    k_log = k_log * row_ok
+    v_log = v_log * row_ok
+    filter_cache = None
+    if "k_codes" in cache:
+        # The gathered planes are the pool planes verbatim (the gather
+        # is exact), so fallback selection reads the same codes/scales
+        # the fused kernels stream through the block table. They are
+        # deliberately *not* zeroed past the extent: the fused kernel
+        # reads raw pages too, and blocks past the extent are wholly
+        # masked before pooling either way.
+        filter_cache = {
+            "codes": pgc.gather_logical_rows(
+                cache["k_codes"], block_table, ps
+            ),
+            "scale": pgc.gather_logical_scales(
+                cache["k_scale"], block_table
+            ),
+        }
+    return energon_attention(
+        q, k_log, v_log, cfg,
+        causal=True, window=window, layer_index=layer_index,
+        q_positions=q_positions, scale=scale, filter_cache=filter_cache,
     )
 
 

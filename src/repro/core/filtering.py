@@ -254,50 +254,40 @@ def pool_block_scores(
     return blk, blk_valid
 
 
-def mpmrf_block_select(
-    q: jax.Array,
-    k: jax.Array,
+def prefill_block_select_from_planes(
+    round_scores: Sequence[jax.Array],
+    blk_valid: jax.Array,
     cfg: MPMRFConfig,
-    valid: Optional[jax.Array] = None,
-    diag_blocks: Optional[jax.Array] = None,
+    diag_mask: Optional[jax.Array] = None,
 ) -> FilterResult:
-    """Block-granular MP-MRF (TPU adaptation, DESIGN.md §2).
+    """Prefill block selection rule on pre-pooled block score planes.
 
-    Filtering rounds run at token level on the integer planes (same cost
-    as one full-width int matmul thanks to result reuse), then scores are
-    pooled to (query-block × key-block) granularity and selection happens
-    per block — either by Eq. 3 threshold (mask) or by a static top-B
-    budget (index table for the block-sparse kernels).
+    The single implementation of the prefill selection contract, shared
+    by the XLA path (:func:`mpmrf_block_select`, which pools token scores
+    with :func:`pool_block_scores`) and the fused Pallas prefill kernel
+    (which pools Eq. 3 scores per query block on-chip and hands the
+    block-max planes here). Both callers therefore make **bit-identical**
+    selections — the contract prefix sharing's chunk-grid skip logic
+    depends on (DESIGN.md §4).
 
-    ``diag_blocks`` (optional ``[B, n_qb]`` int32) overrides the
-    keep_diagonal target per query block — callers whose query rows sit
-    at absolute offsets (chunked prefill via ``q_positions``) pass the
-    key block holding each query block's newest position; the default
-    ``(qb·bq)//bk`` mapping is only correct for offset-0 full sequences.
+    Per round: Eq. 3 threshold at *block* granularity with the running
+    keep mask, then the keep_first / diagonal safeguards, then static
+    top-B selection on the final-round scores restricted to survivors.
+
+    Args:
+      round_scores: R block score planes ``[..., n_qb, n_kb]`` (real
+        units; invalid entries must already be NEG_INF-pooled).
+      blk_valid: bool ``[..., n_qb, n_kb]`` a-priori block validity.
+      cfg: filter config.
+      diag_mask: optional bool mask broadcastable to ``[..., n_qb,
+        n_kb]`` marking each query block's diagonal key block; defaults
+        to the offset-0 ``(qb·bq)//bk`` mapping.
     """
-    bq, bk = cfg.query_block, cfg.key_block
-    n_q, n_k = q.shape[-2], k.shape[-2]
-    if n_q % bq or n_k % bk:
-        raise ValueError(
-            f"sequence ({n_q},{n_k}) not divisible by blocks ({bq},{bk})"
-        )
-    n_qb, n_kb = n_q // bq, n_k // bk
-    q16 = qlib.quantize_int16(q, axis=-1)
-    k16 = qlib.quantize_int16(k, axis=(-2, -1))
-    if valid is None:
-        valid = jnp.ones(q.shape[:-1] + (n_k,), dtype=bool)
-
-    # Single fused multi-round pass on token scores (reuse makes the total
-    # integer work equal one hi-bit matmul), then block pooling. Threshold
-    # rounds are applied at *block* granularity so round semantics match
-    # what the Pallas kernel does on-chip.
+    n_qb, n_kb = round_scores[-1].shape[-2:]
     blk_keep = None
     blk_scores = None
     per_round = []
-    for alpha, tok_scores in zip(
-        cfg.alphas, _round_score_planes(q16, k16, cfg)
-    ):
-        blk_scores, blk_valid = pool_block_scores(tok_scores, bq, bk, valid)
+    for alpha, blk_scores in zip(cfg.alphas, round_scores):
         if blk_keep is None:
             blk_keep = blk_valid
         if not cfg.keep_all:
@@ -309,15 +299,13 @@ def mpmrf_block_select(
     if cfg.keep_first:
         blk_keep = blk_keep.at[..., 0].set(blk_valid[..., 0])
     if cfg.keep_diagonal:
-        if diag_blocks is None:
+        if diag_mask is None:
             qb_ids = jnp.arange(n_qb)
             # diagonal key block for query block i under equal token counts
-            diag = jnp.minimum((qb_ids * bq) // bk, n_kb - 1)
+            diag = jnp.minimum(
+                (qb_ids * cfg.query_block) // cfg.key_block, n_kb - 1
+            )
             diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
-        else:
-            diag_mask = jax.nn.one_hot(
-                jnp.clip(diag_blocks, 0, n_kb - 1), n_kb, dtype=bool
-            )[:, None]  # [B, 1, n_qb, n_kb] — broadcast over heads
         blk_keep = jnp.logical_or(blk_keep, jnp.logical_and(diag_mask, blk_valid))
 
     denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
@@ -346,6 +334,67 @@ def mpmrf_block_select(
         survivor_fraction=frac,
         scores=blk_scores,
         block_valid=block_valid,
+    )
+
+
+def mpmrf_block_select(
+    q: jax.Array,
+    k: jax.Array,
+    cfg: MPMRFConfig,
+    valid: Optional[jax.Array] = None,
+    diag_blocks: Optional[jax.Array] = None,
+    k_quant: Optional[qlib.QuantizedTensor] = None,
+) -> FilterResult:
+    """Block-granular MP-MRF (TPU adaptation, DESIGN.md §2).
+
+    Filtering rounds run at token level on the integer planes (same cost
+    as one full-width int matmul thanks to result reuse), then scores are
+    pooled to (query-block × key-block) granularity and selection happens
+    per block — either by Eq. 3 threshold (mask) or by a static top-B
+    budget (index table for the block-sparse kernels).
+
+    ``diag_blocks`` (optional ``[B, n_qb]`` int32) overrides the
+    keep_diagonal target per query block — callers whose query rows sit
+    at absolute offsets (chunked prefill via ``q_positions``) pass the
+    key block holding each query block's newest position; the default
+    ``(qb·bq)//bk`` mapping is only correct for offset-0 full sequences.
+
+    ``k_quant`` (optional resident quantized view, per-``decode_key_block``
+    scales via :func:`repro.core.quantization.blockwise_quantized_view`)
+    replaces the fresh per-head quantization — serving prefill passes the
+    cache's resident ``k_codes``/``k_scale`` planes so the XLA path scores
+    the *same* integer operands as the fused Pallas prefill kernel and
+    selection stays bit-identical between the two.
+    """
+    bq, bk = cfg.query_block, cfg.key_block
+    n_q, n_k = q.shape[-2], k.shape[-2]
+    if n_q % bq or n_k % bk:
+        raise ValueError(
+            f"sequence ({n_q},{n_k}) not divisible by blocks ({bq},{bk})"
+        )
+    n_qb, n_kb = n_q // bq, n_k // bk
+    q16 = qlib.quantize_int16(q, axis=-1)
+    k16 = qlib.quantize_int16(k, axis=(-2, -1)) if k_quant is None else k_quant
+    if valid is None:
+        valid = jnp.ones(q.shape[:-1] + (n_k,), dtype=bool)
+
+    # Single fused multi-round pass on token scores (reuse makes the total
+    # integer work equal one hi-bit matmul), then block pooling. Threshold
+    # rounds are applied at *block* granularity so round semantics match
+    # what the Pallas kernel does on-chip.
+    round_scores = []
+    blk_valid = None
+    for tok_scores in _round_score_planes(q16, k16, cfg):
+        blk_scores, blk_valid = pool_block_scores(tok_scores, bq, bk, valid)
+        round_scores.append(blk_scores)
+
+    diag_mask = None
+    if cfg.keep_diagonal and diag_blocks is not None:
+        diag_mask = jax.nn.one_hot(
+            jnp.clip(diag_blocks, 0, n_kb - 1), n_kb, dtype=bool
+        )[:, None]  # [B, 1, n_qb, n_kb] — broadcast over heads
+    return prefill_block_select_from_planes(
+        round_scores, blk_valid, cfg, diag_mask=diag_mask
     )
 
 

@@ -27,6 +27,7 @@ from repro.kernels import block_sparse_attention as bsa_kernel
 from repro.kernels import flash_attention as fa_kernel
 from repro.kernels import mpmrf_decode as dec_kernel
 from repro.kernels import mpmrf_filter as filt_kernel
+from repro.kernels import mpmrf_prefill as pre_kernel
 
 NEG_INF = -1e30
 
@@ -371,6 +372,249 @@ def fused_paged_decode_attention(
         key_block=bk, scale=scale, interpret=interpret,
     )
     return out.reshape(batch, heads, g, d)
+
+
+def _fused_prefill_select(
+    s0: jax.Array,
+    s1: jax.Array,
+    *,
+    round_bits: Tuple[int, ...],
+    alphas: Tuple[float, ...],
+    query_block: int,
+    key_block: int,
+    block_budget: int,
+    keep_all: bool,
+    keep_first: bool,
+    keep_diagonal: bool,
+    diag_blocks: Optional[jax.Array],
+    heads: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Eq. 3 rounds + safeguards + top-B on the kernel's block-max
+    ``[bh, n_qb, n_kb]`` planes — through the one prefill selection
+    helper the XLA path also uses
+    (:func:`repro.core.filtering.prefill_block_select_from_planes`),
+    which is what keeps fused and unfused prefill selection
+    bit-identical (the prefix-sharing chunk-grid contract)."""
+    n_kb = s0.shape[-1]
+    mcfg = flt.MPMRFConfig(
+        round_bits=tuple(round_bits),
+        alphas=tuple(alphas),
+        granularity="block",
+        query_block=query_block,
+        key_block=key_block,
+        block_budget=block_budget,
+        keep_first=keep_first,
+        keep_diagonal=keep_diagonal,
+        reuse_partial=True,
+        keep_all=keep_all,
+    )
+    diag_mask = None
+    if keep_diagonal and diag_blocks is not None:
+        # [B, n_qb] → [bh, n_qb]: every head of a batch row shares the
+        # same diagonal targets (batch-major bh fold).
+        db = jnp.repeat(diag_blocks.astype(jnp.int32), heads, axis=0)
+        diag_mask = jax.nn.one_hot(
+            jnp.clip(db, 0, n_kb - 1), n_kb, dtype=bool
+        )
+    res = flt.prefill_block_select_from_planes(
+        [s0, s1], s0 > NEG_INF / 2, mcfg, diag_mask=diag_mask
+    )
+    return res.block_indices, res.block_valid
+
+
+def fused_prefill_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    k_codes: jax.Array,
+    k_block_scale: jax.Array,
+    q_positions: jax.Array,
+    *,
+    round_bits: Tuple[int, ...] = (2, 4),
+    alphas: Tuple[float, ...] = (0.0, 0.0),
+    query_block: int = 128,
+    key_block: int = 128,
+    filter_block: int = 64,
+    block_budget: int = 8,
+    keep_all: bool = False,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    diag_blocks: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Pallas prefill over the resident filter cache.
+
+    The prefill twin of :func:`fused_decode_attention`: the filter
+    kernel derives both rounds' bit planes in-register from the cached
+    int16 codes (no plane tensors in HBM, no re-quantization of the
+    float cache) and pools Eq. 3 scores per query block on-chip; the
+    shared selection helper picks top-B survivor key blocks per query
+    block on the tiny ``[bh, n_qb, n_kb]`` planes in XLA; the gather
+    kernel streams only the survivor K/V blocks via the scalar-prefetch
+    survivor table.
+
+    Args:
+      q: ``[B, H, n_q, d]`` folded chunk rows (H = KV heads).
+      k_cache, v_cache: ``[B, H, n_k, d]`` padded caches.
+      k_codes: int16 ``[B, H, n_k, d]`` resident filter codes.
+      k_block_scale: f32 ``[B, H, n_k // filter_block]`` resident
+        per-block scales (``filter_block`` = the decode key block the
+        cache quantizes at — prefill key tiles may span several).
+      q_positions: int32 ``[B, n_q]`` absolute position per query row
+        (sentinels ≥ n_k).
+      diag_blocks: optional int32 ``[B, n_qb]`` keep_diagonal targets
+        (the caller derives them from ``q_positions`` exactly as the
+        XLA path does).
+
+    Returns:
+      ``[B, H, n_q, d]`` attention output (dtype of v_cache).
+    """
+    if len(round_bits) != 2:
+        raise ValueError("fused prefill kernel supports 2-round configs")
+    interpret = _default_interpret() if interpret is None else interpret
+    batch, heads, n_q, d = q.shape
+    n_k = k_cache.shape[-2]
+    if n_k % filter_block:
+        raise ValueError(
+            f"cache rows {n_k} not divisible by filter block {filter_block}"
+        )
+    bh = batch * heads
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    qp = q16.bit_plane(round_bits[-1]).reshape(bh, n_q, d)
+    qs = q16.scale.reshape(bh, n_q, 1)
+    qpos_bh = jnp.repeat(q_positions.astype(jnp.int32), heads, axis=0)
+    # Per-row dequantization scales: the exact expansion
+    # blockwise_quantized_view performs for the XLA path.
+    ks_row = jnp.repeat(
+        k_block_scale.astype(jnp.float32), filter_block, axis=-1
+    ).reshape(bh, n_k)
+
+    s0, s1 = pre_kernel.mpmrf_prefill_filter_scores(
+        qp, qs, qpos_bh,
+        k_codes.reshape(bh, n_k, d),
+        ks_row,
+        round_bits=tuple(round_bits),
+        query_block=query_block,
+        key_block=key_block,
+        interpret=interpret,
+    )
+
+    idx, val = _fused_prefill_select(
+        s0, s1,
+        round_bits=round_bits, alphas=alphas,
+        query_block=query_block, key_block=key_block,
+        block_budget=block_budget, keep_all=keep_all,
+        keep_first=keep_first, keep_diagonal=keep_diagonal,
+        diag_blocks=diag_blocks, heads=heads,
+    )
+
+    out = pre_kernel.prefill_gather_attention(
+        q.reshape(bh, n_q, d), qpos_bh,
+        k_cache.reshape(bh, n_k, d),
+        v_cache.reshape(bh, n_k, d),
+        idx, val,
+        query_block=query_block, key_block=key_block,
+        scale=scale, interpret=interpret,
+    )
+    return out.reshape(batch, heads, n_q, d)
+
+
+def fused_paged_prefill_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    k_codes: jax.Array,
+    k_scale: jax.Array,
+    block_table: jax.Array,
+    q_positions: jax.Array,
+    *,
+    round_bits: Tuple[int, ...] = (2, 4),
+    alphas: Tuple[float, ...] = (0.0, 0.0),
+    query_block: int = 128,
+    key_block: int = 128,
+    block_budget: int = 8,
+    keep_all: bool = False,
+    keep_first: bool = True,
+    keep_diagonal: bool = True,
+    diag_blocks: Optional[jax.Array] = None,
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Fused Pallas prefill over a shared page pool.
+
+    Same pipeline as :func:`fused_prefill_attention`, but cache state is
+    the page pool and both kernels address it through the block table:
+    the filter kernel's BlockSpec streams physical pages named by the
+    table, and the gather kernel composes the survivor table with the
+    block table inside its index maps (selected logical block →
+    physical page → stream K/V), so unselected *and unmapped* pages
+    never leave HBM. Requires page size == ``key_block`` (the logical
+    key blocks of prefill selection are the pool's pages).
+
+    Args:
+      q: ``[B, KV, n_q, d]`` folded chunk rows.
+      k_pool, v_pool: ``[KV, pool_rows, d]`` shared page pools.
+      k_codes: int16 ``[KV, pool_rows, d]`` resident filter codes.
+      k_scale: f32 ``[KV, num_pages]`` resident per-page scales.
+      block_table: int32 ``[B, max_blocks]`` logical → physical pages.
+      q_positions: int32 ``[B, n_q]`` absolute positions per query row.
+      diag_blocks: optional int32 ``[B, n_qb]`` keep_diagonal targets.
+
+    Returns:
+      ``[B, KV, n_q, d]`` attention output (dtype of v_pool).
+    """
+    if len(round_bits) != 2:
+        raise ValueError("fused prefill kernel supports 2-round configs")
+    interpret = _default_interpret() if interpret is None else interpret
+    batch, heads, n_q, d = q.shape
+    pool_rows = k_pool.shape[-2]
+    bk = key_block
+    num_pages = pool_rows // bk
+    mb = block_table.shape[-1]
+    bh = batch * heads
+
+    q16 = qlib.quantize_int16(q, axis=-1)
+    qp = q16.bit_plane(round_bits[-1]).reshape(bh, n_q, d)
+    qs = q16.scale.reshape(bh, n_q, 1)
+    qpos_bh = jnp.repeat(q_positions.astype(jnp.int32), heads, axis=0)
+    # Head-offset physical table (pools fold the KV-head axis into the
+    # page axis), exactly as the fused paged decode path.
+    head_off = (jnp.arange(heads, dtype=jnp.int32) * num_pages)
+    bt_bh = (
+        block_table.astype(jnp.int32)[:, None, :] + head_off[None, :, None]
+    ).reshape(bh, mb)
+
+    s0, s1 = pre_kernel.mpmrf_paged_prefill_filter_scores(
+        qp, qs, qpos_bh,
+        k_codes.reshape(heads * num_pages, bk, d),
+        k_scale.reshape(heads * num_pages, 1),
+        bt_bh,
+        round_bits=tuple(round_bits),
+        query_block=query_block,
+        key_block=bk,
+        interpret=interpret,
+    )
+
+    idx, val = _fused_prefill_select(
+        s0, s1,
+        round_bits=round_bits, alphas=alphas,
+        query_block=query_block, key_block=bk,
+        block_budget=block_budget, keep_all=keep_all,
+        keep_first=keep_first, keep_diagonal=keep_diagonal,
+        diag_blocks=diag_blocks, heads=heads,
+    )
+
+    out = pre_kernel.paged_prefill_gather_attention(
+        q.reshape(bh, n_q, d), qpos_bh,
+        k_pool.reshape(heads * num_pages, bk, d),
+        v_pool.reshape(heads * num_pages, bk, d),
+        idx, val, bt_bh,
+        query_block=query_block, key_block=bk,
+        scale=scale, interpret=interpret,
+    )
+    return out.reshape(batch, heads, n_q, d)
 
 
 @functools.partial(

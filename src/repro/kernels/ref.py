@@ -155,6 +155,57 @@ def mpmrf_filter_ref(
     return pool(s0), pool(s1)
 
 
+def mpmrf_prefill_filter_ref(
+    q_plane: jax.Array,
+    q_scale: jax.Array,
+    q_positions: jax.Array,
+    k_codes: jax.Array,
+    k_row_scale: jax.Array,
+    *,
+    round_bits: Tuple[int, int],
+    query_block: int,
+    key_block: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for the fused prefill filter kernel.
+
+    q_plane ``[bh, n_q, d]`` int hi-bit plane, q_scale ``[bh, n_q, 1]``,
+    q_positions ``[bh, n_q]`` absolute positions (sentinels ≥ n_k),
+    k_codes ``[bh, n_k, d]`` int16 resident codes, k_row_scale
+    ``[bh, n_k]`` per-row dequant scales (the per-block scales expanded
+    over their rows). Returns real-unit block-max score planes
+    ``[bh, n_qb, n_kb]`` for the two rounds (invalid → -inf), with the
+    rescale association of the XLA pipeline and the kernel's on-chip
+    mask ``key_pos ≤ query_pos < n_k``.
+    """
+    lo, hi = round_bits
+    bh, n_q, d = q_plane.shape
+    n_k = k_codes.shape[-2]
+    bq, bk = query_block, key_block
+    codes = k_codes.astype(jnp.int32)
+    msb = jnp.right_shift(codes, 16 - lo)
+    rem = jnp.right_shift(codes, 16 - hi) - jnp.left_shift(msb, hi - lo)
+    qp = q_plane.astype(jnp.int32)
+    acc0 = jnp.einsum("bqd,bkd->bqk", qp, msb)
+    acc1 = jnp.left_shift(acc0, hi - lo) + jnp.einsum(
+        "bqd,bkd->bqk", qp, rem
+    )
+    qs = q_scale.astype(jnp.float32) * float(2 ** (16 - hi))
+    ks = k_row_scale.astype(jnp.float32)[:, None, :]
+    s0 = (acc0.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - lo)))
+    s1 = (acc1.astype(jnp.float32) * qs) * (ks * float(2 ** (16 - hi)))
+    qpos = q_positions[:, :, None]
+    kpos = jnp.arange(n_k)[None, None, :]
+    ok = jnp.logical_and(kpos <= qpos, qpos < n_k)
+    s0 = jnp.where(ok, s0, NEG_INF)
+    s1 = jnp.where(ok, s1, NEG_INF)
+
+    def pool(s):
+        t = s.reshape(bh, n_q // bq, bq, n_k // bk, bk)
+        return jnp.max(t, axis=(2, 4))
+
+    return pool(s0), pool(s1)
+
+
 def mpmrf_decode_filter_ref(
     q_plane: jax.Array,
     q_scale: jax.Array,

@@ -19,6 +19,7 @@ from repro.core import (
     energon_attention,
     energon_decode_attention,
     energon_paged_decode_attention,
+    energon_paged_prefill_attention,
 )
 from repro.core import quantization as qlib
 from repro.distributed import sharding as shd
@@ -328,10 +329,18 @@ def prefill_attention_block(
     groups = num_heads // num_kv_heads
     # folded row (g, c) keeps token c's position → same per-row mask
     qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
+    filter_cache = None
+    if "k_codes" in new_cache:
+        # the planes were refreshed by the fold above, so the chunk's
+        # own selection already reads them — fused prefill (impl
+        # "pallas") and the XLA selection consume the same operands
+        filter_cache = {
+            "codes": new_cache["k_codes"], "scale": new_cache["k_scale"],
+        }
     out = energon_attention(
         qg, new_cache["k"], new_cache["v"], energon,
         causal=True, window=window, layer_index=layer_index,
-        q_positions=qpos,
+        q_positions=qpos, filter_cache=filter_cache,
     )
     y = _unfold_heads_out(out, params, num_heads, chunk)
     return y, new_cache
@@ -556,14 +565,16 @@ def paged_prefill_attention_block(
     """Chunked-prefill attention against the page pool.
 
     The chunk's K/V rows are scattered through the block table, then the
-    per-slot *logical* K/V views are materialized (a transient gather —
-    persistent state stays pool-sized) and the chunk attends them
-    through the unchanged ``energon_attention`` q_positions path. The
-    gathered view is value-identical to the equivalent unpaged cache,
-    so paged and unpaged prefill logits agree bit-for-bit.
+    chunk attends the pool through
+    :func:`repro.core.energon_paged_prefill_attention`: the fused
+    prefill kernels read the pool in place (survivor ∘ block-table index
+    composition — unselected and unmapped pages never leave HBM); the
+    XLA fallback materializes the per-slot *logical* K/V views (a
+    transient gather — persistent state stays pool-sized). The gathered
+    view is value-identical to the equivalent unpaged cache, so paged
+    and unpaged prefill logits agree bit-for-bit on the fallback, and
+    selection agrees bit-for-bit on both.
     """
-    from repro.runtime import paged_cache as pgc
-
     chunk = x.shape[1]
     ps = energon.decode_key_block
     qg, new_cache = _project_update_fold_paged(
@@ -572,30 +583,11 @@ def paged_prefill_attention_block(
         rope_theta=rope_theta, use_qk_norm=use_qk_norm,
         filter_block=ps,
     )
-    k_log = pgc.gather_logical_rows(new_cache["k"], block_table, ps)
-    v_log = pgc.gather_logical_rows(new_cache["v"], block_table, ps)
-    # Zero the view past each slot's written extent: unmapped logical
-    # blocks alias page 0 (another occupant's rows), and the per-head
-    # absmax of row/block selection would otherwise quantize against
-    # them. The unpaged cache holds zeros there — zeroing makes the
-    # views (and hence prefill logits) bit-identical. Positions are
-    # contiguous per slot (sentinels ≥ logical rows), so max+1 bounds
-    # every row written so far.
-    logical_rows = block_table.shape[-1] * ps
-    extent = jnp.max(
-        jnp.where(positions < logical_rows, positions + 1, 0), axis=1
-    )                                        # [B]
-    row_ok = (
-        jnp.arange(logical_rows)[None, :] < extent[:, None]
-    )[:, None, :, None]
-    k_log = k_log * row_ok
-    v_log = v_log * row_ok
     groups = num_heads // num_kv_heads
     qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
-    out = energon_attention(
-        qg, k_log, v_log, energon,
-        causal=True, window=window, layer_index=layer_index,
-        q_positions=qpos,
+    out = energon_paged_prefill_attention(
+        qg, new_cache, block_table, qpos, energon,
+        layer_index=layer_index, window=window,
     )
     y = _unfold_heads_out(out, params, num_heads, chunk)
     return y, new_cache

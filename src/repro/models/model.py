@@ -336,9 +336,14 @@ class LMModel:
         cfg = self.cfg
         dt = self._dtype
         max_len = self.decode_cache_len(max_len)
+        # Crossover gate: short caches never allocate the quantized
+        # filter planes — below the measured threshold the plane upkeep
+        # costs more traffic than the re-quantize it avoids, and every
+        # consumer falls back to fresh (bit-identical) quantization
+        # simply because the planes are absent.
         filter_block = (
             cfg.energon.decode_key_block
-            if cfg.energon.uses_filter_cache else 0
+            if cfg.energon.filter_cache_engages(max_len) else 0
         )
 
         def attn_cache():
@@ -433,20 +438,31 @@ class LMModel:
             and e.impl in ("mpmrf_row", "mpmrf_block", "pallas")
         )
 
-    def init_paged_cache(self, num_pages: int) -> Dict[str, Any]:
+    def init_paged_cache(
+        self, num_pages: int, max_len: Optional[int] = None
+    ) -> Dict[str, Any]:
         """Shared page-pool decode cache (DESIGN.md §4): per-layer pools
         with **no batch axis** — slots address them through the block
-        table the scheduler threads via ``inputs['block_table']``."""
+        table the scheduler threads via ``inputs['block_table']``.
+
+        ``max_len`` is the per-slot logical capacity the serving loop
+        will address through its block tables; the filter-plane
+        crossover gate keys on it (pool capacity stands in when the
+        caller doesn't know it yet)."""
         cfg = self.cfg
         if not self.supports_paged:
             raise ValueError(
                 f"paged cache unsupported for family={cfg.family!r} / "
                 f"impl={cfg.energon.impl!r}"
             )
+        gate_len = (
+            max_len if max_len is not None
+            else num_pages * cfg.energon.decode_key_block
+        )
         one = attn_lib.init_paged_kv_cache(
             num_pages, cfg.num_kv_heads, cfg.energon.decode_key_block,
             cfg.head_dim, self._dtype,
-            filter_planes=cfg.energon.uses_filter_cache,
+            filter_planes=cfg.energon.filter_cache_engages(gate_len),
         )
         return jax.tree.map(
             lambda a: jnp.broadcast_to(

@@ -212,7 +212,9 @@ def make_serve_step(
     p_shard = shd.param_shardings(params_shapes, mesh)
     if num_pages > 0:
         cache_shapes = jax.eval_shape(
-            lambda: model.init_paged_cache(num_pages)
+            lambda: model.init_paged_cache(
+                num_pages, max_len=max_len if max_len > 0 else None
+            )
         )
         c_shard = shd.paged_cache_shardings(
             cache_shapes, mesh, model.cfg.energon.decode_key_block
@@ -352,7 +354,9 @@ class ServeLoop:
                 max_blocks=mb, batch_slots=batch_slots,
             )
             self.allocator = PageAllocator(self.layout)
-            self.cache = model.init_paged_cache(num_pages)
+            self.cache = model.init_paged_cache(
+                num_pages, max_len=self.max_len
+            )
             self._reset_pages_fn = jax.jit(
                 model.reset_pages, donate_argnums=(0,)
             )

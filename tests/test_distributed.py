@@ -212,7 +212,8 @@ class TestPagedCacheSharding:
             name="paged-shard", family="dense", num_layers=2, d_model=32,
             num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
             vocab_size=64, dtype="float32", remat="none",
-            energon=EnergonConfig(impl="mpmrf_block", decode_key_block=16),
+            energon=EnergonConfig(impl="mpmrf_block", decode_key_block=16,
+                                  filter_cache_min_len=0),
         )
         model = LMModel(cfg)
         shapes = jax.eval_shape(lambda: model.init_paged_cache(8))
@@ -268,7 +269,8 @@ class TestPagedCacheSharding:
             name="paged-shard-share", family="dense", num_layers=2,
             d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
             vocab_size=64, dtype="float32", remat="none",
-            energon=EnergonConfig(impl="mpmrf_block", decode_key_block=16),
+            energon=EnergonConfig(impl="mpmrf_block", decode_key_block=16,
+                                  filter_cache_min_len=0),
         )
         model = LMModel(cfg)
         shapes = jax.eval_shape(lambda: model.init_paged_cache(8))
@@ -362,3 +364,58 @@ class TestPagedCacheSharding:
         assert result["shape"] == [2, 1, 64]
         assert result["finite"]
         assert "model" in result["kv_spec"]
+
+
+class TestFusedPrefillSharded:
+    def test_sharded_serve_drains_with_fused_prefill(self):
+        """The fused Pallas prefill path (impl="pallas", planes pinned
+        resident) must drain a sharded paged engine and produce the
+        same greedy streams as the XLA block path — the prefill kernels
+        read the same pool leaves `paged_pool_pspec` routes (`k_codes`
+        KV-head-sharded, `k_scale` following, tables replicated), so
+        engaging them must not disturb the sharded serve step."""
+        result = run_subprocess("""
+        from repro.configs.base import ModelConfig
+        from repro.core import EnergonConfig
+        from repro.distributed import sharding as shd
+        from repro.models import LMModel
+        from repro.runtime import Request, ServeLoop
+
+        def drain(impl):
+            cfg = ModelConfig(
+                name=f"mesh-fused-prefill-{impl}", family="dense",
+                num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+                head_dim=8, d_ff=64, vocab_size=64, dtype="float32",
+                remat="none",
+                energon=EnergonConfig(impl=impl, pruning_ratio=2.0,
+                                      query_block=8, key_block=16,
+                                      decode_key_block=16,
+                                      min_prune_layer=1,
+                                      filter_cache_min_len=0))
+            model = LMModel(cfg)
+            params = model.init(jax.random.PRNGKey(0))
+            engine = ServeLoop(model, params, batch_slots=2, max_len=64,
+                               eos_token=cfg.vocab_size - 1,
+                               prefill_chunk=16, paged=True, num_pages=10)
+            rng = np.random.default_rng(3)
+            for uid, L in enumerate((24, 40, 9)):
+                engine.submit(Request(
+                    uid=uid,
+                    prompt=rng.integers(1, 63, size=L).tolist(),
+                    max_new_tokens=6))
+            done = engine.run_until_drained()
+            return {r.uid: list(r.tokens_out) for r in done}
+
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
+        with mesh:
+            shd.set_active_mesh(mesh)
+            fused = drain("pallas")
+            xla = drain("mpmrf_block")
+            shd.set_active_mesh(None)
+        print(json.dumps({
+            "completed": len(fused),
+            "identical": fused == xla,
+        }))
+        """)
+        assert result["completed"] == 3
+        assert result["identical"]

@@ -581,3 +581,392 @@ class TestFusedDecodePagedEdges:
             key_block=bk, block_budget=budget, live_budget=lb,
         )
         np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+
+class TestFusedPrefillKernel:
+    """Fused prefill pipeline off the resident filter cache: the filter
+    kernel's in-register plane derivation must match the jnp oracle,
+    and — the prefix-sharing contract — its selection must be
+    bit-identical to the XLA ``mpmrf_block_select`` consuming the same
+    resident planes."""
+
+    def _setup(self, B=2, H=2, n_q=16, n_k=128, d=16, bq=8, bk=16,
+               seed=0, offsets=(40, 8), ragged=4):
+        """Chunk rows at per-slot offsets; slot 1's tail rows are
+        position sentinels (≥ n_k) — a ragged final chunk."""
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(B, H, n_q, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, H, n_k, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, H, n_k, d)), jnp.float32)
+        pos = np.zeros((B, n_q), np.int32)
+        pos[0] = offsets[0] + np.arange(n_q)
+        pos[1] = offsets[1] + np.arange(n_q)
+        pos[1, n_q - ragged:] = n_k  # sentinels
+        qpos = jnp.asarray(pos)
+        # padded cache: rows past each slot's extent hold zeros
+        extent = jnp.max(jnp.where(qpos < n_k, qpos + 1, 0), axis=1)
+        mask = (jnp.arange(n_k)[None, :] < extent[:, None])[:, None, :, None]
+        k, v = k * mask, v * mask
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        return q, k, v, qpos, codes, scales, bq, bk
+
+    def _diag_blocks(self, qpos, bq, bk, n_k):
+        from repro.core.energon_attention import _prefill_diag_blocks
+
+        return _prefill_diag_blocks(qpos, bq, bk, n_k)
+
+    @pytest.mark.parametrize("seed", [0, 5])
+    def test_filter_scores_vs_ref(self, seed):
+        from repro.kernels import mpmrf_prefill as pk
+
+        q, k, _, qpos, codes, scales, bq, bk = self._setup(seed=seed)
+        B, H, n_q, d = q.shape
+        n_k = k.shape[-2]
+        bh = B * H
+        q16 = qlib.quantize_int16(q, axis=-1)
+        qp = q16.bit_plane(4).reshape(bh, n_q, d)
+        qs = q16.scale.reshape(bh, n_q, 1)
+        qpos_bh = jnp.repeat(qpos, H, axis=0)
+        ks_row = jnp.repeat(scales, bk, axis=-1).reshape(bh, n_k)
+        s0, s1 = pk.mpmrf_prefill_filter_scores(
+            qp, qs, qpos_bh, codes.reshape(bh, n_k, d), ks_row,
+            round_bits=(2, 4), query_block=bq, key_block=bk,
+            interpret=True,
+        )
+        r0, r1 = ref.mpmrf_prefill_filter_ref(
+            qp, qs, qpos_bh, codes.reshape(bh, n_k, d), ks_row,
+            round_bits=(2, 4), query_block=bq, key_block=bk,
+        )
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(r0),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(r1),
+                                   rtol=1e-6)
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_selection_bit_identical_to_xla(self, ratio):
+        """Kernel scores + shared selection helper ≡
+        ``mpmrf_block_select`` on the resident planes — exact survivor
+        tables, incl. the sentinel rows of the ragged tail chunk."""
+        import math
+
+        from repro.core import filtering as flt
+        from repro.kernels import mpmrf_prefill as pk
+
+        q, k, _, qpos, codes, scales, bq, bk = self._setup(seed=3)
+        B, H, n_q, d = q.shape
+        n_k = k.shape[-2]
+        bh = B * H
+        n_kb = n_k // bk
+        budget = max(1, math.ceil(n_kb / ratio))
+        db = self._diag_blocks(qpos, bq, bk, n_k)
+
+        kpos = jnp.arange(n_k)[None, None, :]
+        valid = jnp.broadcast_to(
+            jnp.logical_and(kpos <= qpos[:, :, None],
+                            qpos[:, :, None] < n_k)[:, None],
+            (B, H, n_q, n_k),
+        )
+        mcfg = flt.MPMRFConfig(
+            round_bits=(2, 4), alphas=(0.0, 0.0), granularity="block",
+            query_block=bq, key_block=bk, block_budget=budget,
+            keep_first=True, keep_diagonal=True, reuse_partial=True,
+        )
+        res = flt.mpmrf_block_select(
+            q, k, mcfg, valid=valid, diag_blocks=db,
+            k_quant=qlib.blockwise_quantized_view(codes, scales, bk),
+        )
+
+        q16 = qlib.quantize_int16(q, axis=-1)
+        s0, s1 = pk.mpmrf_prefill_filter_scores(
+            q16.bit_plane(4).reshape(bh, n_q, d),
+            q16.scale.reshape(bh, n_q, 1),
+            jnp.repeat(qpos, H, axis=0),
+            codes.reshape(bh, n_k, d),
+            jnp.repeat(scales, bk, axis=-1).reshape(bh, n_k),
+            round_bits=(2, 4), query_block=bq, key_block=bk,
+            interpret=True,
+        )
+        idx, val = ops._fused_prefill_select(
+            s0, s1, round_bits=(2, 4), alphas=(0.0, 0.0),
+            query_block=bq, key_block=bk, block_budget=budget,
+            keep_all=False, keep_first=True, keep_diagonal=True,
+            diag_blocks=db, heads=H,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.block_indices).reshape(bh, n_q // bq, -1),
+            np.asarray(idx),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.block_valid).reshape(bh, n_q // bq, -1),
+            np.asarray(val),
+        )
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_fused_matches_xla_prefill_path(self, ratio):
+        """Dispatch-level parity: selection glue is shared, so fused ==
+        XLA block prefill up to flash-vs-flat softmax rounding."""
+        from repro.core import EnergonConfig, energon_attention
+
+        q, k, v, qpos, codes, scales, bq, bk = self._setup(seed=7)
+        fc = {"codes": codes, "scale": scales}
+        kw = dict(pruning_ratio=ratio, query_block=bq, key_block=bk,
+                  decode_key_block=bk, min_prune_layer=0)
+        out_x = energon_attention(
+            q, k, v, EnergonConfig(impl="mpmrf_block", **kw),
+            q_positions=qpos, layer_index=5, filter_cache=fc,
+        )
+        out_p = energon_attention(
+            q, k, v, EnergonConfig(impl="pallas", **kw),
+            q_positions=qpos, layer_index=5, filter_cache=fc,
+        )
+        np.testing.assert_allclose(
+            np.asarray(out_p), np.asarray(out_x), atol=1e-5
+        )
+
+    def test_keep_all_budget_is_exactly_dense(self):
+        """ρ ≤ 1 ⇒ every live block survives: the fused pipeline must
+        reproduce dense attention (sentinel rows excluded)."""
+        from repro.core import EnergonConfig, energon_attention
+
+        q, k, v, qpos, codes, scales, bq, bk = self._setup(seed=9)
+        fc = {"codes": codes, "scale": scales}
+        out_p = energon_attention(
+            q, k, v,
+            EnergonConfig(impl="pallas", pruning_ratio=1.0,
+                          query_block=bq, key_block=bk,
+                          decode_key_block=bk, min_prune_layer=0),
+            q_positions=qpos, layer_index=5, filter_cache=fc,
+        )
+        dense = energon_attention(
+            q, k, v, EnergonConfig(impl="dense"),
+            q_positions=qpos, layer_index=5,
+        )
+        real = np.asarray(qpos < k.shape[-2])[:, None, :, None]
+        np.testing.assert_allclose(
+            np.asarray(out_p) * real, np.asarray(dense) * real, atol=1e-5
+        )
+
+    def test_no_resident_planes_falls_back_to_xla_path(self):
+        """Without the filter cache the pallas impl must downgrade to
+        the XLA block path (same selection from fresh quantization)."""
+        from repro.core import EnergonConfig, energon_attention
+
+        q, k, v, qpos, _, _, bq, bk = self._setup(seed=11)
+        outs = []
+        for impl in ("pallas", "mpmrf_block"):
+            cfg = EnergonConfig(impl=impl, pruning_ratio=2.0,
+                                query_block=bq, key_block=bk,
+                                decode_key_block=bk, min_prune_layer=0)
+            outs.append(energon_attention(
+                q, k, v, cfg, q_positions=qpos, layer_index=5
+            ))
+        np.testing.assert_array_equal(
+            np.asarray(outs[0]), np.asarray(outs[1])
+        )
+
+    def test_interpret_flag_parity(self):
+        """Explicit interpret=True equals the host-default dispatch —
+        the CPU fallback runs the same kernel body."""
+        import math
+
+        q, k, v, qpos, codes, scales, bq, bk = self._setup(seed=13)
+        n_kb = k.shape[-2] // bk
+        kw = dict(
+            round_bits=(2, 4), alphas=(0.0, 0.0), query_block=bq,
+            key_block=bk, filter_block=bk,
+            block_budget=max(1, math.ceil(n_kb / 2.0)),
+            diag_blocks=self._diag_blocks(qpos, bq, bk, k.shape[-2]),
+        )
+        out_auto = ops.fused_prefill_attention(
+            q, k, v, codes, scales, qpos, **kw
+        )
+        out_explicit = ops.fused_prefill_attention(
+            q, k, v, codes, scales, qpos, interpret=True, **kw
+        )
+        np.testing.assert_array_equal(
+            np.asarray(out_auto), np.asarray(out_explicit)
+        )
+
+
+class TestFusedPrefillPaged:
+    """Paged fused prefill: both kernels address the page pool through
+    the block table (filter: page-per-key-tile; gather: survivor ∘
+    block-table composition) and must stay bit-identical to the
+    unpaged fused path on the same logical contents."""
+
+    def _pool_of(self, k, v, codes, scales, tables, num_pages, bk):
+        B, H, n, d = k.shape
+        mb = n // bk
+        kp = np.zeros((H, num_pages * bk, d), np.float32)
+        vp = np.zeros_like(kp)
+        cp = np.zeros((H, num_pages * bk, d), np.int16)
+        sp = np.zeros((H, num_pages), np.float32)
+        for b in range(B):
+            for j in range(mb):
+                pg = int(tables[b, j])
+                sl = slice(pg * bk, (pg + 1) * bk)
+                src = slice(j * bk, (j + 1) * bk)
+                kp[:, sl] = np.asarray(k[b, :, src])
+                vp[:, sl] = np.asarray(v[b, :, src])
+                cp[:, sl] = np.asarray(codes[b, :, src])
+                sp[:, pg] = np.asarray(scales[b, :, j])
+        return dict(k=jnp.asarray(kp), v=jnp.asarray(vp),
+                    codes=jnp.asarray(cp), scale=jnp.asarray(sp))
+
+    def _setup(self, B=2, H=2, n_q=16, mb=6, d=16, bq=8, bk=16, seed=0,
+               num_pages=15, offsets=(24, 70), ragged=4):
+        rng = np.random.default_rng(seed)
+        n = mb * bk
+        q = _mk((B, H, n_q, d), seed)
+        k = _mk((B, H, n, d), seed + 1)
+        v = _mk((B, H, n, d), seed + 2)
+        pos = np.zeros((B, n_q), np.int32)
+        pos[0] = offsets[0] + np.arange(n_q)
+        pos[1] = offsets[1] + np.arange(n_q)
+        pos[1, n_q - ragged:] = n  # sentinels
+        qpos = jnp.asarray(pos)
+        extent = jnp.max(jnp.where(qpos < n, qpos + 1, 0), axis=1)
+        mask = (jnp.arange(n)[None, :] < extent[:, None])[:, None, :, None]
+        k, v = k * mask, v * mask
+        codes, scales = qlib.quantize_int16_blocks(k, bk)
+        perm = rng.permutation(num_pages)
+        tables = np.asarray(
+            [perm[b * mb:(b + 1) * mb] for b in range(B)], np.int32
+        )
+        pool = self._pool_of(k, v, codes, scales, tables, num_pages, bk)
+        return q, k, v, qpos, codes, scales, tables, pool, bq, bk
+
+    def _fused_kwargs(self, qpos, bq, bk, n_k, ratio=2.0):
+        import math
+
+        from repro.core.energon_attention import _prefill_diag_blocks
+
+        n_kb = n_k // bk
+        return dict(
+            round_bits=(2, 4), alphas=(0.0, 0.0), query_block=bq,
+            key_block=bk,
+            block_budget=max(1, math.ceil(n_kb / ratio)),
+            diag_blocks=_prefill_diag_blocks(qpos, bq, bk, n_k),
+        )
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_paged_fused_bit_identical_to_unpaged_fused(self, ratio):
+        q, k, v, qpos, codes, scales, tables, pool, bq, bk = self._setup()
+        kw = self._fused_kwargs(qpos, bq, bk, k.shape[-2], ratio)
+        ref_out = ops.fused_prefill_attention(
+            q, k, v, codes, scales, qpos, filter_block=bk, **kw
+        )
+        out = ops.fused_paged_prefill_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), qpos, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+    def test_paged_filter_scores_vs_unpaged_kernel(self, seed=4):
+        from repro.kernels import mpmrf_prefill as pk
+
+        q, k, _, qpos, codes, scales, tables, pool, bq, bk = self._setup(
+            seed=seed
+        )
+        B, H, n_q, d = q.shape
+        n = k.shape[-2]
+        mb = n // bk
+        bh = B * H
+        num_pages = pool["scale"].shape[-1]
+        q16 = qlib.quantize_int16(q, axis=-1)
+        qp = q16.bit_plane(4).reshape(bh, n_q, d)
+        qs = q16.scale.reshape(bh, n_q, 1)
+        qpos_bh = jnp.repeat(qpos, H, axis=0)
+        r0, r1 = pk.mpmrf_prefill_filter_scores(
+            qp, qs, qpos_bh, codes.reshape(bh, n, d),
+            jnp.repeat(scales, bk, axis=-1).reshape(bh, n),
+            round_bits=(2, 4), query_block=bq, key_block=bk,
+            interpret=True,
+        )
+        head_off = jnp.arange(H, dtype=jnp.int32) * num_pages
+        bt_bh = (
+            jnp.asarray(tables)[:, None, :] + head_off[None, :, None]
+        ).reshape(bh, mb)
+        s0, s1 = pk.mpmrf_paged_prefill_filter_scores(
+            qp, qs, qpos_bh,
+            pool["codes"].reshape(H * num_pages, bk, d),
+            pool["scale"].reshape(H * num_pages, 1),
+            bt_bh, round_bits=(2, 4), query_block=bq, key_block=bk,
+            interpret=True,
+        )
+        np.testing.assert_array_equal(np.asarray(r0), np.asarray(s0))
+        np.testing.assert_array_equal(np.asarray(r1), np.asarray(s1))
+
+    def test_paged_dispatch_matches_xla_fallback(self):
+        """``energon_paged_prefill_attention``: fused (impl='pallas')
+        vs the transient-gather XLA fallback (impl='mpmrf_block') on
+        identical pool contents — same selection, allclose outputs."""
+        from repro.core import (
+            EnergonConfig,
+            energon_paged_prefill_attention,
+        )
+
+        q, k, v, qpos, codes, scales, tables, pool, bq, bk = self._setup(
+            seed=6
+        )
+        cache = dict(k=pool["k"], v=pool["v"], k_codes=pool["codes"],
+                     k_scale=pool["scale"])
+        outs = {}
+        for impl in ("pallas", "mpmrf_block"):
+            cfg = EnergonConfig(impl=impl, pruning_ratio=2.0,
+                                query_block=bq, key_block=bk,
+                                decode_key_block=bk, min_prune_layer=0,
+                                filter_cache_min_len=0)
+            outs[impl] = energon_paged_prefill_attention(
+                q, cache, jnp.asarray(tables), qpos, cfg, layer_index=5
+            )
+        np.testing.assert_allclose(
+            np.asarray(outs["pallas"]), np.asarray(outs["mpmrf_block"]),
+            atol=1e-5,
+        )
+
+    def test_single_mapped_page(self):
+        """A chunk whose positions all land in logical block 0: every
+        other table entry is the compacted-table filler (page 0 — a
+        foreign slot's live page) and must never influence the
+        output."""
+        q, k, v, qpos, codes, scales, _, _, bq, bk = self._setup(
+            seed=8, mb=4, num_pages=9, offsets=(0, 2), ragged=10
+        )
+        # slot 0 writes rows 0..15 (exactly page 0's block);
+        # slot 1 rows 2..7 + sentinels — both within one page
+        tables = np.array([[7, 0, 0, 0], [3, 0, 0, 0]], np.int32)
+        pool = self._pool_of(k, v, codes, scales, tables,
+                             num_pages=9, bk=bk)
+        kw = self._fused_kwargs(qpos, bq, bk, k.shape[-2])
+        ref_out = ops.fused_prefill_attention(
+            q, k, v, codes, scales, qpos, filter_block=bk, **kw
+        )
+        out = ops.fused_paged_prefill_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), qpos, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))
+
+    def test_survivor_table_hits_highest_physical_page(self):
+        """Survivor entries whose block table maps the pool's *last*
+        physical page: the composed filter/gather index maps must
+        address the final page without clamping or wrapping."""
+        num_pages = 9
+        last = num_pages - 1
+        q, k, v, qpos, codes, scales, _, _, bq, bk = self._setup(
+            seed=10, mb=4, num_pages=num_pages, offsets=(47, 30),
+            ragged=2,
+        )
+        tables = np.array([[2, last, 1, 0], [3, 4, 5, 6]], np.int32)
+        pool = self._pool_of(k, v, codes, scales, tables,
+                             num_pages=num_pages, bk=bk)
+        kw = self._fused_kwargs(qpos, bq, bk, k.shape[-2])
+        ref_out = ops.fused_prefill_attention(
+            q, k, v, codes, scales, qpos, filter_block=bk, **kw
+        )
+        out = ops.fused_paged_prefill_attention(
+            q, pool["k"], pool["v"], pool["codes"], pool["scale"],
+            jnp.asarray(tables), qpos, **kw
+        )
+        np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(out))

@@ -57,7 +57,8 @@ def _model(impl="mpmrf_block", **energon_kw):
         dtype="float32", remat="none",
         energon=EnergonConfig(
             impl=impl, pruning_ratio=2.0, query_block=8, key_block=16,
-            decode_key_block=16, min_prune_layer=1, **energon_kw,
+            decode_key_block=16, min_prune_layer=1,
+            filter_cache_min_len=0, **energon_kw,
         ),
     )
     model = LMModel(cfg)
@@ -1034,3 +1035,71 @@ class TestDifferentialEngineFuzz:
     @given(spec=_TRACE_STRATEGY)
     def test_differential_fuzz(self, spec):
         self._assert_differential(spec)
+
+
+class TestFusedPrefillServing:
+    """Fused prefill on vs off must be invisible to engine outputs:
+    selection is bit-identical by construction (shared tier-select on
+    the same resident planes), so greedy and stochastic streams — and
+    the prefix-sharing chunk-grid skip decisions — must not change."""
+
+    def _streams(self, *, impl, paged, num_pages=None, n_req=5, slots=2,
+                 max_len=96, stochastic=False):
+        cfg, model, params = _model(impl)
+        engine = ServeLoop(
+            model, params, batch_slots=slots, max_len=max_len,
+            eos_token=cfg.vocab_size - 1, prefill_chunk=8,
+            paged=paged, num_pages=num_pages,
+        )
+        rng = np.random.default_rng(0)
+        for uid in range(n_req):
+            engine.submit(Request(
+                uid=uid,
+                prompt=rng.integers(
+                    1, cfg.vocab_size - 1,
+                    size=int(rng.integers(3, 40))).tolist(),
+                max_new_tokens=10,
+                temperature=0.9 if (stochastic and uid % 2) else 0.0,
+            ))
+        done = engine.run_until_drained()
+        assert len(done) == n_req
+        return {r.uid: r.tokens_out for r in done}, engine
+
+    @pytest.mark.parametrize("stochastic", [False, True],
+                             ids=["greedy", "stochastic"])
+    @pytest.mark.parametrize("paged", [False, True],
+                             ids=["unpaged", "paged"])
+    def test_streams_identical_fused_on_vs_off(self, paged, stochastic):
+        fused, _ = self._streams(impl="pallas", paged=paged,
+                                 stochastic=stochastic)
+        xla, _ = self._streams(impl="mpmrf_block", paged=paged,
+                               stochastic=stochastic)
+        assert fused == xla
+
+    def test_streams_identical_under_preemption(self):
+        """An oversubscribed pool preempts and re-prefills (prompt +
+        generated tokens through the fused chunk path): streams and
+        preemption counters must match the XLA engine exactly."""
+        kw = dict(paged=True, num_pages=7, n_req=6, slots=3, max_len=96)
+        fused, ef = self._streams(impl="pallas", **kw)
+        xla, ex = self._streams(impl="mpmrf_block", **kw)
+        assert ef.metrics.preemptions > 0
+        assert ef.metrics.preemptions == ex.metrics.preemptions
+        assert fused == xla
+
+    def test_prefix_shared_streams_identical_fused_on_vs_off(self):
+        """Prefix sharing resumes mid-prompt on the chunk grid (PR 4's
+        skip rule): the resumed chunk's selection must stay on-grid and
+        bit-identical, so shared-cache streams match across fused and
+        XLA prefill — and sharing still skips work under fused."""
+        trace = _shared_prefix_trace()
+        sh_f, cnt_f, ef = _drain_trace(
+            trace, mode="shared", model_tuple=_model("pallas"))
+        sh_x, cnt_x, _ = _drain_trace(
+            trace, mode="shared", model_tuple=_model("mpmrf_block"))
+        un_f, _, _ = _drain_trace(
+            trace, mode="unpaged", model_tuple=_model("pallas"))
+        assert sh_f == sh_x == un_f
+        assert cnt_f == cnt_x
+        assert ef.metrics.prefix_hits > 0
+        assert ef.metrics.prefill_tokens_skipped > 0

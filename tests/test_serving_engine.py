@@ -334,7 +334,7 @@ class TestFilterCachePersistence:
         return _model(EnergonConfig(
             impl=impl, pruning_ratio=2.0, query_block=8, key_block=16,
             decode_key_block=self.BK, min_prune_layer=1,
-            filter_cache=filter_cache,
+            filter_cache=filter_cache, filter_cache_min_len=0,
         ))
 
     def _assert_invariant(self, cache):
@@ -737,3 +737,80 @@ class TestSubmitCapacity:
         assert len(done) == 1
         # limit = rows - L + 1 = 3
         assert len(done[0].tokens_out) <= 3
+
+
+class TestFilterCacheCrossoverGate:
+    """The context-length crossover gate (DESIGN.md §3): below the
+    threshold the resident filter planes cost more HBM traffic than
+    they save, so short caches must not allocate them at all — the
+    decode step's HLO is then byte-identical to the fresh-requantize
+    engine. The gate acts at plane *allocation*; every consumer keys on
+    plane presence, so one switch covers decode, prefill and paged."""
+
+    def _model(self, **energon_kw):
+        return _model(EnergonConfig(
+            impl="mpmrf_block", pruning_ratio=2.0, query_block=8,
+            key_block=16, decode_key_block=16, min_prune_layer=1,
+            **energon_kw,
+        ))
+
+    def test_auto_threshold_dispatch_both_sides(self):
+        from repro.core import FILTER_CACHE_AUTO_MIN_LEN
+
+        cfg, model, _ = self._model()
+        below = model.init_cache(1, FILTER_CACHE_AUTO_MIN_LEN // 2)
+        at = model.init_cache(1, FILTER_CACHE_AUTO_MIN_LEN)
+        assert "k_codes" not in below and "k_scale" not in below
+        assert "k_codes" in at and "k_scale" in at
+
+    def test_custom_threshold_honoured(self):
+        cfg, model, _ = self._model(filter_cache_min_len=256)
+        assert "k_codes" not in model.init_cache(1, 128)
+        assert "k_codes" in model.init_cache(1, 256)
+        # 0 pins the gate open at any length
+        _, model0, _ = self._model(filter_cache_min_len=0)
+        assert "k_codes" in model0.init_cache(1, 32)
+
+    def test_paged_pool_gated_by_capacity(self):
+        from repro.core import FILTER_CACHE_AUTO_MIN_LEN
+
+        cfg, model, _ = self._model()
+        bk = cfg.energon.decode_key_block
+        small = model.init_paged_cache(8)           # 128 rows
+        big = model.init_paged_cache(
+            FILTER_CACHE_AUTO_MIN_LEN // bk)        # threshold rows
+        assert "k_codes" not in small
+        assert "k_codes" in big
+
+    def test_filter_cache_off_overrides_threshold(self):
+        cfg, model, _ = self._model(filter_cache=False,
+                                    filter_cache_min_len=0)
+        assert "k_codes" not in model.init_cache(1, 2048)
+
+    def test_streams_identical_gated_vs_pinned_open(self):
+        """Selection off fresh quantization ≡ selection off resident
+        planes (the PR 2 invariant), so gating the planes away must not
+        change a single sampled token."""
+        def run(**kw):
+            cfg, model, params = self._model(**kw)
+            engine = ServeLoop(model, params, batch_slots=2, max_len=96,
+                               eos_token=cfg.vocab_size - 1,
+                               prefill_chunk=8)
+            rng = np.random.default_rng(7)
+            for uid in range(4):
+                engine.submit(Request(
+                    uid=uid,
+                    prompt=rng.integers(
+                        1, cfg.vocab_size - 1,
+                        size=int(rng.integers(4, 30))).tolist(),
+                    max_new_tokens=10,
+                    temperature=0.8 if uid % 2 else 0.0,
+                ))
+            done = engine.run_until_drained()
+            return {r.uid: r.tokens_out for r in done}, engine.cache
+
+        gated_toks, gated_cache = run()               # auto: no planes
+        pinned_toks, pinned_cache = run(filter_cache_min_len=0)
+        assert "k_codes" not in gated_cache
+        assert "k_codes" in pinned_cache
+        assert gated_toks == pinned_toks
