@@ -12,6 +12,7 @@ tokens/s as separate rows.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import time
 
@@ -457,6 +458,117 @@ def write_prefix_json(path: str = "BENCH_prefix.json", **kw) -> dict:
 
 
 # ---------------------------------------------------------------------------
+# Seeded fault storm: goodput + the fault-invisibility contract
+# (BENCH_chaos.json)
+# ---------------------------------------------------------------------------
+
+# Mixed greedy/stochastic temperatures over the serving trace: the
+# fault-invisibility contract must hold for both sampling regimes.
+CHAOS_TEMPS = (0.0, 0.7)
+
+
+def run_chaos_trace(
+    *,
+    injector=None,
+    batch_slots: int = 4,
+    max_len: int = 528,
+    num_pages: int = 20,
+    new_tokens: int = 16,
+    lengths=SERVING_TRACE,
+):
+    """Drain the mixed-length trace through a paged engine, optionally
+    under a :class:`FaultInjector`. Returns ``(engine, streams)`` where
+    ``streams`` maps uid → token list for *completed* requests only."""
+    cfg, model, params = _serve_model()
+    engine = ServeLoop(
+        model, params, batch_slots=batch_slots, max_len=max_len,
+        eos_token=cfg.vocab_size - 1, prefill_chunk=64,
+        paged=True, num_pages=num_pages, fault_injector=injector,
+        audit=True,
+    )
+    rng = np.random.default_rng(0)
+    for uid, L in enumerate(lengths):
+        engine.submit(Request(
+            uid=uid,
+            prompt=rng.integers(1, cfg.vocab_size - 1, size=int(L)).tolist(),
+            max_new_tokens=new_tokens,
+            temperature=CHAOS_TEMPS[uid % len(CHAOS_TEMPS)],
+        ))
+    done = engine.run_until_drained(max_ticks=50_000)
+    return engine, {r.uid: list(r.tokens_out) for r in done}
+
+
+def run_chaos_bench(*, seed: int = 1234, new_tokens: int = 16) -> dict:
+    """Machine-readable chaos record (BENCH_chaos.json).
+
+    Runs the serving trace clean, then again under a seeded fault storm
+    (allocation denials, retried step exceptions, NaN-poisoned logits,
+    forced preemption storms), and checks the fault-invisibility
+    contract: every surviving request's stream bit-identical to the
+    clean run, zero healthy requests lost, goodput + lifecycle counters
+    reported. The same seed replays the same fault schedule — a red CI
+    run reproduces locally byte-for-byte.
+    """
+    from repro.runtime import FaultInjector, FaultSpec
+
+    spec = FaultSpec(
+        alloc_failure=0.08,
+        step_exception=0.08, step_exception_burst=2,
+        nan_logits=0.004, nan_prefill=0.02,
+        preempt_storm=0.04, preempt_storm_size=2,
+    )
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "seed": seed,
+        "spec": dataclasses.asdict(spec),
+        "trace": {"prompt_lengths": list(SERVING_TRACE),
+                  "new_tokens": new_tokens,
+                  "temperatures": list(CHAOS_TEMPS)},
+    }
+    _, clean_streams = run_chaos_trace(new_tokens=new_tokens)
+
+    injector = FaultInjector(seed=seed, spec=spec)
+    t0 = time.perf_counter()
+    engine, chaos_streams = run_chaos_trace(
+        injector=injector, new_tokens=new_tokens
+    )
+    wall = time.perf_counter() - t0
+    m = engine.metrics
+    survivors = sorted(chaos_streams)
+    faulted = sorted(r.uid for r in engine.terminated)
+    # every request must reach *a* terminal state (drained ⇒ none stuck)
+    lost = sorted(
+        set(range(len(SERVING_TRACE))) - set(survivors) - set(faulted)
+    )
+    goodput_tokens = sum(len(t) for t in chaos_streams.values())
+    record["chaos"] = {
+        "wall_seconds": wall,
+        "completed": len(survivors),
+        "faulted": faulted,
+        "lost_healthy": lost,
+        "goodput_tokens": goodput_tokens,
+        "goodput_tok_s": goodput_tokens / max(wall, 1e-9),
+        "preemptions": m.preemptions,
+        "retries": m.retries,
+        "failed_requests": m.failed_requests,
+        "faults_injected": dict(injector.counts),
+        "total_faults_injected": injector.total_injected,
+    }
+    record["survivors_identical"] = all(
+        chaos_streams[u] == clean_streams[u] for u in survivors
+    )
+    return record
+
+
+def write_chaos_json(path: str = "BENCH_chaos.json", **kw) -> dict:
+    record = run_chaos_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
+
+
+# ---------------------------------------------------------------------------
 # Fused prefill: survivor-only K/V streaming vs XLA re-quantize
 # (BENCH_prefill.json)
 # ---------------------------------------------------------------------------
@@ -626,6 +738,13 @@ if __name__ == "__main__":
                     help="write BENCH_prefill.json (fused Pallas prefill "
                          "traffic vs XLA re-quantize + trace tok/s) to "
                          "this path")
+    ap.add_argument("--chaos-json", default=None,
+                    help="write BENCH_chaos.json (serving trace under a "
+                         "seeded fault storm: goodput, retry/eviction "
+                         "counts, fault-invisibility check) to this path")
+    ap.add_argument("--chaos-seed", type=int, default=1234,
+                    help="FaultInjector seed for --chaos-json (same seed "
+                         "⇒ same fault schedule)")
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -634,7 +753,8 @@ if __name__ == "__main__":
                          "(oversubscribed below slots*blocks)")
     args = ap.parse_args()
     if (args.json is None and args.serving_json is None
-            and args.prefix_json is None and args.prefill_json is None):
+            and args.prefix_json is None and args.prefill_json is None
+            and args.chaos_json is None):
         args.json = "BENCH_decode.json"
     if args.json is not None:
         out = write_decode_json(
@@ -655,4 +775,10 @@ if __name__ == "__main__":
         print(json.dumps(out, indent=2, sort_keys=True))
     if args.prefill_json is not None:
         out = write_prefill_json(args.prefill_json)
+        print(json.dumps(out, indent=2, sort_keys=True))
+    if args.chaos_json is not None:
+        out = write_chaos_json(
+            args.chaos_json, seed=args.chaos_seed,
+            new_tokens=args.new_tokens,
+        )
         print(json.dumps(out, indent=2, sort_keys=True))

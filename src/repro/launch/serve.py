@@ -37,6 +37,19 @@ def main():
     ap.add_argument("--system-prompt-len", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every request (exercises prefix sharing)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request TTL in milliseconds: the engine "
+                         "evicts an expired request at any state "
+                         "(queued, live, preempted-requeued)")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bounded admission queue: submissions past "
+                         "this depth are rejected (QueueFull) and "
+                         "counted as shed")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="run under a seeded FaultInjector (allocation "
+                         "denials, step exceptions, NaN logits, "
+                         "preemption storms) — the same seed replays "
+                         "the same fault schedule")
     args = ap.parse_args()
 
     import jax
@@ -44,12 +57,25 @@ def main():
 
     from repro.configs.registry import get_config, get_smoke_config
     from repro.models import LMModel
-    from repro.runtime import Request, ServeLoop, attention_cache_bytes
+    from repro.runtime import (
+        FaultInjector, FaultSpec, QueueFull, Request, ServeLoop,
+        attention_cache_bytes,
+    )
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
+    injector = None
+    if args.chaos_seed is not None:
+        injector = FaultInjector(
+            seed=args.chaos_seed,
+            spec=FaultSpec(
+                alloc_failure=0.05, step_exception=0.05,
+                nan_logits=0.01, nan_prefill=0.01,
+                preempt_storm=0.05,
+            ),
+        )
     paged = None if not args.unpaged else False
     engine = ServeLoop(
         model, params, batch_slots=args.batch_slots, max_len=args.max_len,
@@ -57,17 +83,26 @@ def main():
         paged=paged, num_pages=args.num_pages,
         prefix_sharing=(False if (args.no_prefix_sharing or args.unpaged)
                         else None),
+        queue_limit=args.queue_limit,
+        default_deadline_s=(
+            args.deadline_ms / 1e3 if args.deadline_ms is not None else None
+        ),
+        fault_injector=injector,
     )
     rng = np.random.default_rng(0)
     system = rng.integers(
         1, cfg.vocab_size - 1, size=args.system_prompt_len
     ).tolist()
+    rejected = 0
     for uid in range(args.requests):
         prompt = system + rng.integers(
             1, cfg.vocab_size - 1, size=args.prompt_len
         ).tolist()
-        engine.submit(Request(uid=uid, prompt=prompt,
-                              max_new_tokens=args.new_tokens))
+        try:
+            engine.submit(Request(uid=uid, prompt=prompt,
+                                  max_new_tokens=args.new_tokens))
+        except QueueFull:
+            rejected += 1
     t0 = time.perf_counter()
     done = engine.run_until_drained()
     dt = time.perf_counter() - t0
@@ -107,6 +142,17 @@ def main():
         print(f"[serve] cache ({cache_mode}): "
               f"{attention_cache_bytes(engine.cache)} B "
               f"({args.batch_slots} slots × {engine.max_len} rows)")
+    evicted = engine.terminated
+    if evicted or rejected or m.retries or injector is not None:
+        print(f"[serve] lifecycle: {len(done)} completed, "
+              f"{m.failed_requests} failed, {m.cancelled_requests} "
+              f"cancelled, {m.expired_requests} expired, "
+              f"{m.shed_requests + rejected} shed/rejected, "
+              f"{m.retries} step retries")
+    if injector is not None:
+        print(f"[serve] chaos (seed {args.chaos_seed}): "
+              f"{injector.total_injected} faults injected "
+              f"{dict(injector.counts)}")
 
 
 if __name__ == "__main__":

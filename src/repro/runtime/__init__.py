@@ -1,11 +1,17 @@
 """Runtime: training loop, serving loop, fault tolerance."""
 
 from repro.runtime.fault_tolerance import (  # noqa: F401
+    FaultInjector,
+    FaultSpec,
     PreemptionHandler,
+    RetryPolicy,
+    StepFailure,
     StragglerMonitor,
+    TransientStepError,
     retry_step,
 )
 from repro.runtime.paged_cache import (  # noqa: F401
+    AllocatorInvariantError,
     PageAllocator,
     PagedLayout,
     attention_cache_bytes,
@@ -13,6 +19,8 @@ from repro.runtime.paged_cache import (  # noqa: F401
 )
 from repro.runtime.serve_loop import (  # noqa: F401
     EngineMetrics,
+    EngineStalled,
+    QueueFull,
     Request,
     ServeLoop,
     make_prefill_step,

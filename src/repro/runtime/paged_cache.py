@@ -56,6 +56,13 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class AllocatorInvariantError(RuntimeError):
+    """A `PageAllocator.check_invariants` self-check failed — allocator
+    bookkeeping has drifted from the block tables (a refcount leak, a
+    second writer, or a page lost between the heap, the cached set and
+    live use)."""
+
+
 @dataclasses.dataclass(frozen=True)
 class PagedLayout:
     """Static geometry of a page pool.
@@ -385,6 +392,61 @@ class PageAllocator:
         self.block_tables[slot, :] = 0
         self.n_blocks[slot] = 0
         return pages
+
+    def check_invariants(self) -> None:
+        """Audit allocator bookkeeping against the block tables; raises
+        :class:`AllocatorInvariantError` on any violation.
+
+        These are the PR 4 allocator-fuzzer checks promoted into a
+        runtime self-check (the serving engine runs it per tick when
+        constructed with ``audit=True``):
+
+        * refcounts equal live table references, exactly;
+        * table entries beyond ``n_blocks`` are compacted to 0;
+        * ``pages_in_use`` counts pages with ``ref >= 1``, and live +
+          heap + cached partitions the pool (no page lost, none twice);
+        * every heap/cached page has refcount 0;
+        * single-writer: a page mapped by >1 table reference, or
+          content-registered, is writable by nobody.
+        """
+        lay = self.layout
+
+        def fail(msg: str) -> None:
+            raise AllocatorInvariantError(msg)
+
+        counts = np.zeros(lay.num_pages, np.int64)
+        for s in range(lay.batch_slots):
+            n = int(self.n_blocks[s])
+            np.add.at(counts, self.block_tables[s, :n], 1)
+            if not (self.block_tables[s, n:] == 0).all():
+                fail(f"slot {s}: table entries beyond n_blocks={n} "
+                     "are not compacted to 0")
+        if not np.array_equal(counts, self.ref):
+            diff = np.nonzero(counts != self.ref)[0].tolist()
+            fail(f"refcount drift on pages {diff}: table refs "
+                 f"{counts[diff].tolist()} vs ref "
+                 f"{self.ref[diff].tolist()}")
+        live = int((self.ref >= 1).sum())
+        if self.pages_in_use != live:
+            fail(f"pages_in_use={self.pages_in_use} but {live} pages "
+                 "have ref >= 1")
+        if live + len(self._free) + len(self._cached) != lay.num_pages:
+            fail(f"pool partition broken: {live} live + "
+                 f"{len(self._free)} free + {len(self._cached)} cached "
+                 f"!= {lay.num_pages}")
+        if set(self._free) & set(self._cached):
+            fail(f"pages both free and cached: "
+                 f"{sorted(set(self._free) & set(self._cached))}")
+        for p in list(self._free) + list(self._cached):
+            if int(self.ref[p]) != 0:
+                fail(f"page {p} on heap/cached with ref={int(self.ref[p])}")
+        for s in range(lay.batch_slots):
+            for j in range(int(self.n_blocks[s])):
+                p = int(self.block_tables[s, j])
+                if (counts[p] > 1 or self.is_registered(p)) \
+                        and self.writable(s, j):
+                    fail(f"second-writer hazard: slot {s} block {j} "
+                         f"writable but page {p} is shared/registered")
 
     def table_device(self) -> jnp.ndarray:
         """The block tables as a device array ``[batch_slots, max_blocks]``."""

@@ -42,6 +42,23 @@ continuous-batching engine:
   tok/s. Paged runs also report preemptions, the page watermark, and
   the prefix cache's hit-rate / pages shared / prefill tokens skipped /
   CoW clones.
+* **Request lifecycle & fault tolerance** (DESIGN.md §7): requests move
+  pending → prefill → decode → {done, cancelled, expired, failed};
+  ``cancel(uid)`` and per-request deadlines evict a request at any
+  state (queued, live, preempted-requeued) and free/deregister its
+  pages correctly under prefix sharing; ``queue_limit`` bounds the
+  admission queue (``QueueFull`` backpressure, optional lowest-priority
+  /youngest-first load shedding); ``run_until_drained`` raises a
+  diagnostic :class:`EngineStalled` on a zero-progress tick instead of
+  spinning to ``max_ticks``. Failures are *contained*: non-finite
+  logits quarantine only the faulted slot (pages freed, terminal
+  ``failed`` state) while healthy slots stream on, and step dispatches
+  retry transient errors under a shared ``RetryPolicy``. A seeded
+  :class:`~repro.runtime.fault_tolerance.FaultInjector` threads chaos
+  through every fault site deterministically, and the
+  **fault-invisibility contract** holds on any injected trace: every
+  surviving request's output stream is bit-identical to the fault-free
+  run (greedy and stochastic, paged and unpaged).
 """
 
 from __future__ import annotations
@@ -58,7 +75,31 @@ from jax.sharding import Mesh
 
 from repro.distributed import sharding as shd
 from repro.models import LMModel
+from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    RetryPolicy,
+    StragglerMonitor,
+    TransientStepError,
+    retry_step,
+)
 from repro.runtime.paged_cache import PageAllocator, PagedLayout
+
+
+class QueueFull(RuntimeError):
+    """The bounded admission queue rejected a submission (backpressure):
+    the queue is at ``queue_limit`` and load shedding either is disabled
+    or found no lower-priority victim to drop."""
+
+
+class EngineStalled(RuntimeError):
+    """The engine made zero progress with work still queued — no token
+    committed, no request admitted or reaching a terminal state — and
+    would otherwise spin to ``max_ticks``. ``uids`` names the stuck
+    requests (queued and live)."""
+
+    def __init__(self, msg: str, uids: List[int]):
+        super().__init__(msg)
+        self.uids = list(uids)
 
 
 @dataclasses.dataclass
@@ -67,9 +108,20 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     temperature: float = 0.0
+    #: load-shedding rank: higher survives; ties shed youngest first
+    priority: int = 0
+    #: TTL in seconds from submission; the engine evicts the request at
+    #: any state once it expires (None = no deadline)
+    deadline_s: Optional[float] = None
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    #: lifecycle: pending → prefill → decode (→ preempted → prefill …)
+    #: → {done, cancelled, expired, failed, shed}
+    state: str = "new"
+    #: diagnostic for terminal failures (e.g. "non-finite logits")
+    error: Optional[str] = None
     _next_input: int = 0
+    _submit_seq: int = -1
     # latency accounting (perf_counter stamps; managed by the engine)
     _t_submit: Optional[float] = None
     _t_admit: Optional[float] = None
@@ -101,6 +153,13 @@ class EngineMetrics:
     pages_shared: int = 0
     prefill_tokens_skipped: int = 0
     cow_clones: int = 0
+    # lifecycle / fault counters (DESIGN.md §7)
+    retries: int = 0
+    stragglers: int = 0
+    failed_requests: int = 0
+    cancelled_requests: int = 0
+    expired_requests: int = 0
+    shed_requests: int = 0
     request_records: List[Dict[str, Any]] = dataclasses.field(
         default_factory=list
     )
@@ -184,6 +243,17 @@ class EngineMetrics:
                 f"{self.prefill_tokens_skipped} prefill tok skipped, "
                 f"{self.cow_clones} CoW clones)"
             )
+        evicted = (self.failed_requests + self.cancelled_requests
+                   + self.expired_requests + self.shed_requests)
+        if evicted or self.retries or self.stragglers:
+            s += (
+                f" | lifecycle: {self.retries} retries, "
+                f"{self.stragglers} stragglers, "
+                f"{self.failed_requests} failed, "
+                f"{self.cancelled_requests} cancelled, "
+                f"{self.expired_requests} expired, "
+                f"{self.shed_requests} shed"
+            )
         return s
 
 
@@ -259,24 +329,39 @@ def sample_tokens(
 @jax.jit
 def _sample_wave(
     logits: jax.Array, temps: jax.Array, keys: jax.Array, mask: jax.Array
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Split-and-sample with per-slot streams: only ``mask`` slots' RNG
     keys advance, so admitting a request never perturbs a live
-    neighbour's stream. ``logits [B, V]``; returns (tokens, new_keys)."""
+    neighbour's stream. ``logits [B, V]``; returns (tokens, new_keys,
+    finite) where ``finite[b]`` is False when slot b's logits contain a
+    NaN/Inf — the per-slot quarantine signal (DESIGN.md §7). The flag is
+    a separate output: healthy slots' token computation is untouched, so
+    adding the guard cannot perturb the bit-identical stream contracts."""
     ks = jax.vmap(jax.random.split)(keys)          # [B, 2, 2]
     new_keys = jnp.where(mask[:, None], ks[:, 0], keys)
-    return sample_tokens(logits, temps, ks[:, 1]), new_keys
+    finite = jnp.all(jnp.isfinite(logits), axis=-1)
+    return sample_tokens(logits, temps, ks[:, 1]), new_keys, finite
 
 
 def _sample_step(
     logits: jax.Array, temps: jax.Array, keys: jax.Array
-) -> Tuple[jax.Array, jax.Array]:
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Decode-tick sampling: `_sample_wave` with every slot active.
-    ``logits [B, 1, V]``; returns (tokens, new_keys)."""
+    ``logits [B, 1, V]``; returns (tokens, new_keys, finite)."""
     return _sample_wave(
         logits[:, -1, :], temps, keys,
         jnp.ones((keys.shape[0],), bool),
     )
+
+
+@jax.jit
+def _poison_logits(logits: jax.Array, mask: jax.Array) -> jax.Array:
+    """Chaos hook: replace ``mask`` slots' logits with NaN (fault
+    injection for the quarantine guard). ``logits [B, ..., V]``,
+    ``mask [B]``. Only traced when an injector actually poisons a tick —
+    fault-free runs never dispatch it."""
+    shape = (-1,) + (1,) * (logits.ndim - 1)
+    return jnp.where(mask.reshape(shape), jnp.nan, logits)
 
 
 @jax.jit
@@ -305,6 +390,13 @@ class ServeLoop:
         paged: Optional[bool] = None,
         num_pages: Optional[int] = None,
         prefix_sharing: Optional[bool] = None,
+        queue_limit: Optional[int] = None,
+        load_shedding: bool = False,
+        default_deadline_s: Optional[float] = None,
+        fault_injector: Optional[FaultInjector] = None,
+        retry_policy: Optional[RetryPolicy] = None,
+        audit: bool = False,
+        stall_patience: Optional[int] = None,
     ):
         self.model = model
         self.params = params
@@ -374,6 +466,35 @@ class ServeLoop:
         self.pending: List[Request] = []
         self.completed: List[Request] = []
         self.metrics = EngineMetrics()
+        # --- lifecycle / fault-tolerance state (DESIGN.md §7) ---------
+        #: bounded admission queue: `submit` raises QueueFull (or sheds
+        #: a lower-priority victim) past this many *queued* requests.
+        #: Preemption requeues bypass the limit — evicting a live slot
+        #: must never be able to fail.
+        self.queue_limit = queue_limit
+        self.load_shedding = bool(load_shedding)
+        self.default_deadline_s = default_deadline_s
+        self._injector = fault_injector
+        self.retry_policy = retry_policy
+        #: per-tick allocator self-check (promotes the allocator fuzzer's
+        #: invariants into the engine; opt-in — O(pool) host work/tick)
+        self.audit = bool(audit)
+        #: consecutive zero-progress ticks tolerated before
+        #: `run_until_drained` raises EngineStalled. Fault-free, a
+        #: zero-progress tick is provably permanent (the deterministic
+        #: allocator re-decides identically), so 1 suffices; under
+        #: injection a denied allocation is recoverable next tick, so
+        #: the default widens.
+        self.stall_patience = (
+            stall_patience if stall_patience is not None
+            else (1 if fault_injector is None else 32)
+        )
+        self._submit_seq = itertools.count()
+        #: requests that reached a non-`done` terminal state
+        #: (cancelled / expired / failed / shed) — kept separate from
+        #: `completed` so drain semantics are unchanged.
+        self.terminated: List[Request] = []
+        self.straggler = StragglerMonitor()
 
     @property
     def ticks(self) -> int:
@@ -395,7 +516,165 @@ class ServeLoop:
             )
         if req._t_submit is None:
             req._t_submit = time.perf_counter()
+        if req.deadline_s is None:
+            req.deadline_s = self.default_deadline_s
+        req._submit_seq = next(self._submit_seq)
+        req.state = "pending"
+        if (
+            self.queue_limit is not None
+            and len(self.pending) >= self.queue_limit
+        ):
+            # Backpressure. With shedding on, the victim is the queued
+            # request that least deserves its place: lowest priority,
+            # ties broken youngest-first. A newcomer that does not
+            # outrank the victim *is* the youngest of its class, so it
+            # is the one shed — rejected with QueueFull.
+            victim = None
+            if self.load_shedding and self.pending:
+                victim = min(
+                    self.pending,
+                    key=lambda r: (r.priority, -r._submit_seq),
+                )
+            if victim is None or victim.priority >= req.priority:
+                raise QueueFull(
+                    f"admission queue at limit ({self.queue_limit}); "
+                    f"request uid={req.uid} rejected"
+                )
+            self.pending.remove(victim)
+            self._finish_terminal(
+                victim, "shed",
+                f"load-shed for higher-priority uid={req.uid}",
+            )
         self.pending.append(req)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request at any state — queued, live (prefilling or
+        decoding), or preempted-and-requeued. Its pages are freed and
+        deregistered under the allocator's normal rules (shared pages
+        drop a reference, content-registered pages retire to the cached
+        set, the prefix trie stays attachable), so survivors' streams
+        are untouched. Returns False when ``uid`` is unknown or already
+        terminal."""
+        for req in self.pending:
+            if req.uid == uid:
+                self.pending.remove(req)
+                self._finish_terminal(req, "cancelled")
+                return True
+        for i, req in enumerate(self.slots):
+            if req is not None and req.uid == uid:
+                self._evict_slot(i, "cancelled")
+                return True
+        return False
+
+    # --- lifecycle internals -------------------------------------------
+    def _finish_terminal(
+        self, req: Request, state: str, error: Optional[str] = None
+    ):
+        """Move a request to a non-`done` terminal state. ``done`` stays
+        False — it means "completed normally"; ``state`` is the
+        authoritative lifecycle field."""
+        req.state = state
+        if error is not None:
+            req.error = error
+        self.terminated.append(req)
+        counter = {
+            "failed": "failed_requests",
+            "cancelled": "cancelled_requests",
+            "expired": "expired_requests",
+            "shed": "shed_requests",
+        }[state]
+        setattr(self.metrics, counter, getattr(self.metrics, counter) + 1)
+
+    def _evict_slot(self, i: int, state: str, error: Optional[str] = None):
+        """Terminal eviction of a live slot (cancel / expire /
+        quarantine): frees its pages eagerly, like completion does."""
+        req = self.slots[i]
+        self._release_slot(i)
+        self._finish_terminal(req, state, error)
+
+    def _expire_deadlines(self):
+        """Evict every request whose TTL has lapsed — at any state.
+        Queued requests (including preempted-requeued ones, whose clock
+        never reset) are dropped in place; live slots are evicted with
+        their pages freed."""
+        now = time.perf_counter()
+
+        def expired(req: Request) -> bool:
+            return (
+                req.deadline_s is not None
+                and req._t_submit is not None
+                and now - req._t_submit > req.deadline_s
+            )
+
+        for req in [r for r in self.pending if expired(r)]:
+            self.pending.remove(req)
+            self._finish_terminal(req, "expired", "deadline exceeded")
+        for i in range(self.batch_slots):
+            if self.slots[i] is not None and expired(self.slots[i]):
+                self._evict_slot(i, "expired", "deadline exceeded")
+
+    def _dispatch(self, fn, *args):
+        """One jitted step dispatch under the engine's RetryPolicy.
+
+        The injector's fault site sits *before* the jitted call: an
+        injected :class:`TransientStepError` raises while the donated
+        cache buffer is still intact, so a retry re-dispatches against
+        unchanged state and the fault is invisible to outputs. (A fault
+        *after* donation could not be retried this way — the old cache
+        is gone.) Fault-free engines with no explicit policy skip the
+        wrapper entirely."""
+        if self._injector is None and self.retry_policy is None:
+            return fn(*args)
+        first = [True]
+
+        def attempt():
+            fresh, first[0] = first[0], False
+            if self._injector is not None and \
+                    self._injector.step_fault(fresh):
+                raise TransientStepError("injected step fault")
+            return fn(*args)
+
+        def note(attempt_no, exc):
+            self.metrics.retries += 1
+
+        policy = self.retry_policy or RetryPolicy(base_delay=0.0)
+        return retry_step(attempt, policy=policy, on_retry=note)
+
+    def _ensure_capacity_inj(self, slot: int, n_tokens: int):
+        """``allocator.ensure_capacity`` with the injector's allocation
+        fault site. Consulted only when the call would actually allocate
+        (denying a no-op would fabricate evictions out of thin air); an
+        injected denial surfaces exactly like pool exhaustion — wait at
+        admission, preempt at decode — so recovery exercises the real
+        paths."""
+        if (
+            self._injector is not None
+            and self.layout.blocks_for(max(n_tokens, 1))
+                > int(self.allocator.n_blocks[slot])
+            and self._injector.alloc_failure()
+        ):
+            return None
+        return self.allocator.ensure_capacity(slot, n_tokens)
+
+    def _injected_preempt_storm(self):
+        """Chaos site: force-preempt the N youngest live slots this
+        tick. Recovery is the engine's ordinary preemption machinery —
+        requeue at the head, re-prefill, resume the RNG stream — so the
+        storm must be invisible to every stream."""
+        live = [
+            i for i in range(self.batch_slots) if self.slots[i] is not None
+        ]
+        n = self._injector.preempt_storm(len(live))
+        for _ in range(n):
+            victim = max(
+                (j for j in range(self.batch_slots)
+                 if self.slots[j] is not None),
+                key=lambda j: self._slot_order[j],
+                default=None,
+            )
+            if victim is None:
+                break
+            self._preempt(victim)
 
     def _replayed_key(self, uid: int, n_sampled: int) -> jax.Array:
         """Per-request RNG stream, deterministic in (uid, #samples):
@@ -507,7 +786,7 @@ class ServeLoop:
                         )
                 pages = None
                 if clone_src is None or pair is not None:
-                    pages = self.allocator.ensure_capacity(
+                    pages = self._ensure_capacity_inj(
                         i, max(len(seq_tokens), 1)
                     )
                 if pages is None:
@@ -527,6 +806,7 @@ class ServeLoop:
                     self.metrics.prefill_tokens_skipped += skip
             self.pending.pop(0)
             self.slots[i] = req
+            req.state = "prefill"
             self._slot_order[i] = next(self._admit_seq)
             if req._t_admit is None:
                 req._t_admit = now
@@ -614,7 +894,8 @@ class ServeLoop:
             }
             if bt is not None:
                 inputs["block_table"] = bt
-            logits, self.cache = self.prefill_fn(
+            logits, self.cache = self._dispatch(
+                self.prefill_fn,
                 self.params, self.cache, inputs, self.cache_index,
             )
             self.metrics.prefill_dispatches += 1
@@ -634,30 +915,55 @@ class ServeLoop:
             self._lengths[i] = len(seq)
             self.metrics.prefill_tokens += len(seq) - skip
         self.metrics.prefill_time += time.perf_counter() - t0
+        toks = None
+        if last_logits:
+            # sample every *fresh* admitted slot's first token in one
+            # call
+            zero_row = jnp.zeros_like(next(iter(last_logits.values())))
+            logits_mat = jnp.stack([
+                last_logits.get(i, zero_row)
+                for i in range(self.batch_slots)
+            ])
+            mask = np.zeros((self.batch_slots,), bool)
+            for i in last_logits:
+                mask[i] = True
+            if self._injector is not None:
+                doomed = self._injector.poison_prefill([
+                    req.uid for _, req, _, resumed, _ in admitted
+                    if not resumed
+                ])
+                if doomed:
+                    pmask = np.zeros((self.batch_slots,), bool)
+                    for i, req, _, resumed, _ in admitted:
+                        if not resumed and req.uid in doomed:
+                            pmask[i] = True
+                    logits_mat = _poison_logits(
+                        logits_mat, jnp.asarray(pmask)
+                    )
+            toks, self.slot_keys, finite = _sample_wave(
+                logits_mat, jnp.asarray(self._temps), self.slot_keys,
+                jnp.asarray(mask),
+            )
+            toks, finite = jax.device_get((toks, finite))
+            # quarantine *before* prefix registration: a faulted slot's
+            # pages must never enter the trie for other requests to
+            # attach. Idle rows are zero (finite) so only real fresh
+            # slots can trip the guard.
+            for i, req, _, resumed, _ in admitted:
+                if not resumed and not bool(finite[i]):
+                    self._evict_slot(i, "failed", "non-finite logits")
         if self.paged and self.sharing:
             # content-address every page the wave filled. Registration
             # happens only now — mid-wave, a sharer could have read a
             # page its writer had not finished.
             for i, req, seq, _, _ in admitted:
-                self.allocator.register_prefix(i, seq)
-        if not last_logits:
-            return
-        # sample every *fresh* admitted slot's first token in one call
-        zero_row = jnp.zeros_like(next(iter(last_logits.values())))
-        logits_mat = jnp.stack([
-            last_logits.get(i, zero_row) for i in range(self.batch_slots)
-        ])
-        mask = np.zeros((self.batch_slots,), bool)
-        for i in last_logits:
-            mask[i] = True
-        toks, self.slot_keys = _sample_wave(
-            logits_mat, jnp.asarray(self._temps), self.slot_keys,
-            jnp.asarray(mask),
-        )
-        toks = jax.device_get(toks)
+                if self.slots[i] is req:
+                    self.allocator.register_prefix(i, seq)
         for i, req, _, resumed, _ in admitted:
-            if not resumed:
+            if not resumed and self.slots[i] is req:
                 self._commit_token(i, req, int(toks[i]))
+            if self.slots[i] is req:
+                req.state = "decode"
 
     def _sequential_prefill_wave(self, admitted):
         """Token-by-token admission for models without a chunked-prefill
@@ -683,7 +989,8 @@ class ServeLoop:
             }
             if self.paged:
                 inputs["block_table"] = self._device_block_table()
-            logits, self.cache = self.step_fn(
+            logits, self.cache = self._dispatch(
+                self.step_fn,
                 self.params, self.cache, inputs, self.cache_index,
             )
             self.cache_index = self.cache_index + jnp.asarray(
@@ -697,6 +1004,7 @@ class ServeLoop:
         self.metrics.prefill_time += time.perf_counter() - t0
         for i, req in admitted:
             req._next_input = req.prompt[-1] if req.prompt else self.eos
+            req.state = "decode"
 
     def _release_slot(self, i: int):
         """Clear slot state; in paged mode its pages free *eagerly*."""
@@ -714,6 +1022,9 @@ class ServeLoop:
         continues — stream and RNG state are preserved exactly."""
         req = self.slots[victim]
         self._release_slot(victim)
+        req.state = "preempted"
+        # requeue bypasses the queue limit: evicting a live slot must
+        # never be able to fail.
         self.pending.insert(0, req)
         self.metrics.preemptions += 1
 
@@ -730,7 +1041,7 @@ class ServeLoop:
         fresh: List[int] = []
         for i in live:
             while self.slots[i] is not None:
-                got = self.allocator.ensure_capacity(
+                got = self._ensure_capacity_inj(
                     i, int(self._lengths[i]) + 1
                 )
                 if got is not None:
@@ -781,21 +1092,39 @@ class ServeLoop:
         )
         if tok == self.eos or len(req.tokens_out) >= limit:
             req.done = True
+            req.state = "done"
             self.completed.append(req)
             self._release_slot(i)
             self.metrics.record_request(req)
 
+    def _audit_tick(self):
+        """Optional per-tick allocator self-check: the PR 4 fuzzer's
+        invariants (refcounts == live table refs, single-writer,
+        live + free + cached == pool) promoted into the engine. Raises
+        :class:`~repro.runtime.paged_cache.AllocatorInvariantError` at
+        the tick that corrupts state, not at the test that trips over
+        it later."""
+        if self.audit and self.paged:
+            self.allocator.check_invariants()
+
     def tick(self):
-        """One engine iteration: admit, decode one token for all slots."""
+        """One engine iteration: expire deadlines, admit, decode one
+        token for all live slots (quarantining any slot whose logits go
+        non-finite)."""
+        self._expire_deadlines()
+        if self._injector is not None:
+            self._injected_preempt_storm()
         self._admit()
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
+            self._audit_tick()
             return
         if self.paged:
             live = self._ensure_decode_capacity(live)
             self.metrics.peak_pages_in_use = \
                 self.allocator.peak_pages_in_use
             if not live:
+                self._audit_tick()
                 return
         t0 = time.perf_counter()
         tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
@@ -808,7 +1137,8 @@ class ServeLoop:
         }
         if self.paged:
             inputs["block_table"] = self._device_block_table()
-        logits, self.cache = self.step_fn(
+        logits, self.cache = self._dispatch(
+            self.step_fn,
             self.params, self.cache, inputs, self.cache_index,
         )
         self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
@@ -832,18 +1162,109 @@ class ServeLoop:
                     self.allocator.register_prefix(
                         i, req.prompt + req.tokens_out
                     )
-        next_tokens, self.slot_keys = _sample_step(
+        if self._injector is not None:
+            doomed = self._injector.poison_decode(
+                [self.slots[i].uid for i in live]
+            )
+            if doomed:
+                pmask = np.zeros((self.batch_slots,), bool)
+                for i in live:
+                    if self.slots[i].uid in doomed:
+                        pmask[i] = True
+                logits = _poison_logits(logits, jnp.asarray(pmask))
+        next_tokens, self.slot_keys, finite = _sample_step(
             logits, jnp.asarray(self._temps), self.slot_keys
         )
-        next_tokens = jax.device_get(next_tokens)
+        next_tokens, finite = jax.device_get((next_tokens, finite))
+        if self._injector is not None:
+            # injected straggler: the sleep lands inside decode_time so
+            # the StragglerMonitor sees it like a real slow step.
+            delay = self._injector.step_delay()
+            if delay:
+                time.sleep(delay)
         self.metrics.decode_dispatches += 1
-        self.metrics.decode_time += time.perf_counter() - t0
+        elapsed = time.perf_counter() - t0
+        self.metrics.decode_time += elapsed
+        if self.straggler.record(elapsed):
+            self.metrics.stragglers += 1
         for i in live:
+            req = self.slots[i]
+            if not bool(finite[i]):
+                # quarantine: only the faulted slot dies — its pages
+                # free under the allocator's normal rules, its
+                # neighbours' committed tokens are untouched.
+                self._evict_slot(i, "failed", "non-finite logits")
+                continue
             self.metrics.decode_tokens += 1
-            self._commit_token(i, self.slots[i], int(next_tokens[i]))
+            self._commit_token(i, req, int(next_tokens[i]))
         self.metrics.ticks += 1
+        self._audit_tick()
 
-    def run_until_drained(self, max_ticks: int = 10_000):
-        while (self.pending or any(self.slots)) and self.ticks < max_ticks:
+    # --- draining ------------------------------------------------------
+    def _has_work(self) -> bool:
+        return bool(self.pending) or any(
+            s is not None for s in self.slots
+        )
+
+    def _progress_marker(self) -> Tuple[int, ...]:
+        """Monotone progress fingerprint for stall detection: any token
+        computed, any request reaching a terminal state, and any change
+        in queue depth (an admission or an eviction) all count."""
+        return (
+            self.metrics.prefill_tokens,
+            self.metrics.decode_tokens,
+            self.metrics.preemptions,
+            len(self.completed),
+            len(self.terminated),
+            len(self.pending),
+        )
+
+    def _stuck_uids(self) -> List[int]:
+        return sorted(
+            [r.uid for r in self.pending]
+            + [r.uid for r in self.slots if r is not None]
+        )
+
+    def run_until_drained(
+        self, max_ticks: int = 10_000, *, raise_on_stall: bool = True
+    ):
+        """Tick until every request reaches a terminal state.
+
+        A tick that makes zero progress (no token, no admission, no
+        terminal transition) with work still queued is diagnosed instead
+        of spun on: fault-free, the engine's decisions are deterministic
+        in its state, so a zero-progress tick would repeat forever —
+        e.g. a prompt needing more free pages than the pool can ever
+        offer while nothing is live. After ``stall_patience``
+        consecutive zero-progress ticks (injected faults can make a
+        single one recoverable), or when ``max_ticks`` is exhausted with
+        work remaining, :class:`EngineStalled` names the stuck uids —
+        no more silently returned partial results. ``raise_on_stall=
+        False`` restores the old return-partial behavior for callers
+        that inspect state themselves."""
+        stagnant = 0
+        for _ in range(max_ticks):
+            if not self._has_work():
+                return self.completed
+            before = self._progress_marker()
             self.tick()
+            if self._progress_marker() == before:
+                stagnant += 1
+                if stagnant > self.stall_patience:
+                    if raise_on_stall:
+                        raise EngineStalled(
+                            f"zero progress over {stagnant} consecutive "
+                            f"ticks with work queued; stuck uids: "
+                            f"{self._stuck_uids()}",
+                            self._stuck_uids(),
+                        )
+                    return self.completed
+            else:
+                stagnant = 0
+        if self._has_work() and raise_on_stall:
+            raise EngineStalled(
+                f"max_ticks={max_ticks} exhausted with work queued; "
+                f"stuck uids: {self._stuck_uids()}",
+                self._stuck_uids(),
+            )
         return self.completed

@@ -23,6 +23,7 @@ from repro.models import LMModel
 from repro.optim import adamw
 from repro.runtime.fault_tolerance import (
     PreemptionHandler,
+    RetryPolicy,
     StragglerMonitor,
     retry_step,
 )
@@ -39,6 +40,10 @@ class TrainConfig:
     optimizer: adamw.AdamWConfig = dataclasses.field(
         default_factory=adamw.AdamWConfig
     )
+    #: shared serving+training retry primitive: the train step retries
+    #: transient failures under the same policy type ServeLoop uses for
+    #: its dispatches (defaults match the old retry_step constants)
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
 
 
 def make_train_step(
@@ -140,7 +145,8 @@ class TrainLoop:
             batch = next(self.dataset)
             t0 = time.perf_counter()
             params, opt_state, metrics = retry_step(
-                self.step_fn, params, opt_state, batch
+                self.step_fn, params, opt_state, batch,
+                policy=self.cfg.retry,
             )
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0

@@ -1,0 +1,396 @@
+"""Fault-tolerant serving runtime: request lifecycle, backpressure,
+stall diagnostics, failure containment, and the fault-invisibility
+contract (DESIGN.md §7).
+
+The contract under test joins the bit-identical family (paged ≡
+unpaged, shared ≡ unshared, preempted ≡ ample): on any seeded
+injected-fault trace — allocation denials, retried step exceptions,
+NaN-poisoned logits, forced preemption storms — every *surviving*
+request's output stream must be bit-identical to the fault-free run,
+greedy and stochastic, and no healthy request may be lost. Engines run
+with ``audit=True`` so the per-tick allocator self-check (the PR 4
+fuzzer's invariants promoted into the runtime) guards every schedule.
+"""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - optional dev dep
+    from _hypothesis_fallback import given, settings, st
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+from repro.models import LMModel
+from repro.runtime import (
+    EngineStalled,
+    FaultInjector,
+    FaultSpec,
+    QueueFull,
+    Request,
+    ServeLoop,
+)
+from repro.runtime.fault_tolerance import StepFailure, TransientStepError
+
+
+def _model():
+    cfg = ModelConfig(
+        name="fault-test", family="dense", num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+        dtype="float32", remat="none",
+        energon=EnergonConfig(
+            impl="mpmrf_block", pruning_ratio=2.0, query_block=8,
+            key_block=16, decode_key_block=16, min_prune_layer=1,
+            filter_cache_min_len=0,
+        ),
+    )
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mt():
+    return _model()
+
+
+def _trace(n_req=5):
+    """Overlapping-prefix mixed-temperature trace (two prefix families,
+    ragged suffixes, greedy and stochastic requests)."""
+    trace = []
+    for uid in range(n_req):
+        fam = uid % 2
+        prefix = [(fam * 43 + j * 13) % 61 + 1 for j in range(20)]
+        suffix = [(uid * 29 + j * 7) % 61 + 1 for j in range((uid * 5) % 11)]
+        trace.append({
+            "uid": uid, "prompt": prefix + suffix,
+            "max_new_tokens": 4 + (uid % 4),
+            "temperature": 0.8 if uid % 2 else 0.0,
+        })
+    return trace
+
+
+def _engine(mt, **kw):
+    cfg, model, params = mt
+    kw.setdefault("batch_slots", 2)
+    kw.setdefault("max_len", 96)
+    kw.setdefault("prefill_chunk", 8)
+    kw.setdefault("audit", True)
+    return ServeLoop(model, params, eos_token=cfg.vocab_size - 1, **kw)
+
+
+def _drain(mt, trace, **kw):
+    e = _engine(mt, **kw)
+    for r in trace:
+        e.submit(Request(**r))
+    done = e.run_until_drained(max_ticks=20_000)
+    return e, {r.uid: list(r.tokens_out) for r in done}
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: states, cancel, deadlines, backpressure
+# ---------------------------------------------------------------------------
+
+
+class TestRequestLifecycle:
+    def test_state_machine_happy_path(self, mt):
+        e = _engine(mt)
+        req = Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=3)
+        assert req.state == "new"
+        e.submit(req)
+        assert req.state == "pending"
+        e.tick()
+        assert req.state == "decode"  # prefill happened inside the tick
+        e.run_until_drained()
+        assert req.state == "done" and req.done
+
+    def test_cancel_pending_and_live(self, mt):
+        e = _engine(mt)
+        trace = _trace(4)
+        for r in trace:
+            e.submit(Request(**r))
+        e.tick()
+        live_uid = next(s.uid for s in e.slots if s is not None)
+        queued_uid = e.pending[-1].uid
+        assert e.cancel(live_uid)
+        assert e.cancel(queued_uid)
+        assert not e.cancel(live_uid)      # already terminal
+        assert not e.cancel(999)           # unknown
+        done = e.run_until_drained()
+        got = {r.uid for r in done}
+        assert live_uid not in got and queued_uid not in got
+        assert got == {r["uid"] for r in trace} - {live_uid, queued_uid}
+        states = {r.uid: r.state for r in e.terminated}
+        assert states == {live_uid: "cancelled", queued_uid: "cancelled"}
+        assert e.metrics.cancelled_requests == 2
+        assert e.allocator.pages_in_use == 0
+
+    def test_cancel_is_invisible_to_survivors(self, mt):
+        trace = _trace(4)
+        _, base = _drain(mt, trace)
+        e = _engine(mt)
+        for r in trace:
+            e.submit(Request(**r))
+        e.tick()
+        victim = next(s.uid for s in e.slots if s is not None)
+        e.cancel(victim)
+        e.run_until_drained()
+        for r in e.completed:
+            assert list(r.tokens_out) == base[r.uid]
+
+    def test_deadline_expires_pending(self, mt):
+        e = _engine(mt, default_deadline_s=0.0)
+        e.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=4))
+        done = e.run_until_drained()
+        assert done == []
+        assert e.terminated[0].state == "expired"
+        assert e.metrics.expired_requests == 1
+
+    def test_deadline_evicts_live_slot(self, mt):
+        e = _engine(mt)
+        e.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=64,
+                         deadline_s=0.05))
+        e.submit(Request(uid=1, prompt=[5, 6, 7], max_new_tokens=3))
+        e.tick()
+        assert any(s is not None and s.uid == 0 for s in e.slots)
+        time.sleep(0.06)
+        done = e.run_until_drained()
+        assert {r.uid for r in done} == {1}
+        assert e.terminated[0].uid == 0
+        assert e.terminated[0].state == "expired"
+        assert e.allocator.pages_in_use == 0
+
+    def test_per_request_deadline_overrides_default(self, mt):
+        e = _engine(mt, default_deadline_s=0.0)
+        e.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2,
+                         deadline_s=60.0))
+        done = e.run_until_drained()
+        assert [r.uid for r in done] == [0]
+
+    def test_queue_full_without_shedding(self, mt):
+        e = _engine(mt, queue_limit=2)
+        e.submit(Request(uid=0, prompt=[1, 2], max_new_tokens=2))
+        e.submit(Request(uid=1, prompt=[3, 4], max_new_tokens=2))
+        with pytest.raises(QueueFull):
+            e.submit(Request(uid=2, prompt=[5, 6], max_new_tokens=2))
+        # the rejected request never entered any engine list
+        assert len(e.pending) == 2 and not e.terminated
+
+    def test_load_shedding_prefers_lowest_priority_youngest(self, mt):
+        e = _engine(mt, queue_limit=3, load_shedding=True)
+        e.submit(Request(uid=0, prompt=[1, 2], priority=1))
+        e.submit(Request(uid=1, prompt=[3, 4], priority=0))
+        e.submit(Request(uid=2, prompt=[5, 6], priority=0))
+        # victim = lowest priority, youngest of the tie → uid 2
+        e.submit(Request(uid=3, prompt=[7, 8], priority=5))
+        assert [r.uid for r in e.pending] == [0, 1, 3]
+        assert e.terminated[0].uid == 2
+        assert e.terminated[0].state == "shed"
+        assert e.metrics.shed_requests == 1
+        # a newcomer that outranks nobody is itself rejected
+        with pytest.raises(QueueFull):
+            e.submit(Request(uid=4, prompt=[9], priority=0))
+
+    def test_preemption_requeue_bypasses_queue_limit(self, mt):
+        e = _engine(mt, queue_limit=1)
+        e.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=8))
+        e.tick()
+        e.submit(Request(uid=1, prompt=[5, 6], max_new_tokens=2))
+        victim = next(i for i, s in enumerate(e.slots) if s is not None)
+        e._preempt(victim)  # queue already at limit — must not raise
+        assert len(e.pending) == 2
+        assert e.pending[0].state == "preempted"
+        done = e.run_until_drained()
+        assert {r.uid for r in done} == {0, 1}
+
+    def test_lifecycle_counters_in_summary(self, mt):
+        e = _engine(mt)
+        e.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=2))
+        e.cancel(0)
+        s = e.metrics.summary()
+        assert "lifecycle:" in s and "1 cancelled" in s
+
+
+# ---------------------------------------------------------------------------
+# Stall diagnostics
+# ---------------------------------------------------------------------------
+
+
+class TestStallDetection:
+    def test_permanent_alloc_denial_raises_named_stall(self, mt):
+        inj = FaultInjector(seed=0, spec=FaultSpec(alloc_failure=1.0))
+        e = _engine(mt, fault_injector=inj, stall_patience=3)
+        e.submit(Request(uid=7, prompt=[1, 2, 3, 4], max_new_tokens=4))
+        with pytest.raises(EngineStalled) as exc:
+            e.run_until_drained()
+        assert exc.value.uids == [7]
+        assert "7" in str(exc.value)
+
+    def test_max_ticks_exhaustion_raises(self, mt):
+        e = _engine(mt)
+        for r in _trace(5):
+            e.submit(Request(**r))
+        with pytest.raises(EngineStalled) as exc:
+            e.run_until_drained(max_ticks=2)
+        assert exc.value.uids  # names everything still in flight
+
+    def test_raise_on_stall_false_returns_partial(self, mt):
+        e = _engine(mt)
+        for r in _trace(5):
+            e.submit(Request(**r))
+        done = e.run_until_drained(max_ticks=2, raise_on_stall=False)
+        assert isinstance(done, list)
+
+    def test_clean_trace_never_trips_detector(self, mt):
+        # fault-free default patience is the tightest (1): a full drain
+        # across admission waves, preemptions and completions must not
+        # false-positive
+        e = _engine(mt, num_pages=8)
+        for r in _trace(6):
+            e.submit(Request(**r))
+        done = e.run_until_drained()
+        assert len(done) == 6
+
+
+# ---------------------------------------------------------------------------
+# Failure containment: NaN quarantine, bounded retry
+# ---------------------------------------------------------------------------
+
+
+class TestFailureContainment:
+    def test_decode_nan_quarantines_only_faulted_slot(self, mt):
+        trace = _trace(4)
+        _, base = _drain(mt, trace)
+        # high decode-poison rate: some request dies quickly
+        inj = FaultInjector(seed=5, spec=FaultSpec(nan_logits=0.12))
+        e, streams = _drain(mt, trace, fault_injector=inj)
+        assert e.metrics.failed_requests >= 1
+        failed = {r.uid for r in e.terminated}
+        for r in e.terminated:
+            assert r.state == "failed"
+            assert r.error == "non-finite logits"
+        # every survivor streamed on bit-identically
+        assert set(streams) == {r["uid"] for r in trace} - failed
+        for uid, toks in streams.items():
+            assert toks == base[uid]
+        assert e.allocator.pages_in_use == 0
+
+    def test_prefill_nan_quarantines_fresh_admission(self, mt):
+        trace = _trace(4)
+        _, base = _drain(mt, trace)
+        inj = FaultInjector(seed=3, spec=FaultSpec(nan_prefill=0.7))
+        e, streams = _drain(mt, trace, fault_injector=inj)
+        assert e.metrics.failed_requests >= 1
+        for uid, toks in streams.items():
+            assert toks == base[uid]
+
+    def test_injected_step_faults_are_retried_invisibly(self, mt):
+        trace = _trace(4)
+        _, base = _drain(mt, trace)
+        inj = FaultInjector(
+            seed=11, spec=FaultSpec(step_exception=0.3,
+                                    step_exception_burst=2),
+        )
+        e, streams = _drain(mt, trace, fault_injector=inj)
+        assert inj.counts["step_exception"] > 0
+        assert e.metrics.retries > 0
+        assert streams == base  # nobody lost, nothing perturbed
+        assert e.metrics.failed_requests == 0
+
+    def test_retry_budget_exhaustion_surfaces_step_failure(self, mt):
+        from repro.runtime import RetryPolicy
+
+        inj = FaultInjector(
+            seed=0, spec=FaultSpec(step_exception=1.0,
+                                   step_exception_burst=1),
+        )
+        e = _engine(mt, fault_injector=inj,
+                    retry_policy=RetryPolicy(max_retries=0, base_delay=0.0))
+        e.submit(Request(uid=0, prompt=[1, 2, 3, 4], max_new_tokens=2))
+        with pytest.raises(StepFailure):
+            e.run_until_drained()
+
+    def test_transient_step_error_is_retriable(self):
+        assert issubclass(TransientStepError, RuntimeError)
+
+    def test_injected_delay_drains_clean(self, mt):
+        trace = _trace(3)
+        _, base = _drain(mt, trace)
+        inj = FaultInjector(
+            seed=2, spec=FaultSpec(delay=0.5, delay_seconds=0.002),
+        )
+        e, streams = _drain(mt, trace, fault_injector=inj)
+        assert inj.counts["delay"] > 0
+        assert streams == base
+
+
+# ---------------------------------------------------------------------------
+# The fault-invisibility contract (differential chaos harness)
+# ---------------------------------------------------------------------------
+
+_CHAOS_SPEC = FaultSpec(
+    alloc_failure=0.1, step_exception=0.1, step_exception_burst=2,
+    nan_logits=0.01, nan_prefill=0.1, preempt_storm=0.1,
+    preempt_storm_size=2,
+)
+
+
+class TestFaultInvisibility:
+    """On any seeded fault trace, survivors' streams are bit-identical
+    to the fault-free paged AND unpaged runs, and every request reaches
+    a terminal state (zero lost)."""
+
+    _clean = None
+
+    @classmethod
+    def _baselines(cls, mt):
+        if cls._clean is None:
+            trace = _trace(5)
+            _, paged = _drain(mt, trace, num_pages=8)
+            _, unpaged = _drain(mt, trace, paged=False)
+            assert paged == unpaged
+            cls._clean = paged
+        return cls._clean
+
+    def _assert_invisible(self, mt, seed):
+        trace = _trace(5)
+        clean = self._baselines(mt)
+        inj = FaultInjector(seed=seed, spec=_CHAOS_SPEC)
+        e, streams = _drain(mt, trace, num_pages=8, fault_injector=inj)
+        survivors = set(streams)
+        faulted = {r.uid for r in e.terminated}
+        # zero lost healthy: terminal states partition the trace
+        assert survivors | faulted == {r["uid"] for r in trace}
+        assert not survivors & faulted
+        for uid in survivors:
+            assert streams[uid] == clean[uid], (
+                f"uid {uid} diverged under chaos seed {seed}"
+            )
+        assert e.allocator.pages_in_use == 0
+
+    def test_fault_invisibility_fixed_seeds(self, mt):
+        """Fixed-seed instances of the chaos property — run in every
+        environment, hypothesis installed or not."""
+        for seed in (0, 1, 2026):
+            self._assert_invisible(mt, seed)
+
+    @settings(max_examples=5, deadline=None)
+    @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+    def test_fault_invisibility_fuzz(self, mt, seed):
+        self._assert_invisible(mt, seed)
+
+    def test_chaos_schedule_replays_exactly(self, mt):
+        trace = _trace(5)
+
+        def run(seed):
+            inj = FaultInjector(seed=seed, spec=_CHAOS_SPEC)
+            e, streams = _drain(mt, trace, num_pages=8,
+                                fault_injector=inj)
+            return (streams, sorted(r.uid for r in e.terminated),
+                    dict(inj.counts), e.metrics.preemptions)
+
+        assert run(99) == run(99)

@@ -644,26 +644,10 @@ class _AllocatorFuzzDriver:
             self.tokens[slot] = None
 
     def check_invariants(self):
-        a = self.a
-        lay = a.layout
-        counts = np.zeros(lay.num_pages, np.int64)
-        for s in range(lay.batch_slots):
-            n = int(a.n_blocks[s])
-            for j in range(n):
-                counts[int(a.block_tables[s, j])] += 1
-            assert (a.block_tables[s, n:] == 0).all()
-        np.testing.assert_array_equal(counts, a.ref)
-        live = int((a.ref >= 1).sum())
-        assert a.pages_in_use == live
-        assert live + len(a._free) + a.cached_pages == lay.num_pages
-        assert not set(a._free) & set(a._cached)
-        for p in list(a._free) + list(a._cached):
-            assert int(a.ref[p]) == 0
-        for s in range(lay.batch_slots):
-            for j in range(int(a.n_blocks[s])):
-                p = int(a.block_tables[s, j])
-                if counts[p] > 1 or a.is_registered(p):
-                    assert not a.writable(s, j)
+        # the allocator's own promoted self-check — the same auditor
+        # the serving engine runs per tick under ``audit=True`` — so
+        # the fuzzer and the runtime enforce one set of invariants
+        self.a.check_invariants()
 
     def run(self, ops):
         for code, slot, base, amt in ops:
@@ -966,6 +950,120 @@ class TestPrefixSharingEngine:
             ServeLoop(model, params, batch_slots=2, max_len=64,
                       eos_token=cfg.vocab_size - 1, paged=False,
                       prefix_sharing=True)
+
+
+class TestCancellationPrefixSharing:
+    """Cancellation must be invisible to survivors under prefix sharing
+    (the differential harness extended with mid-flight cancels):
+    cancelling the request whose pages a live sharer aliases, the CoW
+    source, or a preempted-and-requeued request never perturbs a
+    surviving stream, and every page comes home. Engines run with
+    ``audit=True`` so the per-tick allocator self-check guards each
+    schedule."""
+
+    # 3 full pages (page_size 16): the sharer attaches two and
+    # CoW-clones the third (fresh-request skip caps at L-1 → 40 → two
+    # full pages + a ragged tail into the clone)
+    _PROMPT = [(j * 11) % 61 + 1 for j in range(48)]
+
+    def _engine(self, mt, **kw):
+        cfg, model, params = mt
+        kw.setdefault("batch_slots", 2)
+        kw.setdefault("max_len", 96)
+        kw.setdefault("prefill_chunk", 8)
+        return ServeLoop(model, params, eos_token=cfg.vocab_size - 1,
+                         paged=True, audit=True, **kw)
+
+    def _run_pair(self, mt, cancel_after_ticks):
+        """Admit uid 0, let it register its prompt pages, admit uid 1
+        (attaches + clones uid 0's pages), optionally cancel uid 0
+        ``cancel_after_ticks`` ticks later; returns the drained
+        engine."""
+        e = self._engine(mt)
+        e.submit(Request(uid=0, prompt=list(self._PROMPT),
+                         max_new_tokens=12))
+        e.tick()                      # uid 0 prefills + registers
+        e.submit(Request(uid=1, prompt=list(self._PROMPT),
+                         max_new_tokens=8, temperature=0.7))
+        e.tick()                      # uid 1 attaches + CoW-clones
+        assert e.metrics.pages_shared > 0
+        assert e.metrics.cow_clones > 0
+        if cancel_after_ticks is not None:
+            for _ in range(cancel_after_ticks):
+                e.tick()
+            assert e.slots[0] is not None and e.slots[0].uid == 0
+            assert e.cancel(0)
+        e.run_until_drained()
+        return e
+
+    def test_cancel_request_with_live_sharer(self):
+        """Cancel uid 0 mid-decode while uid 1 still aliases its
+        registered pages: the shared pages drop one reference, uid 1
+        streams on bit-identically."""
+        mt = _model()
+        base = self._run_pair(mt, cancel_after_ticks=None)
+        cut = self._run_pair(mt, cancel_after_ticks=2)
+        b = {r.uid: list(r.tokens_out) for r in base.completed}
+        c = {r.uid: list(r.tokens_out) for r in cut.completed}
+        assert c[1] == b[1]
+        assert 0 not in c
+        assert cut.terminated[0].uid == 0
+        assert cut.terminated[0].state == "cancelled"
+        assert cut.metrics.cancelled_requests == 1
+        assert cut.allocator.pages_in_use == 0
+        assert "cancelled" in cut.metrics.summary()
+
+    def test_cancel_cow_source_right_after_clone(self):
+        """Cancel the CoW source in the very tick its page was cloned:
+        the clone copied the rows eagerly, so the sharer's stream is
+        independent of the source's fate."""
+        mt = _model()
+        base = self._run_pair(mt, cancel_after_ticks=None)
+        cut = self._run_pair(mt, cancel_after_ticks=0)
+        b = {r.uid: list(r.tokens_out) for r in base.completed}
+        c = {r.uid: list(r.tokens_out) for r in cut.completed}
+        assert c[1] == b[1]
+        assert cut.metrics.cancelled_requests == 1
+        assert cut.allocator.pages_in_use == 0
+
+    def test_cancel_preempted_requeued_request(self):
+        """Cancel a request sitting in the queue in the ``preempted``
+        state (evicted mid-decode, awaiting re-admission): it leaves
+        the queue without ever re-prefilling, and the survivors match
+        an undisturbed run bit-for-bit."""
+        mt = _model()
+        trace = _shared_prefix_trace(n_req=4)
+
+        def run(disturb):
+            e = self._engine(mt, batch_slots=2)
+            for r in trace:
+                e.submit(Request(**r))
+            for _ in range(3):
+                e.tick()
+            if disturb:
+                victim = next(
+                    i for i in range(e.batch_slots)
+                    if e.slots[i] is not None
+                )
+                uid = e.slots[victim].uid
+                e._preempt(victim)
+                assert e.pending[0].uid == uid
+                assert e.pending[0].state == "preempted"
+                assert e.cancel(uid)
+                assert e.pending[0].uid != uid
+            e.run_until_drained()
+            return e, (uid if disturb else None)
+
+        base, _ = run(disturb=False)
+        cut, uid = run(disturb=True)
+        b = {r.uid: list(r.tokens_out) for r in base.completed}
+        c = {r.uid: list(r.tokens_out) for r in cut.completed}
+        assert uid not in c
+        for u in c:
+            assert c[u] == b[u]
+        assert cut.metrics.preemptions == 1
+        assert cut.metrics.cancelled_requests == 1
+        assert cut.allocator.pages_in_use == 0
 
 
 _TRACE_STRATEGY = st.lists(

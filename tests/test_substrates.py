@@ -15,7 +15,10 @@ from repro.analysis.hlo_costs import compute_costs, shape_bytes
 from repro.data import PrefetchIterator, TokenDataset
 from repro.optim import adamw
 from repro.runtime.fault_tolerance import (
+    FaultInjector,
+    FaultSpec,
     PreemptionHandler,
+    RetryPolicy,
     StepFailure,
     StragglerMonitor,
     retry_step,
@@ -252,6 +255,110 @@ class TestFaultTolerance:
         assert not h.should_stop
         h.request_stop()
         assert h.should_stop
+
+    def test_retry_policy_overrides_kwargs(self):
+        """A RetryPolicy wins over the loose keyword parameters — the
+        shared serving+training configuration object is authoritative."""
+        calls = {"n": 0}
+
+        def always_fails():
+            calls["n"] += 1
+            raise RuntimeError("down")
+
+        with pytest.raises(StepFailure):
+            retry_step(
+                always_fails, max_retries=9,
+                policy=RetryPolicy(max_retries=1, base_delay=0.0),
+            )
+        assert calls["n"] == 2  # 1 attempt + 1 retry, not 10
+
+    def test_retry_policy_non_retriable_propagates(self):
+        def raises_value_error():
+            raise ValueError("not transient")
+
+        with pytest.raises(ValueError):
+            retry_step(
+                raises_value_error,
+                policy=RetryPolicy(max_retries=3, base_delay=0.0,
+                                   retriable=(RuntimeError,)),
+            )
+
+    def test_retry_on_retry_callback(self):
+        seen = []
+
+        def flaky():
+            if len(seen) < 2:
+                raise RuntimeError("transient")
+            return "ok"
+
+        out = retry_step(
+            flaky, base_delay=0.0,
+            on_retry=lambda attempt, exc: seen.append(attempt),
+        )
+        assert out == "ok"
+        assert seen == [0, 1]
+
+
+class TestFaultInjector:
+    """The seeded chaos source must be a pure function of its seed:
+    same seed ⇒ same fault schedule, different seed ⇒ (almost surely)
+    different, zero rates ⇒ no draws at all."""
+
+    _SPEC = FaultSpec(
+        alloc_failure=0.3, step_exception=0.3, step_exception_burst=2,
+        nan_logits=0.2, nan_prefill=0.2, delay=0.1, preempt_storm=0.2,
+    )
+
+    def _schedule(self, seed):
+        inj = FaultInjector(seed=seed, spec=self._SPEC)
+        out = []
+        for i in range(50):
+            out.append((
+                inj.alloc_failure(),
+                inj.step_fault(fresh=True),
+                tuple(inj.poison_decode([1, 2, 3])),
+                tuple(inj.poison_prefill([4, 5])),
+                inj.step_delay(),
+                inj.preempt_storm(3),
+            ))
+        return out, dict(inj.counts)
+
+    def test_same_seed_replays_exactly(self):
+        s1, c1 = self._schedule(42)
+        s2, c2 = self._schedule(42)
+        assert s1 == s2
+        assert c1 == c2
+        assert sum(c1.values()) > 0
+
+    def test_different_seed_differs(self):
+        s1, _ = self._schedule(42)
+        s2, _ = self._schedule(43)
+        assert s1 != s2
+
+    def test_zero_rates_inject_nothing(self):
+        inj = FaultInjector(seed=0)  # default FaultSpec: all zeros
+        for _ in range(100):
+            assert not inj.alloc_failure()
+            assert not inj.step_fault(fresh=True)
+            assert inj.poison_decode([1, 2]) == []
+            assert inj.step_delay() == 0.0
+            assert inj.preempt_storm(4) == 0
+        assert inj.total_injected == 0
+
+    def test_burst_bounded_by_spec(self):
+        """Consecutive injected step failures per dispatch never exceed
+        1 + step_exception_burst, so a retry budget ≥ that always
+        converges."""
+        inj = FaultInjector(
+            seed=7, spec=FaultSpec(step_exception=1.0,
+                                   step_exception_burst=2),
+        )
+        for _ in range(30):
+            run = 0
+            while inj.step_fault(fresh=(run == 0)):
+                run += 1
+                assert run <= 2  # ≤ step_exception_burst consecutive
+            assert run >= 1  # rate 1.0: every fresh dispatch faults
 
 
 class TestHloCostParser:
