@@ -686,6 +686,105 @@ def write_prefill_json(path: str = "BENCH_prefill.json", **kw) -> dict:
     return record
 
 
+# ---------------------------------------------------------------------------
+# Observability overhead: tracing on vs off on the serving trace
+# (BENCH_obs.json)
+# ---------------------------------------------------------------------------
+
+
+def run_obs_bench(
+    *, repeats: int = 3, new_tokens: int = 16, trace_out=None,
+) -> dict:
+    """Machine-readable observability record (BENCH_obs.json).
+
+    Drains the mixed-length serving trace through a paged engine with
+    the observability layer detached and attached (device telemetry on:
+    per-dispatch survivor-block counts, event tracing, per-tick series).
+    Each configuration warms its compiled programs on one throwaway
+    request, then runs the trace ``repeats`` times on the warm engine
+    and keeps the best decode tok/s — the overhead gate compares
+    best-of-N so host noise cannot fabricate a regression. Also checks
+    the token streams are bit-identical with tracing on, reports ρ_eff,
+    and schema-validates the exported Chrome trace (optionally written
+    to ``trace_out`` for the CI artifact).
+    """
+    from repro.observability import Observability, validate_chrome_trace
+
+    record = {
+        "schema": 1,
+        "host_backend": jax.default_backend(),
+        "repeats": repeats,
+        "trace": {"prompt_lengths": list(SERVING_TRACE),
+                  "new_tokens": new_tokens},
+    }
+    streams_by = {}
+    obs = None
+    for label in ("off", "on"):
+        obs_obj = Observability() if label == "on" else None
+        cfg, model, params = _serve_model()
+        engine = ServeLoop(
+            model, params, batch_slots=4, max_len=528,
+            eos_token=cfg.vocab_size - 1, prefill_chunk=64,
+            paged=True, num_pages=20, observability=obs_obj,
+        )
+        rng = np.random.default_rng(9)
+        engine.submit(Request(uid=0, prompt=rng.integers(
+            1, cfg.vocab_size - 1, size=48).tolist(),
+            max_new_tokens=new_tokens))
+        engine.run_until_drained()
+        best_decode = 0.0
+        streams = []
+        for rep in range(repeats):
+            engine.metrics = type(engine.metrics)(
+                registry=obs_obj.registry if obs_obj else None
+            )
+            rng = np.random.default_rng(0)
+            reqs = []
+            for uid, L in enumerate(SERVING_TRACE):
+                req = Request(
+                    uid=1000 * (rep + 1) + uid,
+                    prompt=rng.integers(
+                        1, cfg.vocab_size - 1, size=int(L)
+                    ).tolist(),
+                    max_new_tokens=new_tokens,
+                )
+                reqs.append(req)
+                engine.submit(req)
+            engine.run_until_drained(max_ticks=50_000)
+            assert all(r.done for r in reqs)
+            streams.append({r.uid % 1000: list(r.tokens_out)
+                            for r in reqs})
+            best_decode = max(best_decode,
+                              engine.metrics.decode_tokens_per_sec)
+        streams_by[label] = streams
+        record[label] = {"decode_tok_s_best": best_decode}
+        if obs_obj is not None:
+            obs = obs_obj
+            sp = obs_obj.sparsity.snapshot()
+            record[label]["rho_eff_decode"] = sp["decode"]["rho_eff"]
+            record[label]["rho_eff_prefill"] = sp["prefill"]["rho_eff"]
+            record[label]["trace_events"] = len(obs_obj.trace)
+            record[label]["trace_dropped"] = obs_obj.trace.dropped
+    record["streams_identical"] = streams_by["on"] == streams_by["off"]
+    record["overhead_pct"] = (
+        record["off"]["decode_tok_s_best"]
+        / max(record["on"]["decode_tok_s_best"], 1e-9) - 1.0
+    ) * 100.0
+    doc = obs.export_chrome_trace(trace_out)
+    validate_chrome_trace(doc)
+    record["chrome_trace_valid"] = True
+    if trace_out is not None:
+        record["chrome_trace_path"] = trace_out
+    return record
+
+
+def write_obs_json(path: str = "BENCH_obs.json", **kw) -> dict:
+    record = run_obs_bench(**kw)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return record
+
+
 def main(emit):
     rows = run()
     for r in rows:
@@ -745,6 +844,14 @@ if __name__ == "__main__":
     ap.add_argument("--chaos-seed", type=int, default=1234,
                     help="FaultInjector seed for --chaos-json (same seed "
                          "⇒ same fault schedule)")
+    ap.add_argument("--obs-json", default=None,
+                    help="write BENCH_obs.json (serving trace with the "
+                         "observability layer on vs off: decode tok/s "
+                         "overhead, rho_eff, Chrome-trace validity) to "
+                         "this path")
+    ap.add_argument("--obs-trace", default=None,
+                    help="also write the --obs-json run's Chrome/"
+                         "Perfetto trace to this path (CI artifact)")
     ap.add_argument("--max-len", type=int, default=1024)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=16)
@@ -754,7 +861,7 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if (args.json is None and args.serving_json is None
             and args.prefix_json is None and args.prefill_json is None
-            and args.chaos_json is None):
+            and args.chaos_json is None and args.obs_json is None):
         args.json = "BENCH_decode.json"
     if args.json is not None:
         out = write_decode_json(
@@ -780,5 +887,11 @@ if __name__ == "__main__":
         out = write_chaos_json(
             args.chaos_json, seed=args.chaos_seed,
             new_tokens=args.new_tokens,
+        )
+        print(json.dumps(out, indent=2, sort_keys=True))
+    if args.obs_json is not None:
+        out = write_obs_json(
+            args.obs_json, new_tokens=args.new_tokens,
+            trace_out=args.obs_trace,
         )
         print(json.dumps(out, indent=2, sort_keys=True))

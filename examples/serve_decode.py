@@ -13,6 +13,13 @@ traffic deterministic per request. Every request shares one system
 prompt, so the prefix cache (on by default for paged engines) attaches
 its pages instead of re-prefilling them — watch the hit-rate line.
 
+The run is instrumented with the observability layer (DESIGN.md §8):
+the engine records typed trace events (admissions, decode ticks,
+preemptions, CoW clones), per-dispatch survivor-block counts from the
+MP-MRF selection masks — the runtime-effective keep ratio ρ_eff — and
+per-tick pool/queue series, then exports a Chrome/Perfetto trace you
+can open at https://ui.perfetto.dev.
+
     PYTHONPATH=src python examples/serve_decode.py
 """
 
@@ -24,6 +31,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import EnergonConfig
 from repro.models import LMModel
+from repro.observability import Observability
 from repro.runtime import Request, ServeLoop, attention_cache_bytes
 
 
@@ -40,9 +48,10 @@ def main():
 
     # 8 slots × 5 blocks of 32 would need 40 pages; 20 oversubscribes
     # the pool so admission is page-driven and exhaustion preempts.
+    obs = Observability()
     engine = ServeLoop(model, params, batch_slots=8, max_len=160,
                        eos_token=cfg.vocab_size - 1, prefill_chunk=16,
-                       num_pages=20)
+                       num_pages=20, observability=obs)
     assert engine.paged
     rng = np.random.default_rng(0)
     n_req = 24
@@ -74,10 +83,27 @@ def main():
           f"{m.cow_clones} CoW clones")
     print(f"[serve] sample continuation (greedy): "
           f"{done[0].tokens_out[:12]}")
+    sp = obs.sparsity.snapshot()
+    rho_d = sp["decode"]["rho_eff"]
+    rho_p = sp["prefill"]["rho_eff"]
+    pool_s = obs.series_stats("pool_occupancy")
+    print(f"[obs] rho_eff decode "
+          f"{'n/a' if rho_d is None else f'{rho_d:.3f}'} "
+          f"(pinned {sp['decode']['pinned_fraction']:.2f}, "
+          f"fill {sp['decode']['fill_fraction']:.2f}), prefill "
+          f"{'n/a' if rho_p is None else f'{rho_p:.3f}'}")
+    print(f"[obs] pool occupancy p50/peak "
+          f"{pool_s['p50']:.0f}/{pool_s['peak']:.0f} pages, "
+          f"{len(obs.trace)} trace events "
+          f"({obs.trace.dropped} dropped)")
+    obs.export_chrome_trace("serve_trace.json")
+    print("[obs] chrome trace -> serve_trace.json "
+          "(open in ui.perfetto.dev)")
     assert len(done) == n_req
     assert m.prefill_dispatches < m.prefill_tokens, \
         "chunked prefill should batch prompt tokens into few dispatches"
     assert m.peak_pages_in_use <= engine.layout.num_pages
+    assert rho_d is not None and 0.0 < rho_d <= 1.0
 
 
 if __name__ == "__main__":

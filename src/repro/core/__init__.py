@@ -20,6 +20,7 @@ from repro.core.filtering import (  # noqa: F401
     mpmrf_decode_block_select,
     mpmrf_paged_block_select,
     mpmrf_row_select,
+    selection_stats,
     sliding_window_valid_mask,
 )
 from repro.core.quantization import (  # noqa: F401

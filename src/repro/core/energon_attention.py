@@ -139,7 +139,8 @@ def energon_attention(
     kv_length: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     filter_cache: Optional[Dict[str, jax.Array]] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Multi-head attention with Energon dynamic sparse attention.
 
     Args:
@@ -164,11 +165,22 @@ def energon_attention(
         (``q_positions`` set) engages the fused prefill kernels, which
         derive both rounds' bit planes from the resident codes
         in-register and stream only survivor K/V blocks.
+      telemetry: also return int32 ``[B, 4]`` selection stats
+        (selected / live / pinned / filled candidate-block counts, see
+        :func:`repro.core.filtering.selection_stats`). Only the
+        block-granular budget selections measure anything; dense, row,
+        chunked and pure-kernel paths report zeros.
 
     Returns:
-      ``[B, H, n_q, d]`` attention output (dtype of v).
+      ``[B, H, n_q, d]`` attention output (dtype of v); with
+      ``telemetry``, ``(out, stats)``.
     """
     n_q, n_k = q.shape[-2], k.shape[-2]
+
+    def ret(out, stats=None):
+        if not telemetry:
+            return out
+        return out, (stats if stats is not None else _zero_stats(q.shape[0]))
 
     impl = cfg.impl
     if layer_index < cfg.min_prune_layer and impl != "dense":
@@ -212,6 +224,7 @@ def energon_attention(
                 q_positions, cfg.query_block, cfg.key_block, n_k
             ),
             scale=scale,
+            telemetry=telemetry,
         )
 
     # Above this size, materialized [n_q, n_k] scores/masks do not fit
@@ -232,7 +245,10 @@ def energon_attention(
         if impl in ("mpmrf_block", "pallas"):
             # pallas impl lowers through the chunked XLA pipeline on the
             # dry-run/prefill path (kernels are serving/TPU-runtime).
-            return chk.energon_block_attention_chunked(
+            # Telemetry reports zeros here: the chunked scan discards
+            # its per-chunk selections, and serving never takes this
+            # path (engine chunks stay under chunk_threshold).
+            return ret(chk.energon_block_attention_chunked(
                 q, k, v,
                 round_bits=cfg.round_bits,
                 alphas=cfg.alphas,
@@ -244,13 +260,13 @@ def energon_attention(
                 keep_first=cfg.keep_first,
                 keep_diagonal=cfg.keep_diagonal,
                 scale=scale,
-            )
+            ))
         # dense / row fall back to chunked dense (row-granular MP-MRF at
         # this size would materialize token-level masks).
-        return chk.dense_attention_chunked(
+        return ret(chk.dense_attention_chunked(
             q, k, v, causal=causal, window=window, q_offset=q_offset,
             kv_length=kv_length, scale=scale,
-        )
+        ))
 
     valid = None
     if q_positions is not None:
@@ -308,23 +324,24 @@ def energon_attention(
         )
 
     if impl == "dense":
-        return spa.dense_attention(q, k, v, valid, scale)
+        return ret(spa.dense_attention(q, k, v, valid, scale))
 
     if impl == "mpmrf_row":
         res = flt.mpmrf_row_select(q, k, cfg.mpmrf("row"), valid)
-        return spa.masked_sparse_attention(q, k, v, res.keep_mask, scale)
+        return ret(spa.masked_sparse_attention(q, k, v, res.keep_mask, scale))
 
     if impl == "mpmrf_block":
         n_kb = n_k // cfg.key_block
         res = flt.mpmrf_block_select(
             q, k, cfg.mpmrf("block", n_kb), valid, diag_blocks=diag_blocks,
-            k_quant=k_quant,
+            k_quant=k_quant, with_stats=telemetry,
         )
-        return spa.block_gather_attention(
+        out = spa.block_gather_attention(
             q, k, v, res.block_indices, valid,
             cfg.query_block, cfg.key_block, scale,
             block_valid=res.block_valid,
         )
+        return ret(out, flt.selection_stats(res) if telemetry else None)
 
     if impl == "pallas":
         # Imported lazily: pallas lowering only exists for the TPU target;
@@ -337,12 +354,14 @@ def energon_attention(
             res = flt.mpmrf_block_select(
                 q, k, cfg.mpmrf("block", n_kb), valid,
                 diag_blocks=diag_blocks, k_quant=k_quant,
+                with_stats=telemetry,
             )
-            return spa.block_gather_attention(
+            out = spa.block_gather_attention(
                 q, k, v, res.block_indices, valid,
                 cfg.query_block, cfg.key_block, scale,
                 block_valid=res.block_valid,
             )
+            return ret(out, flt.selection_stats(res) if telemetry else None)
         from repro.kernels import ops as kops
 
         batch, heads, _, d = q.shape
@@ -371,9 +390,17 @@ def energon_attention(
             q_offset=q_offset,
             scale=scale,
         )
-        return out.reshape(q.shape)
+        # Telemetry reports zeros here: the pure-kernel path is the
+        # offline/training route — serving telemetry flows through the
+        # decode/paged/fused-prefill entry points, which carry tiers.
+        return ret(out.reshape(q.shape))
 
     raise ValueError(f"unknown Energon impl: {cfg.impl}")
+
+
+def _zero_stats(batch: int) -> jax.Array:
+    """All-zero selection stats for paths with no block selection."""
+    return jnp.zeros((batch, 4), jnp.int32)
 
 
 def decode_live_budget(
@@ -512,7 +539,8 @@ def energon_paged_prefill_attention(
     layer_index: int = 10**9,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Chunked-prefill attention straight against the page pool.
 
     The paged counterpart of the ``q_positions`` form of
@@ -576,6 +604,7 @@ def energon_paged_prefill_attention(
                 q_positions, cfg.query_block, cfg.key_block, n_k
             ),
             scale=scale,
+            telemetry=telemetry,
         )
 
     k_log = pgc.gather_logical_rows(cache["k"], block_table, ps)
@@ -615,6 +644,7 @@ def energon_paged_prefill_attention(
         q, k_log, v_log, cfg,
         causal=True, window=window, layer_index=layer_index,
         q_positions=q_positions, scale=scale, filter_cache=filter_cache,
+        telemetry=telemetry,
     )
 
 
@@ -629,7 +659,8 @@ def energon_decode_attention(
     window: Optional[int] = None,
     scale: Optional[float] = None,
     filter_cache: Optional[Dict[str, jax.Array]] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """One-token decode attention over a (padded) KV cache.
 
     This is the paper's GPT-2 generation case (§IV-D, l = 1): MP-MRF
@@ -664,8 +695,13 @@ def energon_decode_attention(
     n_k = k_cache.shape[-2]
     valid = _decode_valid_mask(q, n_k, cache_length, window)
 
+    def ret(out, stats=None):
+        if not telemetry:
+            return out
+        return out, (stats if stats is not None else _zero_stats(q.shape[0]))
+
     if layer_index < cfg.min_prune_layer or cfg.impl == "dense":
-        return spa.dense_attention(q, k_cache, v_cache, valid, scale)
+        return ret(spa.dense_attention(q, k_cache, v_cache, valid, scale))
 
     bk = cfg.decode_key_block
     use_block = (
@@ -693,6 +729,7 @@ def energon_decode_attention(
                 keep_diagonal=cfg.keep_diagonal,
                 live_budget=live_budget,
                 scale=scale,
+                telemetry=telemetry,
             )
 
         k_quant = None
@@ -705,19 +742,21 @@ def energon_decode_attention(
         res = flt.mpmrf_decode_block_select(
             q, k_cache, mcfg, valid, cache_length,
             k_quant=k_quant, live_budget=live_budget,
+            with_stats=telemetry,
         )
-        return spa.decode_block_gather_attention(
+        out = spa.decode_block_gather_attention(
             q, k_cache, v_cache, res.block_indices, res.block_valid,
             cache_length, bk, window=window, scale=scale,
         )
+        return ret(out, flt.selection_stats(res) if telemetry else None)
 
     if cfg.pruning_ratio <= 1.0:
         # ρ ≤ 1 ⇒ nothing to prune: skip the filter mat-vec entirely.
-        return spa.dense_attention(q, k_cache, v_cache, valid, scale)
+        return ret(spa.dense_attention(q, k_cache, v_cache, valid, scale))
     res = flt.mpmrf_row_select(q, k_cache, cfg.mpmrf("row"), valid)
-    return spa.decode_sparse_attention(
+    return ret(spa.decode_sparse_attention(
         q, k_cache, v_cache, res.keep_mask, scale
-    )
+    ))
 
 
 def energon_paged_decode_attention(
@@ -730,7 +769,8 @@ def energon_paged_decode_attention(
     layer_index: int = 10**9,
     window: Optional[int] = None,
     scale: Optional[float] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """One-token decode attention over a shared page pool.
 
     The paged counterpart of :func:`energon_decode_attention`: cache
@@ -770,8 +810,15 @@ def energon_paged_decode_attention(
     def logical(name):
         return pgc.gather_logical_rows(cache[name], block_table, bk)
 
+    def ret(out, stats=None):
+        if not telemetry:
+            return out
+        return out, (stats if stats is not None else _zero_stats(q.shape[0]))
+
     if layer_index < cfg.min_prune_layer or cfg.impl == "dense":
-        return spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+        return ret(
+            spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+        )
 
     use_block = cfg.impl in ("mpmrf_block", "pallas") and n_k // bk > 1
     if use_block:
@@ -795,19 +842,23 @@ def energon_paged_decode_attention(
                 keep_diagonal=cfg.keep_diagonal,
                 live_budget=live_budget,
                 scale=scale,
+                telemetry=telemetry,
             )
 
         res = flt.mpmrf_paged_block_select(
             q, cache, block_table, mcfg, valid, cache_length,
-            live_budget=live_budget,
+            live_budget=live_budget, with_stats=telemetry,
         )
-        return spa.paged_decode_block_gather_attention(
+        out = spa.paged_decode_block_gather_attention(
             q, cache["k"], cache["v"], res.block_indices, res.block_valid,
             block_table, cache_length, bk, window=window, scale=scale,
         )
+        return ret(out, flt.selection_stats(res) if telemetry else None)
 
     if cfg.pruning_ratio <= 1.0:
-        return spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+        return ret(
+            spa.dense_attention(q, logical("k"), logical("v"), valid, scale)
+        )
     # Row-granular selection quantizes K with a per-head absmax over the
     # *whole* row axis; unmapped logical blocks alias page 0 (another
     # occupant's rows), which would inflate the absmax and shift the
@@ -819,6 +870,6 @@ def energon_paged_decode_attention(
     )[:, None, :, None]
     k_log = logical("k") * row_ok
     res = flt.mpmrf_row_select(q, k_log, cfg.mpmrf("row"), valid)
-    return spa.decode_sparse_attention(
+    return ret(spa.decode_sparse_attention(
         q, k_log, logical("v"), res.keep_mask, scale
-    )
+    ))

@@ -125,6 +125,12 @@ class FilterResult:
         ``[R, ...]`` — feeds the pruning-ratio benchmarks.
       scores: final-round real-unit approximate scores (for diagnostics /
         top-k coverage analysis).
+      sel_tier: optional int32 ``[..., B]`` (``with_stats`` callers
+        only) — selection tier of each budget slot: 3 = pinned
+        safeguard, 2 = Eq. 3 survivor, 1 = budget fill, 0 = unused.
+      live_mask: optional bool ``[..., n_kb]`` (``with_stats`` callers
+        only) — the candidate-block validity the selection ran over;
+        the denominator of the effective keep ratio ρ_eff.
     """
 
     keep_mask: jax.Array
@@ -132,6 +138,8 @@ class FilterResult:
     survivor_fraction: jax.Array
     scores: jax.Array
     block_valid: Optional[jax.Array] = None  # int32 0/1 per budget slot
+    sel_tier: Optional[jax.Array] = None
+    live_mask: Optional[jax.Array] = None
 
 
 def _round_score_planes(
@@ -259,6 +267,7 @@ def prefill_block_select_from_planes(
     blk_valid: jax.Array,
     cfg: MPMRFConfig,
     diag_mask: Optional[jax.Array] = None,
+    with_stats: bool = False,
 ) -> FilterResult:
     """Prefill block selection rule on pre-pooled block score planes.
 
@@ -282,6 +291,10 @@ def prefill_block_select_from_planes(
       diag_mask: optional bool mask broadcastable to ``[..., n_qb,
         n_kb]`` marking each query block's diagonal key block; defaults
         to the offset-0 ``(qb·bq)//bk`` mapping.
+      with_stats: also populate ``sel_tier``/``live_mask`` on the
+        result (budget mode only) so callers can derive sparsity
+        telemetry (:func:`selection_stats`) — a handful of extra
+        integer ops on already-resident planes, no new HBM traffic.
     """
     n_qb, n_kb = round_scores[-1].shape[-2:]
     blk_keep = None
@@ -296,8 +309,10 @@ def prefill_block_select_from_planes(
         per_round.append(blk_keep)
 
     # Safeguards: never drop the first (sink) or diagonal (local) block.
+    pinned_mask = jnp.zeros_like(blk_valid)
     if cfg.keep_first:
         blk_keep = blk_keep.at[..., 0].set(blk_valid[..., 0])
+        pinned_mask = pinned_mask.at[..., 0].set(blk_valid[..., 0])
     if cfg.keep_diagonal:
         if diag_mask is None:
             qb_ids = jnp.arange(n_qb)
@@ -306,7 +321,9 @@ def prefill_block_select_from_planes(
                 (qb_ids * cfg.query_block) // cfg.key_block, n_kb - 1
             )
             diag_mask = jax.nn.one_hot(diag, n_kb, dtype=bool)
-        blk_keep = jnp.logical_or(blk_keep, jnp.logical_and(diag_mask, blk_valid))
+        diag_valid = jnp.logical_and(diag_mask, blk_valid)
+        blk_keep = jnp.logical_or(blk_keep, diag_valid)
+        pinned_mask = jnp.logical_or(pinned_mask, diag_valid)
 
     denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
     frac = jnp.stack(
@@ -315,6 +332,7 @@ def prefill_block_select_from_planes(
 
     block_indices = None
     block_valid = None
+    sel_tier = None
     if cfg.block_budget is not None:
         b = min(cfg.block_budget, n_kb)
         # Static top-B selection on final-round block scores, restricted
@@ -327,6 +345,17 @@ def prefill_block_select_from_planes(
         block_indices = jnp.where(
             block_valid > 0, block_indices, 0
         ).astype(jnp.int32)
+        if with_stats:
+            # Prefill selects only among survivors, so a selected slot
+            # is either a safeguard pin (3) or an Eq. 3 survivor (2);
+            # there is no budget-fill tier on this path.
+            sel_pinned = jnp.take_along_axis(
+                jnp.broadcast_to(pinned_mask, blk_keep.shape),
+                block_indices, axis=-1,
+            )
+            sel_tier = jnp.where(
+                block_valid > 0, jnp.where(sel_pinned, 3, 2), 0
+            ).astype(jnp.int32)
 
     return FilterResult(
         keep_mask=blk_keep,
@@ -334,6 +363,8 @@ def prefill_block_select_from_planes(
         survivor_fraction=frac,
         scores=blk_scores,
         block_valid=block_valid,
+        sel_tier=sel_tier,
+        live_mask=blk_valid if with_stats else None,
     )
 
 
@@ -344,6 +375,7 @@ def mpmrf_block_select(
     valid: Optional[jax.Array] = None,
     diag_blocks: Optional[jax.Array] = None,
     k_quant: Optional[qlib.QuantizedTensor] = None,
+    with_stats: bool = False,
 ) -> FilterResult:
     """Block-granular MP-MRF (TPU adaptation, DESIGN.md §2).
 
@@ -394,7 +426,8 @@ def mpmrf_block_select(
             jnp.clip(diag_blocks, 0, n_kb - 1), n_kb, dtype=bool
         )[:, None]  # [B, 1, n_qb, n_kb] — broadcast over heads
     return prefill_block_select_from_planes(
-        round_scores, blk_valid, cfg, diag_mask=diag_mask
+        round_scores, blk_valid, cfg, diag_mask=diag_mask,
+        with_stats=with_stats,
     )
 
 
@@ -408,7 +441,8 @@ def decode_block_tier_select(
     keep_first: bool = True,
     keep_diagonal: bool = True,
     live_budget: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, jax.Array]:
+    with_tiers: bool = False,
+):
     """Exact-budget decode selection shared by the XLA and Pallas paths.
 
     Tiered selection on integer keys: pinned ≫ survivors ≫ budget
@@ -429,9 +463,16 @@ def decode_block_tier_select(
         slots at rank ≥ live_budget are marked invalid (pinned blocks
         are exempt), so the *effective* pruning ratio tracks ρ no matter
         how much cache padding the static shape carries.
+      with_tiers: also return each selected slot's tier. Because the
+        selection key is ``tier·n_kb + rank`` with rank < n_kb, the
+        integer division ``top_keys // n_kb`` recovers the tier
+        *exactly* — telemetry reads it off the keys the top-k already
+        produced, adding no comparisons against the score planes.
 
     Returns:
-      ``(block_indices, block_valid)`` int32 ``[..., budget]``.
+      ``(block_indices, block_valid)`` int32 ``[..., budget]``; with
+      ``with_tiers`` a third int32 ``[..., budget]`` array — 3 pinned,
+      2 survivor, 1 fill, 0 unused slot.
     """
     n_kb = blk_scores.shape[-1]
     order = jnp.argsort(-jnp.where(blk_valid, blk_scores, NEG_INF), axis=-1)
@@ -467,6 +508,11 @@ def decode_block_tier_select(
     block_indices = jnp.where(
         block_valid > 0, block_indices, 0
     ).astype(jnp.int32)
+    if with_tiers:
+        sel_tier = jnp.where(
+            block_valid > 0, top_keys // n_kb, 0
+        ).astype(jnp.int32)
+        return block_indices, block_valid, sel_tier
     return block_indices, block_valid
 
 
@@ -478,6 +524,7 @@ def mpmrf_decode_block_select(
     cache_length: jax.Array,
     k_quant: Optional[qlib.QuantizedTensor] = None,
     live_budget: Optional[jax.Array] = None,
+    with_stats: bool = False,
 ) -> FilterResult:
     """Block-granular MP-MRF over a padded KV cache (decode, §IV-D l=1).
 
@@ -566,11 +613,19 @@ def mpmrf_decode_block_select(
     lb = None
     if live_budget is not None:
         lb = live_budget.reshape((batch,) + (1,) * (blk_scores.ndim - 2))
-    block_indices, block_valid = decode_block_tier_select(
-        blk_scores, blk_keep, blk_valid, newest, budget,
-        keep_first=cfg.keep_first, keep_diagonal=cfg.keep_diagonal,
-        live_budget=lb,
-    )
+    sel_tier = None
+    if with_stats:
+        block_indices, block_valid, sel_tier = decode_block_tier_select(
+            blk_scores, blk_keep, blk_valid, newest, budget,
+            keep_first=cfg.keep_first, keep_diagonal=cfg.keep_diagonal,
+            live_budget=lb, with_tiers=True,
+        )
+    else:
+        block_indices, block_valid = decode_block_tier_select(
+            blk_scores, blk_keep, blk_valid, newest, budget,
+            keep_first=cfg.keep_first, keep_diagonal=cfg.keep_diagonal,
+            live_budget=lb,
+        )
 
     denom = jnp.maximum(jnp.sum(blk_valid, axis=-1), 1)
     frac = jnp.stack(
@@ -582,6 +637,8 @@ def mpmrf_decode_block_select(
         survivor_fraction=frac,
         scores=blk_scores,
         block_valid=block_valid,
+        sel_tier=sel_tier,
+        live_mask=blk_valid if with_stats else None,
     )
 
 
@@ -593,6 +650,7 @@ def mpmrf_paged_block_select(
     valid: jax.Array,
     cache_length: jax.Array,
     live_budget: Optional[jax.Array] = None,
+    with_stats: bool = False,
 ) -> FilterResult:
     """Block-granular MP-MRF over a shared page pool (paged decode).
 
@@ -626,11 +684,51 @@ def mpmrf_paged_block_select(
         return mpmrf_decode_block_select(
             q, None, cfg, valid, cache_length,
             k_quant=k_quant, live_budget=live_budget,
+            with_stats=with_stats,
         )
     k_log = pgc.gather_logical_rows(cache["k"], block_table, bk)
     return mpmrf_decode_block_select(
         q, k_log, cfg, valid, cache_length, live_budget=live_budget,
+        with_stats=with_stats,
     )
+
+
+def selection_stats(res: FilterResult) -> jax.Array:
+    """Reduce a ``with_stats`` selection to per-batch block counts.
+
+    Sums every non-leading axis (heads, query blocks, budget slots /
+    candidate blocks), keeping the leading batch axis so the serving
+    engine can exclude idle slots host-side. Returns int32 ``[B, 4]``::
+
+        [:, 0]  selected  — budget slots with a set validity bit
+        [:, 1]  live      — valid candidate blocks (ρ_eff denominator)
+        [:, 2]  pinned    — selected via keep-first/diagonal safeguard
+        [:, 3]  filled    — selected as budget fill (decode only)
+
+    This is the "one scalar per dispatch" sparsity telemetry of
+    DESIGN.md §8: a handful of integer reductions over masks the
+    selection already materialized, summed on device so only a
+    ``[B, 4]`` int32 crosses to the host.
+    """
+    if res.block_valid is None or res.live_mask is None:
+        raise ValueError(
+            "selection_stats needs a FilterResult from a "
+            "with_stats=True budget-mode selection"
+        )
+    lead = res.block_valid.shape[0]
+
+    def red(x: jax.Array) -> jax.Array:
+        return jnp.sum(x.reshape(lead, -1).astype(jnp.int32), axis=-1)
+
+    selected = red(res.block_valid > 0)
+    live = red(res.live_mask)
+    if res.sel_tier is None:
+        pinned = jnp.zeros_like(selected)
+        filled = jnp.zeros_like(selected)
+    else:
+        pinned = red(res.sel_tier == 3)
+        filled = red(res.sel_tier == 1)
+    return jnp.stack([selected, live, pinned, filled], axis=-1)
 
 
 def expand_block_mask(

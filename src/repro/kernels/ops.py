@@ -178,7 +178,8 @@ def fused_decode_attention(
     live_budget: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Fused Pallas decode path over the resident filter cache (l = 1).
 
     Pipeline: the decode filter kernel scores every key block straight
@@ -196,9 +197,15 @@ def fused_decode_attention(
       k_block_scale: f32 ``[B, H, n_kb]`` resident per-block scales.
       cache_length: int32 ``[B]`` live lengths.
       live_budget: optional int32 ``[B]`` per-slot effective budget.
+      telemetry: also return int32 ``[B, 4]`` selection stats (selected
+        / live / pinned / filled block counts summed over heads — see
+        :func:`repro.core.filtering.selection_stats`), computed from
+        the selection planes already in registers; the kernels and
+        their HBM traffic are unchanged.
 
     Returns:
-      ``[B, H, G, d]`` attention output (dtype of v_cache).
+      ``[B, H, G, d]`` attention output (dtype of v_cache); with
+      ``telemetry``, ``(out, stats)``.
     """
     if len(round_bits) != 2:
         raise ValueError("fused decode kernel supports 2-round configs")
@@ -224,12 +231,12 @@ def fused_decode_attention(
         interpret=interpret,
     )
 
-    idx, val = _fused_decode_select(
+    idx, val, stats = _fused_decode_select(
         s0, s1, cl_bh,
         alphas=alphas, key_block=bk, block_budget=block_budget,
         keep_all=keep_all, keep_first=keep_first,
         keep_diagonal=keep_diagonal,
-        live_budget=live_budget, heads=heads,
+        live_budget=live_budget, heads=heads, with_stats=telemetry,
     )
 
     out = dec_kernel.decode_gather_attention(
@@ -239,7 +246,10 @@ def fused_decode_attention(
         idx, val, cl_bh,
         key_block=bk, scale=scale, interpret=interpret,
     )
-    return out.reshape(batch, heads, g, d)
+    out = out.reshape(batch, heads, g, d)
+    if telemetry:
+        return out, stats.reshape(batch, heads, 4).sum(axis=1)
+    return out
 
 
 def _fused_decode_select(
@@ -255,12 +265,16 @@ def _fused_decode_select(
     keep_diagonal: bool,
     live_budget: Optional[jax.Array],
     heads: int,
-) -> Tuple[jax.Array, jax.Array]:
+    with_stats: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """Eq. 3 thresholds + exact-budget tier selection on the kernel's
     ``[bh, n_kb]`` block-max score planes — the one selection rule the
     fused unpaged and paged decode paths share with the XLA paths
     (:func:`repro.core.filtering.decode_block_tier_select`), which is
-    what keeps all of them bit-identical in selection."""
+    what keeps all of them bit-identical in selection.
+
+    Returns ``(idx, val, stats)`` with ``stats`` int32 ``[bh, 4]``
+    selection counts when ``with_stats`` (else None)."""
     blk_valid = s0 > NEG_INF / 2
     keep = blk_valid
     if not keep_all:
@@ -273,11 +287,24 @@ def _fused_decode_select(
     lb_bh = None
     if live_budget is not None:
         lb_bh = jnp.repeat(live_budget.astype(jnp.int32), heads)
-    return flt.decode_block_tier_select(
+    if with_stats:
+        idx, val, sel_tier = flt.decode_block_tier_select(
+            s1, keep, blk_valid, newest, block_budget,
+            keep_first=keep_first, keep_diagonal=keep_diagonal,
+            live_budget=lb_bh, with_tiers=True,
+        )
+        stats = flt.selection_stats(flt.FilterResult(
+            keep_mask=keep, block_indices=idx,
+            survivor_fraction=s1[..., :0], scores=s1,
+            block_valid=val, sel_tier=sel_tier, live_mask=blk_valid,
+        ))
+        return idx, val, stats
+    idx, val = flt.decode_block_tier_select(
         s1, keep, blk_valid, newest, block_budget,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
         live_budget=lb_bh,
     )
+    return idx, val, None
 
 
 def fused_paged_decode_attention(
@@ -299,7 +326,8 @@ def fused_paged_decode_attention(
     live_budget: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Fused Pallas decode over a shared page pool (paged l = 1).
 
     Same pipeline as :func:`fused_decode_attention`, but cache state is
@@ -320,9 +348,12 @@ def fused_paged_decode_attention(
       block_table: int32 ``[B, max_blocks]`` logical → physical pages.
       cache_length: int32 ``[B]`` live logical lengths.
       live_budget: optional int32 ``[B]`` per-slot effective budget.
+      telemetry: also return int32 ``[B, 4]`` selection stats (as in
+        :func:`fused_decode_attention`).
 
     Returns:
-      ``[B, KV, G, d]`` attention output (dtype of v_pool).
+      ``[B, KV, G, d]`` attention output (dtype of v_pool); with
+      ``telemetry``, ``(out, stats)``.
     """
     if len(round_bits) != 2:
         raise ValueError("fused decode kernel supports 2-round configs")
@@ -356,12 +387,12 @@ def fused_paged_decode_attention(
         interpret=interpret,
     )
 
-    idx, val = _fused_decode_select(
+    idx, val, stats = _fused_decode_select(
         s0, s1, cl_bh,
         alphas=alphas, key_block=bk, block_budget=block_budget,
         keep_all=keep_all, keep_first=keep_first,
         keep_diagonal=keep_diagonal,
-        live_budget=live_budget, heads=heads,
+        live_budget=live_budget, heads=heads, with_stats=telemetry,
     )
 
     out = dec_kernel.paged_decode_gather_attention(
@@ -371,7 +402,10 @@ def fused_paged_decode_attention(
         idx, val, bt_bh, cl_bh,
         key_block=bk, scale=scale, interpret=interpret,
     )
-    return out.reshape(batch, heads, g, d)
+    out = out.reshape(batch, heads, g, d)
+    if telemetry:
+        return out, stats.reshape(batch, heads, 4).sum(axis=1)
+    return out
 
 
 def _fused_prefill_select(
@@ -388,13 +422,17 @@ def _fused_prefill_select(
     keep_diagonal: bool,
     diag_blocks: Optional[jax.Array],
     heads: int,
-) -> Tuple[jax.Array, jax.Array]:
+    with_stats: bool = False,
+) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
     """Eq. 3 rounds + safeguards + top-B on the kernel's block-max
     ``[bh, n_qb, n_kb]`` planes — through the one prefill selection
     helper the XLA path also uses
     (:func:`repro.core.filtering.prefill_block_select_from_planes`),
     which is what keeps fused and unfused prefill selection
-    bit-identical (the prefix-sharing chunk-grid contract)."""
+    bit-identical (the prefix-sharing chunk-grid contract).
+
+    Returns ``(idx, val, stats)`` with ``stats`` int32 ``[bh, 4]``
+    selection counts when ``with_stats`` (else None)."""
     n_kb = s0.shape[-1]
     mcfg = flt.MPMRFConfig(
         round_bits=tuple(round_bits),
@@ -417,9 +455,11 @@ def _fused_prefill_select(
             jnp.clip(db, 0, n_kb - 1), n_kb, dtype=bool
         )
     res = flt.prefill_block_select_from_planes(
-        [s0, s1], s0 > NEG_INF / 2, mcfg, diag_mask=diag_mask
+        [s0, s1], s0 > NEG_INF / 2, mcfg, diag_mask=diag_mask,
+        with_stats=with_stats,
     )
-    return res.block_indices, res.block_valid
+    stats = flt.selection_stats(res) if with_stats else None
+    return res.block_indices, res.block_valid, stats
 
 
 def fused_prefill_attention(
@@ -442,7 +482,8 @@ def fused_prefill_attention(
     diag_blocks: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Fused Pallas prefill over the resident filter cache.
 
     The prefill twin of :func:`fused_decode_attention`: the filter
@@ -466,9 +507,12 @@ def fused_prefill_attention(
       diag_blocks: optional int32 ``[B, n_qb]`` keep_diagonal targets
         (the caller derives them from ``q_positions`` exactly as the
         XLA path does).
+      telemetry: also return int32 ``[B, 4]`` selection stats summed
+        over heads and query blocks.
 
     Returns:
-      ``[B, H, n_q, d]`` attention output (dtype of v_cache).
+      ``[B, H, n_q, d]`` attention output (dtype of v_cache); with
+      ``telemetry``, ``(out, stats)``.
     """
     if len(round_bits) != 2:
         raise ValueError("fused prefill kernel supports 2-round configs")
@@ -501,13 +545,13 @@ def fused_prefill_attention(
         interpret=interpret,
     )
 
-    idx, val = _fused_prefill_select(
+    idx, val, stats = _fused_prefill_select(
         s0, s1,
         round_bits=round_bits, alphas=alphas,
         query_block=query_block, key_block=key_block,
         block_budget=block_budget, keep_all=keep_all,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
-        diag_blocks=diag_blocks, heads=heads,
+        diag_blocks=diag_blocks, heads=heads, with_stats=telemetry,
     )
 
     out = pre_kernel.prefill_gather_attention(
@@ -518,7 +562,10 @@ def fused_prefill_attention(
         query_block=query_block, key_block=key_block,
         scale=scale, interpret=interpret,
     )
-    return out.reshape(batch, heads, n_q, d)
+    out = out.reshape(batch, heads, n_q, d)
+    if telemetry:
+        return out, stats.reshape(batch, heads, 4).sum(axis=1)
+    return out
 
 
 def fused_paged_prefill_attention(
@@ -541,7 +588,8 @@ def fused_paged_prefill_attention(
     diag_blocks: Optional[jax.Array] = None,
     scale: Optional[float] = None,
     interpret: Optional[bool] = None,
-) -> jax.Array:
+    telemetry: bool = False,
+):
     """Fused Pallas prefill over a shared page pool.
 
     Same pipeline as :func:`fused_prefill_attention`, but cache state is
@@ -561,9 +609,12 @@ def fused_paged_prefill_attention(
       block_table: int32 ``[B, max_blocks]`` logical → physical pages.
       q_positions: int32 ``[B, n_q]`` absolute positions per query row.
       diag_blocks: optional int32 ``[B, n_qb]`` keep_diagonal targets.
+      telemetry: also return int32 ``[B, 4]`` selection stats summed
+        over heads and query blocks.
 
     Returns:
-      ``[B, KV, n_q, d]`` attention output (dtype of v_pool).
+      ``[B, KV, n_q, d]`` attention output (dtype of v_pool); with
+      ``telemetry``, ``(out, stats)``.
     """
     if len(round_bits) != 2:
         raise ValueError("fused prefill kernel supports 2-round configs")
@@ -597,13 +648,13 @@ def fused_paged_prefill_attention(
         interpret=interpret,
     )
 
-    idx, val = _fused_prefill_select(
+    idx, val, stats = _fused_prefill_select(
         s0, s1,
         round_bits=round_bits, alphas=alphas,
         query_block=query_block, key_block=bk,
         block_budget=block_budget, keep_all=keep_all,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
-        diag_blocks=diag_blocks, heads=heads,
+        diag_blocks=diag_blocks, heads=heads, with_stats=telemetry,
     )
 
     out = pre_kernel.paged_prefill_gather_attention(
@@ -614,7 +665,10 @@ def fused_paged_prefill_attention(
         query_block=query_block, key_block=bk,
         scale=scale, interpret=interpret,
     )
-    return out.reshape(batch, heads, n_q, d)
+    out = out.reshape(batch, heads, n_q, d)
+    if telemetry:
+        return out, stats.reshape(batch, heads, 4).sum(axis=1)
+    return out
 
 
 @functools.partial(

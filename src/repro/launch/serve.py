@@ -50,6 +50,17 @@ def main():
                          "denials, step exceptions, NaN logits, "
                          "preemption storms) — the same seed replays "
                          "the same fault schedule")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome/Perfetto trace of the run here "
+                         "(open in ui.perfetto.dev); implies "
+                         "observability")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the metrics/sparsity JSON snapshot here; "
+                         "implies observability")
+    ap.add_argument("--obs", action="store_true",
+                    help="attach the observability layer (event trace, "
+                         "sparsity telemetry, metrics registry) even "
+                         "without an export path")
     args = ap.parse_args()
 
     import jax
@@ -65,6 +76,11 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LMModel(cfg)
     params = model.init(jax.random.PRNGKey(0))
+
+    obs = None
+    if args.obs or args.trace_out or args.metrics_out:
+        from repro.observability import Observability
+        obs = Observability()
 
     injector = None
     if args.chaos_seed is not None:
@@ -88,6 +104,7 @@ def main():
             args.deadline_ms / 1e3 if args.deadline_ms is not None else None
         ),
         fault_injector=injector,
+        observability=obs,
     )
     rng = np.random.default_rng(0)
     system = rng.integers(
@@ -153,6 +170,29 @@ def main():
         print(f"[serve] chaos (seed {args.chaos_seed}): "
               f"{injector.total_injected} faults injected "
               f"{dict(injector.counts)}")
+    if obs is not None:
+        sp = obs.sparsity.snapshot()
+        rho_p = sp["prefill"]["rho_eff"]
+        rho_d = sp["decode"]["rho_eff"]
+        pool = obs.series_stats("pool_occupancy")
+        print(f"[serve] sparsity: rho_eff prefill "
+              f"{'n/a' if rho_p is None else f'{rho_p:.3f}'} / decode "
+              f"{'n/a' if rho_d is None else f'{rho_d:.3f}'}"
+              + (f" (pinned {sp['decode']['pinned_fraction']:.2f}, "
+                 f"fill {sp['decode']['fill_fraction']:.2f})"
+                 if rho_d is not None else "")
+              + f", pool occupancy p50/peak "
+                f"{pool['p50']:.0f}/{pool['peak']:.0f} pages, "
+                f"{len(obs.trace)} trace events")
+        if args.trace_out:
+            obs.export_chrome_trace(args.trace_out)
+            print(f"[serve] chrome trace -> {args.trace_out} "
+                  f"(open in ui.perfetto.dev)")
+        if args.metrics_out:
+            import json
+            with open(args.metrics_out, "w") as f:
+                json.dump(obs.snapshot(), f, indent=2)
+            print(f"[serve] metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -304,7 +304,8 @@ def prefill_attention_block(
     use_qk_norm: bool = False,
     window: Optional[jax.Array] = None,
     layer_index: int = 10**9,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    telemetry: bool = False,
+):
     """Chunked-prefill attention: a C-token chunk against the KV cache.
 
     x ``[B, C, d]``; positions ``[B, C]`` absolute cache positions per
@@ -341,8 +342,13 @@ def prefill_attention_block(
         qg, new_cache["k"], new_cache["v"], energon,
         causal=True, window=window, layer_index=layer_index,
         q_positions=qpos, filter_cache=filter_cache,
+        telemetry=telemetry,
     )
+    if telemetry:
+        out, stats = out
     y = _unfold_heads_out(out, params, num_heads, chunk)
+    if telemetry:
+        return y, new_cache, stats
     return y, new_cache
 
 
@@ -359,7 +365,8 @@ def decode_attention_block(
     use_qk_norm: bool = False,
     window: Optional[int] = None,
     layer_index: int = 10**9,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    telemetry: bool = False,
+):
     """One-token decode step. x ``[B, 1, d]``; cache_index ``[B]``.
 
     Updates the cache in-place (functionally) at ``cache_index`` and runs
@@ -383,8 +390,13 @@ def decode_attention_block(
     out = energon_decode_attention(
         qg, new_cache["k"], new_cache["v"], cache_index + 1, energon,
         layer_index=layer_index, window=window, filter_cache=filter_cache,
+        telemetry=telemetry,
     )
+    if telemetry:
+        out, stats = out
     y = _unfold_heads_out(out, params, num_heads, 1)
+    if telemetry:
+        return y, new_cache, stats
     return y, new_cache
 
 
@@ -561,7 +573,8 @@ def paged_prefill_attention_block(
     use_qk_norm: bool = False,
     window: Optional[jax.Array] = None,
     layer_index: int = 10**9,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    telemetry: bool = False,
+):
     """Chunked-prefill attention against the page pool.
 
     The chunk's K/V rows are scattered through the block table, then the
@@ -587,9 +600,13 @@ def paged_prefill_attention_block(
     qpos = jnp.tile(positions, (1, groups)) if groups > 1 else positions
     out = energon_paged_prefill_attention(
         qg, new_cache, block_table, qpos, energon,
-        layer_index=layer_index, window=window,
+        layer_index=layer_index, window=window, telemetry=telemetry,
     )
+    if telemetry:
+        out, stats = out
     y = _unfold_heads_out(out, params, num_heads, chunk)
+    if telemetry:
+        return y, new_cache, stats
     return y, new_cache
 
 
@@ -608,7 +625,8 @@ def paged_decode_attention_block(
     window: Optional[int] = None,
     layer_index: int = 10**9,
     active: Optional[jax.Array] = None,
-) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    telemetry: bool = False,
+):
     """One-token paged decode step. x ``[B, 1, d]``; cache_index ``[B]``.
 
     Appends through the block table (``active`` gates slots whose write
@@ -626,7 +644,11 @@ def paged_decode_attention_block(
     )
     out = energon_paged_decode_attention(
         qg, new_cache, block_table, cache_index + 1, energon,
-        layer_index=layer_index, window=window,
+        layer_index=layer_index, window=window, telemetry=telemetry,
     )
+    if telemetry:
+        out, stats = out
     y = _unfold_heads_out(out, params, num_heads, 1)
+    if telemetry:
+        return y, new_cache, stats
     return y, new_cache

@@ -517,7 +517,8 @@ class LMModel:
         cache,
         inputs: Dict[str, jax.Array],
         cache_index: jax.Array,
-    ) -> Tuple[jax.Array, Any]:
+        telemetry: bool = False,
+    ):
         """Multi-token chunked prefill: run a ``[B, C]`` prompt chunk
         against the cached history and write its K/V rows into the cache
         in one jitted call.
@@ -529,8 +530,11 @@ class LMModel:
         padding tokens (no cache write, output ignored) so ragged chunks
         and partially-admitted batches share one compiled shape.
 
-        Returns ``(logits [B, C, V], new_cache)``. The caller advances
-        ``cache_index`` by the number of real tokens per slot.
+        Returns ``(logits [B, C, V], new_cache)``; with ``telemetry``,
+        ``(logits, new_cache, stats)`` where stats is int32
+        ``[L, B, 4]`` per-layer selection counts (see
+        :func:`repro.core.filtering.selection_stats`). The caller
+        advances ``cache_index`` by the number of real tokens per slot.
         """
         cfg = self.cfg
         if not self.supports_prefill:
@@ -561,17 +565,23 @@ class LMModel:
             return self._prefill_attn_step(
                 layer_params, x, kv_cache,
                 window if has_windows else None, layer_idx, positions,
-                block_table,
+                block_table, telemetry=telemetry,
             )
 
-        x, new_cache = tfm.apply_stack_decode(
+        out = tfm.apply_stack_decode(
             params["blocks"], x, cache, windows, step_fn,
             prefix_layers=cfg.energon.min_prune_layer,
+            telemetry=telemetry,
         )
+        if telemetry:
+            x, new_cache, stats = out
+            return self._logits_out(params, x), new_cache, stats
+        x, new_cache = out
         return self._logits_out(params, x), new_cache
 
     def _prefill_attn_step(self, layer_params, x, kv_cache, window,
-                           layer_idx, positions, block_table=None):
+                           layer_idx, positions, block_table=None,
+                           telemetry=False):
         cfg = self.cfg
 
         def attn(p, xn, c):
@@ -584,6 +594,7 @@ class LMModel:
                     use_qk_norm=cfg.use_qk_norm,
                     window=window,
                     layer_index=layer_idx,
+                    telemetry=telemetry,
                 )
             return attn_lib.prefill_attention_block(
                 p, xn, c, positions, cfg.energon,
@@ -593,26 +604,37 @@ class LMModel:
                 use_qk_norm=cfg.use_qk_norm,
                 window=window,
                 layer_index=layer_idx,
+                telemetry=telemetry,
             )
 
-        return self._serve_block_step(layer_params, x, kv_cache, attn)
+        return self._serve_block_step(
+            layer_params, x, kv_cache, attn, telemetry=telemetry
+        )
 
-    def _serve_block_step(self, layer_params, x, kv_cache, attn_call):
+    def _serve_block_step(self, layer_params, x, kv_cache, attn_call,
+                          telemetry=False):
         """Shared decode/prefill block body: pre-norm attention +
         residual, then the MoE/MLP half. ``attn_call(params, x_normed,
-        kv_cache) -> (h, new_cache)``."""
+        kv_cache) -> (h, new_cache)`` — ``(h, new_cache, stats)`` with
+        ``telemetry``, threaded through unchanged."""
         cfg = self.cfg
-        h, new_cache = attn_call(
+        res = attn_call(
             layer_params["attn"],
             L.apply_norm(cfg.norm, layer_params["norm_attn"], x),
             kv_cache,
         )
+        if telemetry:
+            h, new_cache, stats = res
+        else:
+            h, new_cache = res
         x = x + h
         h_in = L.apply_norm(cfg.norm, layer_params["norm_mlp"], x)
         if self._moe_cfg() is not None:
             h, _ = moe_lib.apply_moe(layer_params["moe"], h_in, self._moe_cfg())
         else:
             h = L.apply_mlp(layer_params["mlp"], h_in, cfg.activation)
+        if telemetry:
+            return x + h, new_cache, stats
         return x + h, new_cache
 
     # Batch-axis position of each recurrent-state cache key (leading
@@ -687,12 +709,18 @@ class LMModel:
         cache,
         inputs: Dict[str, jax.Array],
         cache_index: jax.Array,
-    ) -> Tuple[jax.Array, Any]:
+        telemetry: bool = False,
+    ):
         """One-token decode. inputs: {"tokens": [B,1]} or
         {"embeddings": [B,1,d]}, plus optional {"active": [B] bool} —
         recurrent state only advances on active slots (KV-cache writes
         are positional and self-healing, so they are not gated);
-        cache_index ``[B]`` current lengths."""
+        cache_index ``[B]`` current lengths.
+
+        With ``telemetry``, returns ``(logits, new_cache, stats)``
+        where stats is int32 ``[L, B, 4]`` per-layer selection counts;
+        recurrent families report an empty ``[0, B, 4]`` (their
+        attention, if any, lives inside group scans)."""
         cfg = self.cfg
         if cfg.uses_embeddings_input and "embeddings" in inputs:
             x = inputs["embeddings"].astype(self._dtype)
@@ -703,11 +731,17 @@ class LMModel:
         active = inputs.get("active")
         block_table = inputs.get("block_table")
 
+        stats = None
         if cfg.family in ("dense", "moe", "vlm", "audio"):
-            x, new_cache = self._decode_tfm(
+            out = self._decode_tfm(
                 params, cache, x, cache_index,
                 block_table=block_table, active=active,
+                telemetry=telemetry,
             )
+            if telemetry:
+                x, new_cache, stats = out
+            else:
+                x, new_cache = out
         elif cfg.family == "ssm":
             x, new_cache = self._decode_xlstm(params, cache, x)
         elif cfg.family == "hybrid":
@@ -719,11 +753,15 @@ class LMModel:
                         new_cache[key], cache[key], active, ax
                     )
         logits = self._logits_out(params, x)
+        if telemetry:
+            if stats is None:
+                stats = jnp.zeros((0, x.shape[0], 4), jnp.int32)
+            return logits, new_cache, stats
         return logits, new_cache
 
     def _decode_attn_step(self, layer_params, x, kv_cache, window,
                           layer_idx, cache_index, block_table=None,
-                          active=None):
+                          active=None, telemetry=False):
         cfg = self.cfg
 
         def attn(p, xn, c):
@@ -737,6 +775,7 @@ class LMModel:
                     window=window,
                     layer_index=layer_idx,
                     active=active,
+                    telemetry=telemetry,
                 )
             return attn_lib.decode_attention_block(
                 p, xn, c, cache_index, cfg.energon,
@@ -746,12 +785,15 @@ class LMModel:
                 use_qk_norm=cfg.use_qk_norm,
                 window=window,
                 layer_index=layer_idx,
+                telemetry=telemetry,
             )
 
-        return self._serve_block_step(layer_params, x, kv_cache, attn)
+        return self._serve_block_step(
+            layer_params, x, kv_cache, attn, telemetry=telemetry
+        )
 
     def _decode_tfm(self, params, cache, x, cache_index,
-                    block_table=None, active=None):
+                    block_table=None, active=None, telemetry=False):
         cfg = self.cfg
         has_windows = cfg.sliding_window > 0 and cfg.global_every > 0
         windows = self.layer_windows()
@@ -761,11 +803,13 @@ class LMModel:
                 layer_params, x, kv_cache,
                 window if has_windows else None, layer_idx, cache_index,
                 block_table=block_table, active=active,
+                telemetry=telemetry,
             )
 
         return tfm.apply_stack_decode(
             params["blocks"], x, cache, windows, step_fn,
             prefix_layers=cfg.energon.min_prune_layer,
+            telemetry=telemetry,
         )
 
     def _decode_xlstm(self, params, cache, x):

@@ -248,11 +248,15 @@ def apply_stack_decode(
     step_fn,
     *,
     prefix_layers: int = 0,
+    telemetry: bool = False,
 ):
     """Scan a decode step over layers, threading per-layer caches.
 
     ``step_fn(params, x, cache, window, layer_idx) -> (x, new_cache)``
-    with ``layer_idx`` static (see :func:`apply_stack`).
+    with ``layer_idx`` static (see :func:`apply_stack`). With
+    ``telemetry`` the step returns ``(x, new_cache, stats [B, 4])``;
+    per-layer stats ride the scan's stacked outputs alongside the
+    caches and come back as int32 ``[L, B, 4]``.
     """
     num_layers = jax.tree_util.tree_leaves(params_stacked)[0].shape[0]
     if windows is None:
@@ -262,6 +266,11 @@ def apply_stack_decode(
     def make_body(static_layer_idx: int):
         def body(x, xs):
             layer_params, cache, window = xs
+            if telemetry:
+                x, new_cache, stats = step_fn(
+                    layer_params, x, cache, window, static_layer_idx
+                )
+                return shd.constrain(x, ("dp", None, None)), (new_cache, stats)
             x, new_cache = step_fn(
                 layer_params, x, cache, window, static_layer_idx
             )
@@ -270,26 +279,41 @@ def apply_stack_decode(
         return body
 
     new_caches = []
+    stats_parts = []
+
+    def collect(ys):
+        if telemetry:
+            nc, st = ys
+            stats_parts.append(st)
+            return nc
+        return ys
+
     if prefix_layers > 0:
-        x, nc = jax.lax.scan(
+        x, ys = jax.lax.scan(
             make_body(0), x,
             (_tree_slice(params_stacked, 0, prefix_layers),
              _tree_slice(caches, 0, prefix_layers),
              windows[:prefix_layers]),
         )
-        new_caches.append(nc)
+        new_caches.append(collect(ys))
     if prefix_layers < num_layers:
-        x, nc = jax.lax.scan(
+        x, ys = jax.lax.scan(
             make_body(prefix_layers), x,
             (_tree_slice(params_stacked, prefix_layers, None),
              _tree_slice(caches, prefix_layers, None),
              windows[prefix_layers:]),
         )
-        new_caches.append(nc)
+        new_caches.append(collect(ys))
     if len(new_caches) == 1:
         merged = new_caches[0]
     else:
         merged = jax.tree.map(
             lambda a, b: jnp.concatenate([a, b], axis=0), *new_caches
         )
+    if telemetry:
+        stats = (
+            stats_parts[0] if len(stats_parts) == 1
+            else jnp.concatenate(stats_parts, axis=0)
+        )
+        return x, merged, stats
     return x, merged

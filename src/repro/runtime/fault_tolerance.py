@@ -202,6 +202,12 @@ class FaultInjector:
     raises, which slot's logits go NaN, when the preemption storm hits —
     is a pure function of the seed. ``counts`` tallies every injected
     event for benches and assertions.
+
+    ``tracer`` — optional :class:`~repro.observability.trace.EventTrace`
+    hook (set by the engine's observability layer). Every fault that
+    actually fires emits one ``fault_injected`` event tagged with its
+    site; the injector's RNG is never consulted for tracing, so attaching
+    a tracer cannot perturb a seeded fault schedule.
     """
 
     def __init__(self, seed: int = 0, spec: Optional[FaultSpec] = None):
@@ -209,6 +215,7 @@ class FaultInjector:
         self.spec = spec if spec is not None else FaultSpec()
         self._rng = np.random.default_rng(self.seed)
         self._burst = 0
+        self.tracer = None
         self.counts: Dict[str, int] = {
             "alloc_failure": 0,
             "step_exception": 0,
@@ -223,12 +230,17 @@ class FaultInjector:
             return False
         return bool(self._rng.random() < p)
 
+    def _note(self, site: str, n: int = 1) -> None:
+        self.counts[site] += n
+        if self.tracer is not None and n > 0:
+            self.tracer.emit("fault_injected", site=site, n=n)
+
     def alloc_failure(self) -> bool:
         """Whether to deny a page allocation that would actually grow a
         slot (the caller must only consult on real growth — denying a
         no-op would fabricate preemptions out of thin air)."""
         if self._draw(self.spec.alloc_failure):
-            self.counts["alloc_failure"] += 1
+            self._note("alloc_failure")
             return True
         return False
 
@@ -240,12 +252,12 @@ class FaultInjector:
         budget always converges."""
         if self._burst > 0:
             self._burst -= 1
-            self.counts["step_exception"] += 1
+            self._note("step_exception")
             return True
         if fresh and self._draw(self.spec.step_exception):
             burst = max(int(self.spec.step_exception_burst), 1)
             self._burst = int(self._rng.integers(0, burst))
-            self.counts["step_exception"] += 1
+            self._note("step_exception")
             return True
         return False
 
@@ -253,20 +265,20 @@ class FaultInjector:
         """Uids (among this tick's live slots) whose decode logits are
         replaced with NaN before sampling."""
         hit = [u for u in uids if self._draw(self.spec.nan_logits)]
-        self.counts["nan_logits"] += len(hit)
+        self._note("nan_logits", len(hit))
         return hit
 
     def poison_prefill(self, uids: Sequence[int]) -> List[int]:
         """Uids (among this wave's fresh admissions) whose final prefill
         logits are replaced with NaN before first-token sampling."""
         hit = [u for u in uids if self._draw(self.spec.nan_prefill)]
-        self.counts["nan_prefill"] += len(hit)
+        self._note("nan_prefill", len(hit))
         return hit
 
     def step_delay(self) -> float:
         """Injected straggler sleep (seconds) after a step; 0 = none."""
         if self._draw(self.spec.delay):
-            self.counts["delay"] += 1
+            self._note("delay")
             return float(self.spec.delay_seconds)
         return 0.0
 
@@ -274,7 +286,7 @@ class FaultInjector:
         """Number of youngest live slots to force-preempt this tick."""
         if n_live > 0 and self._draw(self.spec.preempt_storm):
             n = min(int(self.spec.preempt_storm_size), n_live)
-            self.counts["preempt_storm"] += n
+            self._note("preempt_storm", n)
             return n
         return 0
 

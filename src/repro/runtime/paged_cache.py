@@ -165,6 +165,9 @@ class PageAllocator:
         self.ref = np.zeros((layout.num_pages,), np.int32)
         self.pages_in_use = 0
         self.peak_pages_in_use = 0
+        # optional EventTrace hook (set by the engine's observability
+        # layer); None ⇒ zero overhead on the allocation path.
+        self.tracer = None
         # prefix sharing state
         self._root = _TrieNode()
         self._page_node: Dict[int, _TrieNode] = {}
@@ -263,6 +266,8 @@ class PageAllocator:
         if self._cached:
             page, _ = self._cached.popitem(last=False)
             self._deregister(page)
+            if self.tracer is not None:
+                self.tracer.emit("page_evict", site="allocator", page=page)
             return page
         return None
 

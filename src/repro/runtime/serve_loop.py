@@ -64,8 +64,10 @@ continuous-batching engine:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -75,6 +77,8 @@ from jax.sharding import Mesh
 
 from repro.distributed import sharding as shd
 from repro.models import LMModel
+from repro.observability import Observability
+from repro.observability.metrics import DEFAULT_LATENCY_BOUNDS, MetricsRegistry
 from repro.runtime.fault_tolerance import (
     FaultInjector,
     RetryPolicy,
@@ -122,47 +126,99 @@ class Request:
     error: Optional[str] = None
     _next_input: int = 0
     _submit_seq: int = -1
-    # latency accounting (perf_counter stamps; managed by the engine)
+    # latency accounting (perf_counter stamps; managed by the engine).
+    # Inter-token gaps keep only a bounded tail of raw samples — the
+    # full series streams into the engine's registry histogram at
+    # commit time, so per-request memory is O(1) in generation length.
     _t_submit: Optional[float] = None
     _t_admit: Optional[float] = None
     _t_first: Optional[float] = None
-    _t_tokens: List[float] = dataclasses.field(default_factory=list)
+    _t_last: Optional[float] = None
+    _itl: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=512)
+    )
 
 
 def _pct(vals: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(vals), p)) if vals else 0.0
 
 
-@dataclasses.dataclass
+class _CounterAttr:
+    """Integer engine counter with plain attribute semantics (read,
+    assign, ``+=`` via get+set) that mirrors every write into the
+    engine's optional :class:`MetricsRegistry` — the registry is a live
+    view, never a copy that could go stale."""
+
+    def __set_name__(self, owner, name):
+        self.name = name
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        return obj._counters.get(self.name, 0)
+
+    def __set__(self, obj, value):
+        obj._counters[self.name] = int(value)
+        if obj.registry is not None:
+            obj.registry.counter("serve_" + self.name).value = int(value)
+
+
+class _GaugeAttr(_CounterAttr):
+    """Like :class:`_CounterAttr` but mirrors into a registry gauge
+    (which tracks its own peak)."""
+
+    def __set__(self, obj, value):
+        obj._counters[self.name] = int(value)
+        if obj.registry is not None:
+            obj.registry.gauge("serve_" + self.name).set(int(value))
+
+
 class EngineMetrics:
     """Engine accounting: prefill and decode measured separately, plus
-    per-request latency records and paged-scheduler counters."""
+    per-request latency records and paged-scheduler counters.
 
-    prefill_tokens: int = 0
-    decode_tokens: int = 0
-    prefill_dispatches: int = 0
-    decode_dispatches: int = 0
-    prefill_time: float = 0.0
-    decode_time: float = 0.0
-    ticks: int = 0
-    preemptions: int = 0
-    peak_pages_in_use: int = 0
+    Counters are descriptor attributes over an optional
+    :class:`~repro.observability.MetricsRegistry` (``registry=None`` ⇒
+    plain host-side ints, zero overhead). Latency retention is bounded:
+    ``request_records`` keeps the last ``max_request_records`` raw
+    records (older ones have already been folded into the registry's
+    streaming histograms at record time), and each request carries only
+    a bounded tail of raw inter-token gaps — a week-long run cannot
+    grow host memory without bound.
+    """
+
+    prefill_tokens = _CounterAttr()
+    decode_tokens = _CounterAttr()
+    prefill_dispatches = _CounterAttr()
+    decode_dispatches = _CounterAttr()
+    ticks = _CounterAttr()
+    preemptions = _CounterAttr()
+    peak_pages_in_use = _GaugeAttr()
     # prefix-sharing counters (paged engines with sharing enabled)
-    prefix_lookups: int = 0
-    prefix_hits: int = 0
-    pages_shared: int = 0
-    prefill_tokens_skipped: int = 0
-    cow_clones: int = 0
+    prefix_lookups = _CounterAttr()
+    prefix_hits = _CounterAttr()
+    pages_shared = _CounterAttr()
+    prefill_tokens_skipped = _CounterAttr()
+    cow_clones = _CounterAttr()
     # lifecycle / fault counters (DESIGN.md §7)
-    retries: int = 0
-    stragglers: int = 0
-    failed_requests: int = 0
-    cancelled_requests: int = 0
-    expired_requests: int = 0
-    shed_requests: int = 0
-    request_records: List[Dict[str, Any]] = dataclasses.field(
-        default_factory=list
-    )
+    retries = _CounterAttr()
+    stragglers = _CounterAttr()
+    failed_requests = _CounterAttr()
+    cancelled_requests = _CounterAttr()
+    expired_requests = _CounterAttr()
+    shed_requests = _CounterAttr()
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None,
+                 max_request_records: int = 1024):
+        self.registry = registry
+        self._counters: Dict[str, int] = {}
+        self.prefill_time = 0.0
+        self.decode_time = 0.0
+        #: total requests ever recorded (records themselves are capped)
+        self.requests_recorded = 0
+        self.request_records: "deque[Dict[str, Any]]" = deque(
+            maxlen=max_request_records
+        )
 
     @property
     def prefill_tokens_per_sec(self) -> float:
@@ -178,34 +234,58 @@ class EngineMetrics:
         attached at least one shared page."""
         return self.prefix_hits / max(self.prefix_lookups, 1)
 
+    def _hist(self, name: str):
+        return self.registry.histogram(name, DEFAULT_LATENCY_BOUNDS)
+
+    def observe_itl(self, dt: float) -> None:
+        """Stream one inter-token gap into the registry histogram (the
+        bounded raw tail lives on the request)."""
+        if self.registry is not None:
+            self._hist("serve_itl_seconds").observe(dt)
+
+    def sync_registry(self) -> None:
+        """Push the float time accumulators into the registry (integer
+        counters mirror on every write and need no sync)."""
+        if self.registry is None:
+            return
+        self.registry.gauge("serve_prefill_time_seconds").set(
+            self.prefill_time
+        )
+        self.registry.gauge("serve_decode_time_seconds").set(
+            self.decode_time
+        )
+
     def record_request(self, req: Request) -> None:
-        """Fold a completed request's latency stamps into the records."""
+        """Fold a completed request's latency stamps into the records
+        (bounded) and the registry histograms (streaming)."""
         if req._t_submit is None:
             return
+        qw = (
+            (req._t_admit - req._t_submit)
+            if req._t_admit is not None else 0.0
+        )
+        ttft = (
+            (req._t_first - req._t_submit)
+            if req._t_first is not None else 0.0
+        )
         rec = {
-            "uid": req.uid,
-            "queue_wait": (
-                (req._t_admit - req._t_submit)
-                if req._t_admit is not None else 0.0
-            ),
-            "ttft": (
-                (req._t_first - req._t_submit)
-                if req._t_first is not None else 0.0
-            ),
-            "itl": [
-                b - a for a, b in zip(req._t_tokens, req._t_tokens[1:])
-            ],
+            "uid": req.uid, "queue_wait": qw, "ttft": ttft,
+            "itl": list(req._itl),
         }
         self.request_records.append(rec)
+        self.requests_recorded += 1
+        if self.registry is not None:
+            self._hist("serve_queue_wait_seconds").observe(qw)
+            self._hist("serve_ttft_seconds").observe(ttft)
 
     def latency_stats(self) -> Dict[str, float]:
         """p50/p95 of queue wait, TTFT and inter-token latency (seconds)
-        over every completed request."""
+        over the retained request records (zeros when none recorded)."""
         qw = [r["queue_wait"] for r in self.request_records]
         tt = [r["ttft"] for r in self.request_records]
         itl = [x for r in self.request_records for x in r["itl"]]
         return {
-            "requests": float(len(self.request_records)),
+            "requests": float(self.requests_recorded),
             "queue_wait_p50": _pct(qw, 50), "queue_wait_p95": _pct(qw, 95),
             "ttft_p50": _pct(tt, 50), "ttft_p95": _pct(tt, 95),
             "itl_p50": _pct(itl, 50), "itl_p95": _pct(itl, 95),
@@ -397,6 +477,7 @@ class ServeLoop:
         retry_policy: Optional[RetryPolicy] = None,
         audit: bool = False,
         stall_patience: Optional[int] = None,
+        observability: Optional[Observability] = None,
     ):
         self.model = model
         self.params = params
@@ -433,6 +514,27 @@ class ServeLoop:
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
         self.prefill_fn = make_prefill_step(model)
+        # Observability is strictly additive: without it (or with
+        # device_telemetry off) the engine dispatches the exact step
+        # functions above — the telemetry variants are *separate* jitted
+        # functions, so the disabled path's HLO is byte-identical to an
+        # engine built before this layer existed.
+        self.obs = observability
+        self._telemetry = (
+            observability is not None and observability.device_telemetry
+        )
+        self.step_fn_t = None
+        self.prefill_fn_t = None
+        if self._telemetry:
+            self.step_fn_t = jax.jit(
+                functools.partial(model.decode_step, telemetry=True),
+                donate_argnums=(1,),
+            )
+            if getattr(model, "supports_prefill", False):
+                self.prefill_fn_t = jax.jit(
+                    functools.partial(model.prefill, telemetry=True),
+                    donate_argnums=(1,),
+                )
         if self.paged:
             bk = model.cfg.energon.decode_key_block
             mb = rows // bk
@@ -465,7 +567,9 @@ class ServeLoop:
         self._admit_seq = itertools.count()
         self.pending: List[Request] = []
         self.completed: List[Request] = []
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(
+            registry=observability.registry if observability else None
+        )
         # --- lifecycle / fault-tolerance state (DESIGN.md §7) ---------
         #: bounded admission queue: `submit` raises QueueFull (or sheds
         #: a lower-priority victim) past this many *queued* requests.
@@ -495,6 +599,33 @@ class ServeLoop:
         #: `completed` so drain semantics are unchanged.
         self.terminated: List[Request] = []
         self.straggler = StragglerMonitor()
+        # hook the allocator's eviction site and the injector's fault
+        # sites into the event trace
+        if observability is not None:
+            if self.allocator is not None:
+                self.allocator.tracer = observability.trace
+            if fault_injector is not None:
+                fault_injector.tracer = observability.trace
+
+    def _emit(self, name: str, **kw):
+        """Emit a trace event iff observability is attached (the
+        disabled path is one attribute check)."""
+        if self.obs is not None:
+            self.obs.trace.emit(name, **kw)
+
+    def _obs_tick_end(self):
+        """Per-tick series + float-gauge sync at every tick exit."""
+        if self.obs is None:
+            return
+        self.metrics.sync_registry()
+        self.obs.record_tick_series(
+            self.metrics.ticks,
+            pool_occupancy=(
+                self.allocator.pages_in_use if self.paged else 0
+            ),
+            queue_depth=len(self.pending),
+            live_slots=sum(s is not None for s in self.slots),
+        )
 
     @property
     def ticks(self) -> int:
@@ -568,7 +699,8 @@ class ServeLoop:
 
     # --- lifecycle internals -------------------------------------------
     def _finish_terminal(
-        self, req: Request, state: str, error: Optional[str] = None
+        self, req: Request, state: str, error: Optional[str] = None,
+        slot: Optional[int] = None,
     ):
         """Move a request to a non-`done` terminal state. ``done`` stays
         False — it means "completed normally"; ``state`` is the
@@ -584,13 +716,20 @@ class ServeLoop:
             "shed": "shed_requests",
         }[state]
         setattr(self.metrics, counter, getattr(self.metrics, counter) + 1)
+        event = {
+            "failed": "quarantine",
+            "cancelled": "cancel",
+            "expired": "expire",
+            "shed": "shed",
+        }[state]
+        self._emit(event, slot=slot, uid=req.uid, error=error or "")
 
     def _evict_slot(self, i: int, state: str, error: Optional[str] = None):
         """Terminal eviction of a live slot (cancel / expire /
         quarantine): frees its pages eagerly, like completion does."""
         req = self.slots[i]
         self._release_slot(i)
-        self._finish_terminal(req, state, error)
+        self._finish_terminal(req, state, error, slot=i)
 
     def _expire_deadlines(self):
         """Evict every request whose TTL has lapsed — at any state.
@@ -636,6 +775,7 @@ class ServeLoop:
 
         def note(attempt_no, exc):
             self.metrics.retries += 1
+            self._emit("retry", site="step_dispatch", attempt=attempt_no)
 
         policy = self.retry_policy or RetryPolicy(base_delay=0.0)
         return retry_step(attempt, policy=policy, on_retry=note)
@@ -798,6 +938,8 @@ class ServeLoop:
                     self.metrics.prefix_lookups += 1
                 if pair is not None:
                     self.metrics.cow_clones += 1
+                    self._emit("cow_clone", slot=i, uid=req.uid,
+                               src=pair[0], dst=pair[1], site="admit")
                 if skip > 0:
                     self.metrics.prefix_hits += 1
                     self.metrics.pages_shared += len(attach) + (
@@ -808,6 +950,8 @@ class ServeLoop:
             self.slots[i] = req
             req.state = "prefill"
             self._slot_order[i] = next(self._admit_seq)
+            self._emit("admit", slot=i, uid=req.uid, resumed=resumed,
+                       prompt_len=len(seq_tokens), skip=skip)
             if req._t_admit is None:
                 req._t_admit = now
             # per-request RNG stream: deterministic in uid (and, for
@@ -877,6 +1021,8 @@ class ServeLoop:
         bt = self._device_block_table() if self.paged else None
         last_logits = {}
         logits = None
+        use_t = self._telemetry and self.prefill_fn_t is not None
+        stats_chunks = []
         for c in range(n_chunks):
             toks = np.zeros((self.batch_slots, C), np.int32)
             # position sentinel max_len ⇒ no cache write, output ignored
@@ -894,11 +1040,20 @@ class ServeLoop:
             }
             if bt is not None:
                 inputs["block_table"] = bt
-            logits, self.cache = self._dispatch(
-                self.prefill_fn,
-                self.params, self.cache, inputs, self.cache_index,
-            )
+            if use_t:
+                logits, self.cache, st = self._dispatch(
+                    self.prefill_fn_t,
+                    self.params, self.cache, inputs, self.cache_index,
+                )
+                stats_chunks.append(st)
+            else:
+                logits, self.cache = self._dispatch(
+                    self.prefill_fn,
+                    self.params, self.cache, inputs, self.cache_index,
+                )
             self.metrics.prefill_dispatches += 1
+            self._emit("prefill_chunk", site="prefill",
+                       chunk=c, slots=len(admitted))
             for i, req, seq, resumed, skip in admitted:
                 lo = skip + c * C
                 if not resumed and lo < len(seq) <= lo + C:
@@ -915,6 +1070,13 @@ class ServeLoop:
             self._lengths[i] = len(seq)
             self.metrics.prefill_tokens += len(seq) - skip
         self.metrics.prefill_time += time.perf_counter() - t0
+        self._emit("prefill_wave", site="prefill",
+                   dur=time.perf_counter() - t0,
+                   chunks=n_chunks, slots=len(admitted))
+        if stats_chunks:
+            # one host sync for the whole wave; stats are tiny [L, B, 4]
+            for st in jax.device_get(stats_chunks):
+                self.obs.record_prefill_stats(np.asarray(st))
         toks = None
         if last_logits:
             # sample every *fresh* admitted slot's first token in one
@@ -1027,6 +1189,8 @@ class ServeLoop:
         # never be able to fail.
         self.pending.insert(0, req)
         self.metrics.preemptions += 1
+        self._emit("preempt", slot=victim, uid=req.uid,
+                   written=len(req.prompt) + len(req.tokens_out) - 1)
 
     def _ensure_decode_capacity(self, live: List[int]) -> List[int]:
         """Every live slot must own the page its next token's KV row
@@ -1064,6 +1228,11 @@ class ServeLoop:
                                 self.cache, [pair[0]], [pair[1]]
                             )
                             self.metrics.cow_clones += 1
+                            self._emit(
+                                "cow_clone", slot=i,
+                                uid=self.slots[i].uid,
+                                src=pair[0], dst=pair[1], site="decode",
+                            )
                 if got is not None:
                     break
                 victim = max(
@@ -1080,8 +1249,12 @@ class ServeLoop:
         now = time.perf_counter()
         if not req.tokens_out:
             req._t_first = now
+        elif req._t_last is not None:
+            dt = now - req._t_last
+            req._itl.append(dt)
+            self.metrics.observe_itl(dt)
+        req._t_last = now
         req.tokens_out.append(tok)
-        req._t_tokens.append(now)
         req._next_input = tok
         # a request generating m tokens writes prompt + m - 1 rows (the
         # final token is sampled but never appended to the cache), so
@@ -1096,6 +1269,8 @@ class ServeLoop:
             self.completed.append(req)
             self._release_slot(i)
             self.metrics.record_request(req)
+            self._emit("finish", slot=i, uid=req.uid,
+                       tokens=len(req.tokens_out))
 
     def _audit_tick(self):
         """Optional per-tick allocator self-check: the PR 4 fuzzer's
@@ -1111,6 +1286,8 @@ class ServeLoop:
         """One engine iteration: expire deadlines, admit, decode one
         token for all live slots (quarantining any slot whose logits go
         non-finite)."""
+        if self.obs is not None:
+            self.obs.trace.tick = self.metrics.ticks
         self._expire_deadlines()
         if self._injector is not None:
             self._injected_preempt_storm()
@@ -1118,6 +1295,7 @@ class ServeLoop:
         live = [i for i, r in enumerate(self.slots) if r is not None]
         if not live:
             self._audit_tick()
+            self._obs_tick_end()
             return
         if self.paged:
             live = self._ensure_decode_capacity(live)
@@ -1125,6 +1303,7 @@ class ServeLoop:
                 self.allocator.peak_pages_in_use
             if not live:
                 self._audit_tick()
+                self._obs_tick_end()
                 return
         t0 = time.perf_counter()
         tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
@@ -1137,10 +1316,17 @@ class ServeLoop:
         }
         if self.paged:
             inputs["block_table"] = self._device_block_table()
-        logits, self.cache = self._dispatch(
-            self.step_fn,
-            self.params, self.cache, inputs, self.cache_index,
-        )
+        step_stats = None
+        if self._telemetry and self.step_fn_t is not None:
+            logits, self.cache, step_stats = self._dispatch(
+                self.step_fn_t,
+                self.params, self.cache, inputs, self.cache_index,
+            )
+        else:
+            logits, self.cache = self._dispatch(
+                self.step_fn,
+                self.params, self.cache, inputs, self.cache_index,
+            )
         self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
         self._lengths += active
         if self.paged and self.sharing:
@@ -1175,7 +1361,15 @@ class ServeLoop:
         next_tokens, self.slot_keys, finite = _sample_step(
             logits, jnp.asarray(self._temps), self.slot_keys
         )
-        next_tokens, finite = jax.device_get((next_tokens, finite))
+        if step_stats is not None:
+            # stats ride the device_get the engine already pays for the
+            # sampled tokens — no extra host sync on the telemetry path.
+            next_tokens, finite, stats_host = jax.device_get(
+                (next_tokens, finite, step_stats)
+            )
+            self.obs.record_decode_stats(np.asarray(stats_host), slots=live)
+        else:
+            next_tokens, finite = jax.device_get((next_tokens, finite))
         if self._injector is not None:
             # injected straggler: the sleep lands inside decode_time so
             # the StragglerMonitor sees it like a real slow step.
@@ -1185,6 +1379,7 @@ class ServeLoop:
         self.metrics.decode_dispatches += 1
         elapsed = time.perf_counter() - t0
         self.metrics.decode_time += elapsed
+        self._emit("decode_tick", site="decode", dur=elapsed, live=len(live))
         if self.straggler.record(elapsed):
             self.metrics.stragglers += 1
         for i in live:
@@ -1199,6 +1394,7 @@ class ServeLoop:
             self._commit_token(i, req, int(next_tokens[i]))
         self.metrics.ticks += 1
         self._audit_tick()
+        self._obs_tick_end()
 
     # --- draining ------------------------------------------------------
     def _has_work(self) -> bool:

@@ -686,7 +686,7 @@ class TestFusedPrefillKernel:
             round_bits=(2, 4), query_block=bq, key_block=bk,
             interpret=True,
         )
-        idx, val = ops._fused_prefill_select(
+        idx, val, _ = ops._fused_prefill_select(
             s0, s1, round_bits=(2, 4), alphas=(0.0, 0.0),
             query_block=bq, key_block=bk, block_budget=budget,
             keep_all=False, keep_first=True, keep_diagonal=True,

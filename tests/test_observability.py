@@ -1,0 +1,433 @@
+"""Serving-runtime observability (DESIGN.md §8): sparsity telemetry
+exactness, trace determinism under chaos, metrics primitives, exporter
+schemas, and the near-free-when-disabled contract.
+
+The load-bearing guarantees:
+
+* **Exactness** — the per-dispatch ``[L, B, 4]`` stats are summed on
+  device from the very masks the MP-MRF tier select gathers with, so
+  ρ_eff is the true runtime keep ratio, not an estimate. Checked
+  against mask-derived numpy oracles and the length-derived live-block
+  count; ρ ≤ 1 (keep-everything) must report ρ_eff == 1.0 exactly.
+* **Determinism** — events carry tick + site, wall-clock only in
+  ``t``/``dur``; two fixed-seed chaos runs must produce identical
+  ``signature()`` sequences.
+* **Invisibility** — telemetry=True returns bit-identical outputs, and
+  an engine built *without* an Observability lowers byte-identical
+  decode HLO (the off path adds no dispatches and no host syncs).
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig, energon_decode_attention
+from repro.core import filtering as flt
+from repro.models import LMModel
+from repro.observability import (
+    DEFAULT_LATENCY_BOUNDS,
+    Histogram,
+    MetricsRegistry,
+    Observability,
+    SparsityAggregator,
+    validate_chrome_trace,
+)
+from repro.runtime import FaultInjector, FaultSpec, Request, ServeLoop
+from repro.runtime.serve_loop import EngineMetrics
+
+
+# ---------------------------------------------------------------------------
+# Sparsity telemetry: stats vs mask-derived oracles
+# ---------------------------------------------------------------------------
+
+
+class TestSelectionStats:
+    def _operands(self, seed=0, B=2, H=2, G=4, n=128, d=16):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(B, H, G, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, H, n, d)), jnp.float32)
+        cl = jnp.asarray([n // 3, n], jnp.int32)
+        return q, k, v, cl
+
+    def test_stats_match_mask_oracle(self):
+        """selection_stats == counts derived directly from the masks the
+        selection materialized, and `live` == the length-derived block
+        count (independent of any selection internals)."""
+        bk = 16
+        q, k, _, cl = self._operands()
+        B, H, G, d = q.shape
+        n = k.shape[-2]
+        n_kb = n // bk
+        budget = -(-n_kb // 2)
+        mcfg = flt.MPMRFConfig(
+            granularity="block", key_block=bk, block_budget=budget,
+        )
+        valid = (jnp.arange(n)[None, None, None, :]
+                 < cl[:, None, None, None])
+        res = flt.mpmrf_decode_block_select(
+            q, k, mcfg, valid, cl, with_stats=True
+        )
+        stats = np.asarray(flt.selection_stats(res))
+        assert stats.shape == (B, 4) and stats.dtype == np.int32
+
+        sel = np.asarray(res.block_valid)          # [B, H, 1, budget]
+        tier = np.asarray(res.sel_tier)
+        live = np.asarray(res.live_mask)           # [B, H, 1, n_kb]
+        oracle = np.stack([
+            sel.reshape(B, -1).sum(1),
+            live.reshape(B, -1).sum(1),
+            ((tier == 3) & sel).reshape(B, -1).sum(1),
+            ((tier == 1) & sel).reshape(B, -1).sum(1),
+        ], axis=1)
+        np.testing.assert_array_equal(stats, oracle)
+        # live blocks from lengths alone: ceil(len / bk) per head
+        expect_live = np.asarray(-(-np.asarray(cl) // bk)) * H
+        np.testing.assert_array_equal(stats[:, 1], expect_live)
+        # accounting identities
+        assert (stats[:, 0] <= stats[:, 1]).all()
+        assert (stats[:, 2] + stats[:, 3] <= stats[:, 0]).all()
+
+    @pytest.mark.parametrize("ratio", [2.0, 4.0])
+    def test_attention_telemetry_invisible_and_exact(self, ratio):
+        """telemetry=True returns the bit-identical output plus stats
+        whose live column matches the length-derived count; ρ_eff fed
+        through the aggregator equals selected/live exactly."""
+        bk = 16
+        q, k, v, cl = self._operands(seed=3)
+        H = q.shape[1]
+        cfg = EnergonConfig(impl="mpmrf_block", pruning_ratio=ratio,
+                            decode_key_block=bk, min_prune_layer=0)
+        out0 = energon_decode_attention(q, k, v, cl, cfg, layer_index=5)
+        out1, stats = energon_decode_attention(
+            q, k, v, cl, cfg, layer_index=5, telemetry=True
+        )
+        np.testing.assert_array_equal(np.asarray(out0), np.asarray(out1))
+        stats = np.asarray(stats)
+        expect_live = np.asarray(-(-np.asarray(cl) // bk)) * H
+        np.testing.assert_array_equal(stats[:, 1], expect_live)
+
+        agg = SparsityAggregator()
+        agg.record_decode(stats[None], slots=[0, 1])
+        assert agg.rho_eff_decode == pytest.approx(
+            stats[:, 0].sum() / stats[:, 1].sum()
+        )
+        if ratio > 1.0:
+            assert agg.rho_eff_decode < 1.0
+
+    def test_keep_all_reports_rho_one(self):
+        """ρ ≤ 1 is the keep-everything contract: every live block must
+        be selected, so ρ_eff == 1.0 *exactly* — not approximately."""
+        bk = 16
+        q, k, v, cl = self._operands(seed=7)
+        cfg = EnergonConfig(impl="mpmrf_block", pruning_ratio=1.0,
+                            decode_key_block=bk, min_prune_layer=0)
+        _, stats = energon_decode_attention(
+            q, k, v, cl, cfg, layer_index=5, telemetry=True
+        )
+        stats = np.asarray(stats)
+        np.testing.assert_array_equal(stats[:, 0], stats[:, 1])
+        agg = SparsityAggregator()
+        agg.record_decode(stats[None], slots=[0, 1])
+        assert agg.rho_eff_decode == 1.0
+
+    def test_aggregator_rejects_bad_shapes(self):
+        agg = SparsityAggregator()
+        with pytest.raises(ValueError):
+            agg.record_decode(np.zeros((2, 4), np.int32))
+        # empty slot list: dispatch is dropped, not recorded
+        agg.record_decode(np.ones((1, 2, 4), np.int32), slots=[])
+        assert agg.decode_dispatches == 0
+
+
+# ---------------------------------------------------------------------------
+# Metrics primitives
+# ---------------------------------------------------------------------------
+
+
+class TestHistogram:
+    @pytest.mark.parametrize("seed", [0, 1])
+    def test_percentiles_vs_numpy_oracle(self, seed):
+        """Interpolated percentile error is bounded by the width of the
+        bucket holding the target rank."""
+        rng = np.random.default_rng(seed)
+        samples = rng.lognormal(mean=-4.0, sigma=1.5, size=2000)
+        h = Histogram("t", DEFAULT_LATENCY_BOUNDS)
+        for s in samples:
+            h.observe(s)
+        bounds = (0.0,) + h.bounds + (float("inf"),)
+        for p in (50, 90, 95, 99):
+            exact = float(np.percentile(samples, p))
+            est = h.percentile(p)
+            i = np.searchsorted(bounds, exact)
+            lo, hi = bounds[max(i - 1, 0)], bounds[min(i, len(bounds) - 1)]
+            width = (hi if np.isfinite(hi) else h.max) - lo
+            assert abs(est - exact) <= width + 1e-12, (p, est, exact)
+        assert h.count == len(samples)
+        assert h.mean == pytest.approx(samples.mean())
+        assert h.min == pytest.approx(samples.min())
+        assert h.max == pytest.approx(samples.max())
+
+    def test_empty_and_edge_cases(self):
+        h = Histogram("t", (1.0, 2.0))
+        assert h.percentile(50) == 0.0 and h.mean == 0.0
+        h.observe(5.0)  # overflow bucket
+        assert h.percentile(50) == pytest.approx(5.0)
+        with pytest.raises(ValueError):
+            Histogram("bad", (2.0, 1.0))
+
+    def test_registry_type_and_bounds_clash(self):
+        reg = MetricsRegistry()
+        reg.counter("x").inc()
+        with pytest.raises(ValueError):
+            reg.gauge("x")
+        reg.histogram("h", (1.0, 2.0))
+        with pytest.raises(ValueError):
+            reg.histogram("h", (1.0, 3.0))
+        assert reg.histogram("h", (1.0, 2.0)) is reg.histogram(
+            "h", (1.0, 2.0)
+        )
+
+    def test_prometheus_text_format(self):
+        reg = MetricsRegistry()
+        reg.counter("serve_ticks").value = 7
+        reg.gauge("pool").set(3)
+        h = reg.histogram("lat", (0.1, 1.0))
+        for v in (0.05, 0.5, 5.0):
+            h.observe(v)
+        text = reg.prometheus_text()
+        assert "# TYPE serve_ticks counter" in text
+        assert "serve_ticks 7" in text
+        assert "# TYPE pool gauge" in text
+        # cumulative buckets: 1, 2, and +Inf == count
+        assert 'lat_bucket{le="0.1"} 1' in text
+        assert 'lat_bucket{le="1.0"} 2' in text
+        assert 'lat_bucket{le="+Inf"} 3' in text
+        assert "lat_count 3" in text
+
+
+# ---------------------------------------------------------------------------
+# Engine-level: determinism, invisibility, retention, exporters
+# ---------------------------------------------------------------------------
+
+
+def _model():
+    cfg = ModelConfig(
+        name="obs-test", family="dense", num_layers=2, d_model=32,
+        num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=64,
+        dtype="float32", remat="none",
+        energon=EnergonConfig(
+            impl="mpmrf_block", pruning_ratio=2.0, query_block=8,
+            key_block=16, decode_key_block=16, min_prune_layer=1,
+            filter_cache_min_len=0,
+        ),
+    )
+    model = LMModel(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mt():
+    return _model()
+
+
+def _trace(n_req=5):
+    trace = []
+    for uid in range(n_req):
+        fam = uid % 2
+        prefix = [(fam * 43 + j * 13) % 61 + 1 for j in range(20)]
+        suffix = [(uid * 29 + j * 7) % 61 + 1 for j in range((uid * 5) % 11)]
+        trace.append({
+            "uid": uid, "prompt": prefix + suffix,
+            "max_new_tokens": 4 + (uid % 4),
+            "temperature": 0.8 if uid % 2 else 0.0,
+        })
+    return trace
+
+
+def _run(mt, observability=None, chaos_seed=None):
+    cfg, model, params = mt
+    injector = None
+    if chaos_seed is not None:
+        injector = FaultInjector(seed=chaos_seed, spec=FaultSpec(
+            alloc_failure=0.05, step_exception=0.05, nan_logits=0.02,
+            preempt_storm=0.05,
+        ))
+    engine = ServeLoop(
+        model, params, batch_slots=2, max_len=96, prefill_chunk=8,
+        eos_token=cfg.vocab_size - 1, audit=True,
+        fault_injector=injector, observability=observability,
+    )
+    for r in _trace():
+        engine.submit(Request(**r))
+    done = engine.run_until_drained(max_ticks=20_000)
+    return engine, {r.uid: list(r.tokens_out) for r in done}
+
+
+class TestEngineObservability:
+    def test_trace_deterministic_under_fixed_seed_chaos(self, mt):
+        """Two runs of the same request trace under the same chaos seed
+        must emit identical event sequences modulo wall-clock."""
+        obs_a, obs_b = Observability(), Observability()
+        _, out_a = _run(mt, observability=obs_a, chaos_seed=7)
+        _, out_b = _run(mt, observability=obs_b, chaos_seed=7)
+        assert out_a == out_b
+        sig_a, sig_b = obs_a.trace.signature(), obs_b.trace.signature()
+        assert len(sig_a) > 0
+        assert sig_a == sig_b
+        names = {s[0] for s in sig_a}
+        assert "admit" in names and "decode_tick" in names
+        assert "fault_injected" in names  # the storm actually fired
+
+    def test_telemetry_invisible_to_outputs(self, mt):
+        """Attaching the observability layer (device telemetry on) must
+        not change a single sampled token, greedy or stochastic."""
+        _, base = _run(mt)
+        _, with_obs = _run(mt, observability=Observability())
+        assert base == with_obs
+
+    def test_lifecycle_events_cover_requests(self, mt):
+        obs = Observability()
+        engine, out = _run(mt, observability=obs)
+        admits = [e for e in obs.trace.events if e.name == "admit"]
+        finishes = [e for e in obs.trace.events if e.name == "finish"]
+        assert {e.uid for e in finishes} == set(out)
+        assert len(admits) >= len(out)
+        for e in admits + finishes:
+            assert e.slot is not None and 0 <= e.slot < 2
+        # per-tick counter series recorded with gauges mirrored
+        assert len(obs.series["live_slots"]) == engine.metrics.ticks
+        assert obs.registry.gauge("serve_pool_occupancy").peak > 0
+
+    def test_rho_eff_recorded_end_to_end(self, mt):
+        obs = Observability()
+        _run(mt, observability=obs)
+        sp = obs.sparsity.snapshot()
+        assert sp["decode"]["dispatches"] > 0
+        assert 0.0 < sp["decode"]["rho_eff"] <= 1.0
+        assert sp["prefill"]["rho_eff"] == pytest.approx(1.0)
+        # snapshot carries rho histograms too
+        snap = obs.snapshot()
+        assert snap["schema"] == "energon-obs-v1"
+        assert snap["metrics"]["serve_rho_eff_decode"]["count"] > 0
+        json.dumps(snap)  # JSON-serializable end to end
+
+    def test_disabled_path_is_untouched(self, mt):
+        """No Observability ⇒ no telemetry step functions, no events —
+        and the lowered decode HLO is byte-identical to a model that
+        never heard of telemetry (telemetry=False is the default the
+        jit sees, so the off path cannot cost anything)."""
+        cfg, model, params = mt
+        engine = ServeLoop(model, params, batch_slots=2, max_len=96,
+                           prefill_chunk=8,
+                           eos_token=cfg.vocab_size - 1)
+        assert engine.obs is None and engine.step_fn_t is None
+
+        p_shapes = jax.eval_shape(lambda: params)
+        cache = jax.eval_shape(lambda: model.init_cache(2, 96))
+        inputs = {"tokens": jax.ShapeDtypeStruct((2, 1), jnp.int32)}
+        ci = jax.ShapeDtypeStruct((2,), jnp.int32)
+
+        def lower(fn):
+            return jax.jit(fn).lower(
+                p_shapes, cache, inputs, ci
+            ).as_text()
+
+        import functools
+        # partial() everywhere so the jit module name is identical and
+        # the diff, if any, is the computation itself
+        default = lower(functools.partial(model.decode_step))
+        explicit_off = lower(
+            functools.partial(model.decode_step, telemetry=False)
+        )
+        on = lower(functools.partial(model.decode_step, telemetry=True))
+        assert default == explicit_off
+        assert default != on
+
+    def test_trace_off_engine_emits_nothing(self, mt):
+        """device_telemetry=False keeps events/host metrics but builds
+        no telemetry step functions."""
+        obs = Observability(device_telemetry=False)
+        engine, out = _run(mt, observability=obs)
+        assert engine.step_fn_t is None
+        assert obs.sparsity.decode_dispatches == 0
+        assert len(obs.trace) > 0  # host-side events still flow
+        assert len(out) == len(_trace())
+
+    def test_exporters_schema_valid(self, mt):
+        obs = Observability()
+        _run(mt, observability=obs, chaos_seed=3)
+        doc = obs.export_chrome_trace()
+        validate_chrome_trace(doc)
+        names = {e["name"] for e in doc["traceEvents"]}
+        assert {"admit", "decode_tick", "pool_occupancy"} <= names
+        # slot lanes got residency spans
+        spans = [e for e in doc["traceEvents"]
+                 if e["ph"] == "X" and e["name"].startswith("req ")]
+        assert spans
+        text = obs.registry.prometheus_text()
+        assert "serve_ticks" in text and "serve_itl_seconds_bucket" in text
+        with pytest.raises(ValueError):
+            validate_chrome_trace({"traceEvents": [{"ph": "?"}]})
+
+    def test_trace_ring_buffer_bounded(self):
+        obs = Observability(trace_capacity=8)
+        for i in range(20):
+            obs.trace.emit("decode_tick", site="t", i=i)
+        assert len(obs.trace) == 8
+        assert obs.trace.dropped == 12
+        assert obs.trace.events[0].args["i"] == 12  # oldest retained
+
+
+class TestMetricsRetention:
+    def test_request_records_capped(self):
+        m = EngineMetrics(max_request_records=4)
+        for uid in range(10):
+            req = Request(uid=uid, prompt=[1], max_new_tokens=1)
+            req._t_submit, req._t_admit, req._t_first = 0.0, 0.5, 1.0
+            req._itl.extend([0.01, 0.02])
+            m.record_request(req)
+        assert len(m.request_records) == 4
+        assert m.requests_recorded == 10
+        assert m.request_records[0]["uid"] == 6
+        st = m.latency_stats()
+        assert st["requests"] == 10.0
+        assert st["ttft_p50"] == pytest.approx(1.0)
+
+    def test_latency_stats_safe_on_empty(self):
+        st = EngineMetrics().latency_stats()
+        assert st["requests"] == 0.0
+        assert all(v == 0.0 for v in st.values())
+
+    def test_itl_tail_bounded_but_streamed(self):
+        """Per-request raw ITL keeps only a bounded tail; the registry
+        histogram sees every observation."""
+        reg = MetricsRegistry()
+        m = EngineMetrics(registry=reg)
+        req = Request(uid=0, prompt=[1], max_new_tokens=1)
+        req._t_submit = 0.0
+        for _ in range(1000):
+            req._itl.append(0.01)
+            m.observe_itl(0.01)
+        assert len(req._itl) == 512  # deque cap
+        assert reg.histogram(
+            "serve_itl_seconds", DEFAULT_LATENCY_BOUNDS
+        ).count == 1000
+
+    def test_counters_mirror_into_registry(self):
+        reg = MetricsRegistry()
+        m = EngineMetrics(registry=reg)
+        m.ticks += 3
+        m.peak_pages_in_use = 7
+        assert m.ticks == 3
+        assert reg.counter("serve_ticks").value == 3
+        assert reg.gauge("serve_peak_pages_in_use").value == 7
+        # registry-less metrics behave identically
+        m2 = EngineMetrics()
+        m2.ticks += 3
+        assert m2.ticks == 3
