@@ -19,10 +19,13 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map_unchecked
 from repro.core import filtering as flt
 from repro.core import quantization as qlib
 from repro.core import sparse_attention as spa
+from repro.distributed import sharding as shd
 from repro.kernels import block_sparse_attention as bsa_kernel
 from repro.kernels import flash_attention as fa_kernel
 from repro.kernels import mpmrf_decode as dec_kernel
@@ -34,6 +37,30 @@ NEG_INF = -1e30
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _tp_mesh(kv_heads: int):
+    """The active serve mesh, iff the fused paged kernels should
+    shard-map over its 'model' axis.
+
+    Engagement requires the KV-head axis to divide the model axis —
+    the same condition under which :func:`paged_pool_pspec` head-shards
+    the resident pools, so the shard_map's in_specs match the pool
+    layout and no resharding happens at the boundary. Pools whose KV
+    heads don't divide (page-aligned row sharding) stay on the GSPMD
+    auto-partitioned path: a row shard splits one head's pages across
+    devices, so its survivor attention would need a cross-device
+    partial-softmax merge — numerically fine, but not bit-identical,
+    and the serve engine's equivalence contracts demand bit-identity
+    (DESIGN.md §9).
+    """
+    mesh = shd.get_active_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    tp = mesh.shape["model"]
+    if tp <= 1 or kv_heads % tp:
+        return None
+    return mesh
 
 
 def flash_attention(
@@ -351,6 +378,18 @@ def fused_paged_decode_attention(
       telemetry: also return int32 ``[B, 4]`` selection stats (as in
         :func:`fused_decode_attention`).
 
+    Under an active serve mesh with a >1 'model' axis (and KV heads
+    divisible by it), the whole pipeline runs inside ``shard_map``:
+    each device holds a KV-head shard of the resident pools
+    (`paged_pool_pspec`), scores and selects on its *own* per-shard
+    survivor tables, and streams only its shard's survivor blocks. Per
+    (batch, head) row the filter/selection/gather math is untouched —
+    the head axis is embarrassingly parallel — and the tiny ``[B, KV,
+    G, d]`` output is all-gathered (an exact concatenation) back to
+    replicated, so engaging tensor parallelism cannot perturb the
+    bit-identical stream contracts. Telemetry stats psum over the mesh
+    axis (int32 head sums — order-free).
+
     Returns:
       ``[B, KV, G, d]`` attention output (dtype of v_pool); with
       ``telemetry``, ``(out, stats)``.
@@ -358,6 +397,61 @@ def fused_paged_decode_attention(
     if len(round_bits) != 2:
         raise ValueError("fused decode kernel supports 2-round configs")
     interpret = _default_interpret() if interpret is None else interpret
+    kw = dict(
+        round_bits=tuple(round_bits), alphas=tuple(alphas),
+        key_block=key_block, block_budget=block_budget,
+        keep_all=keep_all, keep_first=keep_first,
+        keep_diagonal=keep_diagonal, scale=scale, interpret=interpret,
+        with_stats=telemetry,
+    )
+    mesh = _tp_mesh(q.shape[1])
+    if mesh is None:
+        out, stats = _paged_decode_core(
+            q, k_pool, v_pool, k_codes, k_scale, block_table,
+            cache_length, live_budget, **kw,
+        )
+        return (out, stats) if telemetry else out
+
+    args = [q, k_pool, v_pool, k_codes, k_scale, block_table,
+            cache_length]
+    specs = [
+        P(None, "model", None, None),       # q: KV heads over TP
+        P("model", None, None),             # k_pool
+        P("model", None, None),             # v_pool
+        P("model", None, None),             # k_codes
+        P("model", None),                   # k_scale
+        P(None, None),                      # block_table (replicated)
+        P(None),                            # cache_length (replicated)
+    ]
+    has_lb = live_budget is not None
+    if has_lb:
+        args.append(live_budget)
+        specs.append(P(None))
+
+    def body(*xs):
+        lb = xs[7] if has_lb else None
+        out, stats = _paged_decode_core(*xs[:7], lb, **kw)
+        out = jax.lax.all_gather(out, "model", axis=1, tiled=True)
+        if stats is not None:
+            stats = jax.lax.psum(stats, "model")
+        return (out, stats) if telemetry else out
+
+    fn = shard_map_unchecked(
+        body, mesh=mesh, in_specs=tuple(specs),
+        out_specs=(P(), P()) if telemetry else P(),
+    )
+    return fn(*args)
+
+
+def _paged_decode_core(
+    q, k_pool, v_pool, k_codes, k_scale, block_table, cache_length,
+    live_budget, *, round_bits, alphas, key_block, block_budget,
+    keep_all, keep_first, keep_diagonal, scale, interpret, with_stats,
+):
+    """Shard-local fused paged decode: the pipeline of
+    :func:`fused_paged_decode_attention` over whatever KV-head slice of
+    the pools the caller holds (the full pools on a single device).
+    Returns ``(out, stats_or_None)``."""
     batch, heads, g, d = q.shape
     pool_rows = k_pool.shape[-2]
     bk = key_block
@@ -392,7 +486,7 @@ def fused_paged_decode_attention(
         alphas=alphas, key_block=bk, block_budget=block_budget,
         keep_all=keep_all, keep_first=keep_first,
         keep_diagonal=keep_diagonal,
-        live_budget=live_budget, heads=heads, with_stats=telemetry,
+        live_budget=live_budget, heads=heads, with_stats=with_stats,
     )
 
     out = dec_kernel.paged_decode_gather_attention(
@@ -403,9 +497,9 @@ def fused_paged_decode_attention(
         key_block=bk, scale=scale, interpret=interpret,
     )
     out = out.reshape(batch, heads, g, d)
-    if telemetry:
+    if with_stats:
         return out, stats.reshape(batch, heads, 4).sum(axis=1)
-    return out
+    return out, None
 
 
 def _fused_prefill_select(
@@ -612,6 +706,12 @@ def fused_paged_prefill_attention(
       telemetry: also return int32 ``[B, 4]`` selection stats summed
         over heads and query blocks.
 
+    Under an active serve mesh with a >1 'model' axis, the pipeline
+    runs inside ``shard_map`` with KV-head-sharded pools and per-shard
+    survivor tables, exactly as :func:`fused_paged_decode_attention` —
+    the prefill twin shares its engagement rule, its all-gathered
+    (exact) output, and its bit-identity argument.
+
     Returns:
       ``[B, KV, n_q, d]`` attention output (dtype of v_pool); with
       ``telemetry``, ``(out, stats)``.
@@ -619,6 +719,61 @@ def fused_paged_prefill_attention(
     if len(round_bits) != 2:
         raise ValueError("fused prefill kernel supports 2-round configs")
     interpret = _default_interpret() if interpret is None else interpret
+    kw = dict(
+        round_bits=tuple(round_bits), alphas=tuple(alphas),
+        query_block=query_block, key_block=key_block,
+        block_budget=block_budget, keep_all=keep_all,
+        keep_first=keep_first, keep_diagonal=keep_diagonal,
+        scale=scale, interpret=interpret, with_stats=telemetry,
+    )
+    mesh = _tp_mesh(q.shape[1])
+    if mesh is None:
+        out, stats = _paged_prefill_core(
+            q, k_pool, v_pool, k_codes, k_scale, block_table,
+            q_positions, diag_blocks, **kw,
+        )
+        return (out, stats) if telemetry else out
+
+    args = [q, k_pool, v_pool, k_codes, k_scale, block_table,
+            q_positions]
+    specs = [
+        P(None, "model", None, None),       # q: KV heads over TP
+        P("model", None, None),             # k_pool
+        P("model", None, None),             # v_pool
+        P("model", None, None),             # k_codes
+        P("model", None),                   # k_scale
+        P(None, None),                      # block_table (replicated)
+        P(None, None),                      # q_positions (replicated)
+    ]
+    has_diag = diag_blocks is not None
+    if has_diag:
+        args.append(diag_blocks)
+        specs.append(P(None, None))
+
+    def body(*xs):
+        db = xs[7] if has_diag else None
+        out, stats = _paged_prefill_core(*xs[:7], db, **kw)
+        out = jax.lax.all_gather(out, "model", axis=1, tiled=True)
+        if stats is not None:
+            stats = jax.lax.psum(stats, "model")
+        return (out, stats) if telemetry else out
+
+    fn = shard_map_unchecked(
+        body, mesh=mesh, in_specs=tuple(specs),
+        out_specs=(P(), P()) if telemetry else P(),
+    )
+    return fn(*args)
+
+
+def _paged_prefill_core(
+    q, k_pool, v_pool, k_codes, k_scale, block_table, q_positions,
+    diag_blocks, *, round_bits, alphas, query_block, key_block,
+    block_budget, keep_all, keep_first, keep_diagonal, scale,
+    interpret, with_stats,
+):
+    """Shard-local fused paged prefill: the pipeline of
+    :func:`fused_paged_prefill_attention` over whatever KV-head slice
+    of the pools the caller holds. Returns ``(out, stats_or_None)``."""
     batch, heads, n_q, d = q.shape
     pool_rows = k_pool.shape[-2]
     bk = key_block
@@ -654,7 +809,7 @@ def fused_paged_prefill_attention(
         query_block=query_block, key_block=bk,
         block_budget=block_budget, keep_all=keep_all,
         keep_first=keep_first, keep_diagonal=keep_diagonal,
-        diag_blocks=diag_blocks, heads=heads, with_stats=telemetry,
+        diag_blocks=diag_blocks, heads=heads, with_stats=with_stats,
     )
 
     out = pre_kernel.paged_prefill_gather_attention(
@@ -666,9 +821,9 @@ def fused_paged_prefill_attention(
         scale=scale, interpret=interpret,
     )
     out = out.reshape(batch, heads, n_q, d)
-    if telemetry:
+    if with_stats:
         return out, stats.reshape(batch, heads, 4).sum(axis=1)
-    return out
+    return out, None
 
 
 @functools.partial(

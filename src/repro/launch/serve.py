@@ -13,7 +13,29 @@ exercised by the decode_* dry-run shapes.
 from __future__ import annotations
 
 import argparse
+import os
+import re
 import time
+
+
+def _force_host_devices(n: int) -> None:
+    """Set ``--xla_force_host_platform_device_count=n`` in XLA_FLAGS,
+    replacing any existing value. Must run before the first jax import
+    (the backend reads the flag once at initialization)."""
+    flags = os.environ.get("XLA_FLAGS", "")
+    flags = re.sub(
+        r"--xla_force_host_platform_device_count=\d+\s*", "", flags
+    ).strip()
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip()
+    )
+
+
+def _parse_mesh(spec: str):
+    m = re.fullmatch(r"(\d+)x(\d+)", spec.strip().lower())
+    if m is None:
+        raise SystemExit(f"--mesh wants DxM (e.g. 2x2), got {spec!r}")
+    return int(m.group(1)), int(m.group(2))
 
 
 def main():
@@ -61,7 +83,22 @@ def main():
                     help="attach the observability layer (event trace, "
                          "sparsity telemetry, metrics registry) even "
                          "without an export path")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve over a (data, model) device mesh, e.g. "
+                         "2x2: D engine replicas behind one shared "
+                         "admission queue, each tensor-parallel over M "
+                         "devices (head-sharded page pools + shard_map "
+                         "fused kernels)")
+    ap.add_argument("--simulate-devices", type=int, default=None,
+                    metavar="N",
+                    help="fake N host devices via XLA_FLAGS "
+                         "--xla_force_host_platform_device_count (must "
+                         "be set before jax imports — this flag handles "
+                         "that); lets --mesh run on a laptop CPU")
     args = ap.parse_args()
+
+    if args.simulate_devices is not None:
+        _force_host_devices(args.simulate_devices)
 
     import jax
     import numpy as np
@@ -69,9 +106,24 @@ def main():
     from repro.configs.registry import get_config, get_smoke_config
     from repro.models import LMModel
     from repro.runtime import (
-        FaultInjector, FaultSpec, QueueFull, Request, ServeLoop,
-        attention_cache_bytes,
+        FaultInjector, FaultSpec, QueueFull, ReplicatedServeLoop, Request,
+        ServeLoop, attention_cache_bytes,
     )
+
+    mesh = None
+    mesh_shape = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_mesh_compat
+
+        mesh_shape = _parse_mesh(args.mesh)
+        need = mesh_shape[0] * mesh_shape[1]
+        have = len(jax.devices())
+        if have < need:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {need} devices, have {have} "
+                f"(try --simulate-devices {need})"
+            )
+        mesh = make_mesh_compat(mesh_shape, ("data", "model"))
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     model = LMModel(cfg)
@@ -93,8 +145,8 @@ def main():
             ),
         )
     paged = None if not args.unpaged else False
-    engine = ServeLoop(
-        model, params, batch_slots=args.batch_slots, max_len=args.max_len,
+    engine_kw = dict(
+        batch_slots=args.batch_slots, max_len=args.max_len,
         eos_token=cfg.vocab_size - 1, prefill_chunk=args.prefill_chunk,
         paged=paged, num_pages=args.num_pages,
         prefix_sharing=(False if (args.no_prefix_sharing or args.unpaged)
@@ -106,6 +158,19 @@ def main():
         fault_injector=injector,
         observability=obs,
     )
+    replicated = mesh is not None and mesh_shape[0] > 1
+    if replicated:
+        engine = ReplicatedServeLoop(model, params, mesh=mesh, **engine_kw)
+    elif mesh is not None:
+        engine = ServeLoop(model, params, mesh=mesh, **engine_kw)
+    else:
+        engine = ServeLoop(model, params, **engine_kw)
+    if mesh is not None:
+        print(f"[serve] mesh {mesh_shape[0]}x{mesh_shape[1]} "
+              f"(data x model) over {len(jax.devices())} "
+              f"{jax.devices()[0].platform} devices"
+              + (f", {mesh_shape[0]} engine replicas" if replicated
+                 else ""))
     rng = np.random.default_rng(0)
     system = rng.integers(
         1, cfg.vocab_size - 1, size=args.system_prompt_len
@@ -123,10 +188,11 @@ def main():
     t0 = time.perf_counter()
     done = engine.run_until_drained()
     dt = time.perf_counter() - t0
-    m = engine.metrics
+    eng0 = engine.engines[0] if replicated else engine
+    m = engine.merged_metrics() if replicated else engine.metrics
     total_tokens = sum(len(r.tokens_out) for r in done)
-    mode = "chunked" if engine.prefill_fn is not None else "sequential"
-    cache_mode = "paged" if engine.paged else "contiguous"
+    mode = "chunked" if eng0.prefill_fn is not None else "sequential"
+    cache_mode = "paged" if eng0.paged else "contiguous"
     print(f"[serve] {cfg.name}: {len(done)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s end-to-end)")
     print(f"[serve] prefill ({mode}): {m.prefill_tokens} tok in "
@@ -140,15 +206,17 @@ def main():
           f"{lat['ttft_p50']*1e3:.1f}/{lat['ttft_p95']*1e3:.1f} ms, "
           f"itl p50/p95 {lat['itl_p50']*1e3:.1f}/{lat['itl_p95']*1e3:.1f} ms, "
           f"queue p95 {lat['queue_wait_p95']*1e3:.1f} ms")
-    if engine.paged:
-        pool = attention_cache_bytes(engine.cache)
-        page = pool // engine.layout.num_pages
+    if eng0.paged:
+        pool = attention_cache_bytes(eng0.cache)
+        page = pool // eng0.layout.num_pages
+        per_rep = " per replica" if replicated else ""
         print(f"[serve] cache ({cache_mode}): "
-              f"{engine.layout.num_pages} pages × {page} B = {pool} B pool, "
+              f"{eng0.layout.num_pages} pages × {page} B = "
+              f"{pool} B pool{per_rep}, "
               f"peak {m.peak_pages_in_use} pages in use "
               f"({m.peak_pages_in_use * page} B), "
               f"{m.preemptions} preemptions")
-        if engine.sharing:
+        if eng0.sharing:
             print(f"[serve] prefix cache: hit-rate "
                   f"{m.prefix_hit_rate:.2f} "
                   f"({m.prefix_hits}/{m.prefix_lookups} admissions), "
@@ -157,8 +225,18 @@ def main():
                   f"{m.cow_clones} CoW clones")
     else:
         print(f"[serve] cache ({cache_mode}): "
-              f"{attention_cache_bytes(engine.cache)} B "
-              f"({args.batch_slots} slots × {engine.max_len} rows)")
+              f"{attention_cache_bytes(eng0.cache)} B "
+              f"({args.batch_slots} slots × {eng0.max_len} rows)")
+    if replicated:
+        counts = [0] * engine.n_replicas
+        for r in engine.placement.values():
+            counts[r] += 1
+        per = " | ".join(
+            f"r{e.replica_id}: {counts[e.replica_id]} req, "
+            f"{e.metrics.decode_tokens} tok, {e.metrics.ticks} ticks"
+            for e in engine.engines
+        )
+        print(f"[serve] replicas: {per}")
     evicted = engine.terminated
     if evicted or rejected or m.retries or injector is not None:
         print(f"[serve] lifecycle: {len(done)} completed, "

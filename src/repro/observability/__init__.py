@@ -30,6 +30,7 @@ from repro.observability.metrics import (  # noqa: F401
     Gauge,
     Histogram,
     MetricsRegistry,
+    strip_replica_prefix,
 )
 from repro.observability.sparsity import (  # noqa: F401
     STAT_FIELDS,
@@ -146,7 +147,7 @@ class Observability:
 
 __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
-    "DEFAULT_LATENCY_BOUNDS", "RHO_BOUNDS",
+    "DEFAULT_LATENCY_BOUNDS", "RHO_BOUNDS", "strip_replica_prefix",
     "EventTrace", "TraceEvent", "export_chrome_trace",
     "validate_chrome_trace", "SPAN_EVENTS", "COUNTER_EVENTS",
     "RELEASE_EVENTS", "STAT_FIELDS", "SparsityAggregator",

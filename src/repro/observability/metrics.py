@@ -247,6 +247,57 @@ class MetricsRegistry:
         with open(path, "w") as f:
             json.dump(self.snapshot(), f, indent=2, sort_keys=True)
 
+    def merge(self, other: "MetricsRegistry",
+              rename=None) -> "MetricsRegistry":
+        """Fold ``other``'s metrics into this registry, by type:
+
+        * counters **add** (tokens, dispatches, preemptions — extensive
+          quantities);
+        * gauges take the **max** of value and peak — a mesh run's peak
+          pages in use is the busiest replica's watermark, never the
+          sum (each replica owns a disjoint pool);
+        * histograms add pointwise (same bounds required — the usual
+          bounds-mismatch error applies).
+
+        ``rename`` maps source names to target names (e.g.
+        :func:`strip_replica_prefix` collapses ``replica3/serve_x`` and
+        ``replica1/serve_x`` into one cross-replica ``serve_x``
+        aggregate); returning ``None`` skips that metric (so an
+        aggregate pass can ignore names that were never namespaced
+        instead of double-counting them); identity when omitted.
+        Returns ``self``.
+        """
+        for name, m in other._metrics.items():
+            tgt = rename(name) if rename is not None else name
+            if tgt is None:
+                continue
+            if isinstance(m, Counter):
+                self.counter(tgt, m.help).value += m.value
+            elif isinstance(m, Gauge):
+                g = self.gauge(tgt, m.help)
+                g.value = max(g.value, m.value)
+                g.peak = max(g.peak, m.peak)
+            else:
+                h = self.histogram(tgt, m.bounds, m.help)
+                for i, c in enumerate(m.counts):
+                    h.counts[i] += c
+                h.count += m.count
+                h.sum += m.sum
+                if m.min is not None:
+                    h.min = m.min if h.min is None else min(h.min, m.min)
+                if m.max is not None:
+                    h.max = m.max if h.max is None else max(h.max, m.max)
+        return self
+
+
+_REPLICA_RE = re.compile(r"^replica\d+/")
+
+
+def strip_replica_prefix(name: str) -> str:
+    """``replica3/serve_x`` → ``serve_x`` (identity for unprefixed
+    names) — the rename hook for cross-replica aggregate merges."""
+    return _REPLICA_RE.sub("", name)
+
 
 _PROM_BAD = re.compile(r"[^a-zA-Z0-9_:]")
 

@@ -17,6 +17,10 @@ from repro.runtime.paged_cache import (  # noqa: F401
     attention_cache_bytes,
     clone_page_rows,
 )
+from repro.runtime.replicated_serve import (  # noqa: F401
+    ReplicatedServeLoop,
+    replica_home,
+)
 from repro.runtime.serve_loop import (  # noqa: F401
     EngineMetrics,
     EngineStalled,

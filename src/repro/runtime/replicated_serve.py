@@ -1,0 +1,293 @@
+"""Data-parallel serving: N engine replicas over a ``(data, model)``
+mesh behind one shared admission queue (DESIGN.md §9).
+
+Each replica is an ordinary :class:`~repro.runtime.serve_loop.ServeLoop`
+pinned to one row of the mesh — a ``(1, M)`` submesh — with its own page
+pool, allocator, preemption domain and metrics namespace
+(``replica{r}/serve_*``). The replica dimension is purely a *placement*
+concern:
+
+* **Placement is deterministic.** A request's home replica is a stable
+  hash of its uid (multiplicative hash, high bits), independent of
+  submission order, queue state, or how many other requests are in
+  flight. When the home replica is overloaded — its load exceeds the
+  least-loaded replica's by more than ``spill_threshold`` — or its
+  bounded queue rejects the submission, the request spills to the
+  least-loaded replica (lowest replica id on ties). Load is queued +
+  live requests at submission time, so a fixed trace places identically
+  on every run.
+* **Streams are placement-invariant.** Every replica folds the shared
+  base RNG by uid (``fold_in(base_rng, uid)``), so a request's
+  stochastic stream depends only on (uid, #samples) — never on which
+  replica ran it, or on its batch neighbours. Combined with each
+  engine's preempted ≡ ample and shared ≡ unshared contracts, a
+  request's token stream on an N-replica mesh is bit-identical to the
+  same request on a single-device engine.
+* **Metrics merge, not mix.** :meth:`merged_metrics` sums the extensive
+  counters (tokens, dispatches, preemptions); ``peak_pages_in_use`` is
+  the max over replicas — the pools are disjoint, summing watermarks
+  would fabricate memory pressure. Wall-clock accumulators take the max
+  over replicas (replicas tick concurrently on real hardware; the max
+  models the parallel makespan, and per-replica values stay available
+  on ``engines[r].metrics``). :meth:`merged_registry` carries both the
+  namespaced per-replica series and the stripped cross-replica
+  aggregates.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models import LMModel
+from repro.runtime.serve_loop import (
+    EngineMetrics,
+    QueueFull,
+    Request,
+    ServeLoop,
+)
+from repro.observability.metrics import (
+    MetricsRegistry,
+    strip_replica_prefix,
+)
+
+
+def replica_home(uid: int, n_replicas: int) -> int:
+    """Stable uid → replica hash (Knuth multiplicative, high bits —
+    the low bits of an odd multiplier mod small n degenerate to
+    ``uid % n``)."""
+    return ((uid * 2654435761) >> 13) % n_replicas
+
+
+def _submesh(mesh: Mesh, r: int) -> Mesh:
+    """Row ``r`` of a ``(data, model)`` mesh as a ``(1, model)`` mesh —
+    the model axis keeps its name so the fused kernels' shard_map path
+    engages per replica exactly as it would on a standalone TP mesh."""
+    return Mesh(mesh.devices[r:r + 1], mesh.axis_names)
+
+
+class ReplicatedServeLoop:
+    """N data-parallel :class:`ServeLoop` replicas behind one shared
+    admission queue with deterministic placement.
+
+    Pass ``mesh`` (axes ``('data', 'model')``) to pin replica ``r`` to
+    mesh row ``r`` — each engine's params replicate over its row and
+    its page pool head-shards over 'model' — or ``replicas=N`` alone
+    for host-only replication (N independent single-device engines;
+    useful for placement/merge tests without a mesh). Engine keyword
+    arguments (``batch_slots``, ``num_pages``, ``queue_limit``, …)
+    apply to every replica; ``num_pages`` is **per replica** (pools are
+    disjoint).
+    """
+
+    def __init__(
+        self,
+        model: LMModel,
+        params,
+        *,
+        mesh: Optional[Mesh] = None,
+        replicas: Optional[int] = None,
+        spill_threshold: Optional[int] = None,
+        rng: Optional[jax.Array] = None,
+        **engine_kw,
+    ):
+        if mesh is not None:
+            if "data" not in mesh.axis_names:
+                raise ValueError(
+                    f"replicated serving needs a 'data' mesh axis, got "
+                    f"{mesh.axis_names}"
+                )
+            n = mesh.shape["data"]
+            if replicas is not None and replicas != n:
+                raise ValueError(
+                    f"replicas={replicas} != mesh data axis {n}"
+                )
+            replicas = n
+        if replicas is None or replicas < 1:
+            raise ValueError("need mesh or replicas >= 1")
+        self.mesh = mesh
+        self.n_replicas = replicas
+        base_rng = rng if rng is not None else jax.random.PRNGKey(0)
+        # every replica shares the base key: streams fold by uid, so
+        # placement cannot perturb them.
+        self.engines: List[ServeLoop] = [
+            ServeLoop(
+                model, params,
+                rng=base_rng,
+                mesh=_submesh(mesh, r) if mesh is not None else None,
+                replica_id=r,
+                **engine_kw,
+            )
+            for r in range(replicas)
+        ]
+        #: load-imbalance tolerance before a home placement spills;
+        #: defaults to one batch worth of requests.
+        self.spill_threshold = (
+            spill_threshold if spill_threshold is not None
+            else self.engines[0].batch_slots
+        )
+        #: uid → replica id actually used (after spill), for tests and
+        #: bench reporting.
+        self.placement: Dict[int, int] = {}
+
+    # --- placement -----------------------------------------------------
+
+    def _load(self, r: int) -> int:
+        e = self.engines[r]
+        return len(e.pending) + sum(s is not None for s in e.slots)
+
+    def submit(self, req: Request) -> int:
+        """Place ``req`` and submit it; returns the replica id used.
+
+        Home = stable uid hash. Spills to the least-loaded replica when
+        the home's load exceeds the minimum by more than
+        ``spill_threshold``, or when the home's bounded queue rejects
+        the submission (if the least-loaded replica is also full,
+        :class:`QueueFull` propagates — backpressure stays visible).
+        """
+        home = replica_home(req.uid, self.n_replicas)
+        loads = [self._load(r) for r in range(self.n_replicas)]
+        least = min(range(self.n_replicas), key=lambda r: loads[r])
+        target = home
+        if loads[home] - loads[least] > self.spill_threshold:
+            target = least
+        try:
+            self.engines[target].submit(req)
+        except QueueFull:
+            if target == least:
+                raise
+            self.engines[least].submit(req)
+            target = least
+        self.placement[req.uid] = target
+        return target
+
+    # --- draining ------------------------------------------------------
+
+    def _has_work(self) -> bool:
+        return any(e._has_work() for e in self.engines)
+
+    def tick(self) -> None:
+        """One tick of every replica that has work. Host-serial here;
+        on real hardware each replica's dispatches land on its own
+        devices, so replicas overlap — the bench's scaling model uses
+        max-over-replica ticks for exactly this reason."""
+        for e in self.engines:
+            if e._has_work():
+                e.tick()
+
+    def run_until_drained(self, max_ticks: int = 10_000):
+        """Tick all replicas until every request terminates. Stall
+        detection is aggregate: a tick where *no* replica progresses is
+        stagnant (each engine's own ``run_until_drained`` machinery is
+        bypassed — replicas must interleave)."""
+        patience = max(e.stall_patience for e in self.engines)
+        stagnant = 0
+        for _ in range(max_ticks):
+            if not self._has_work():
+                return self.completed
+            before = tuple(e._progress_marker() for e in self.engines)
+            self.tick()
+            if tuple(
+                e._progress_marker() for e in self.engines
+            ) == before:
+                stagnant += 1
+                if stagnant > patience:
+                    stuck = sorted(
+                        u for e in self.engines for u in e._stuck_uids()
+                    )
+                    raise RuntimeError(
+                        f"replicated engine stalled; stuck uids: {stuck}"
+                    )
+            else:
+                stagnant = 0
+        if self._has_work():
+            stuck = sorted(
+                u for e in self.engines for u in e._stuck_uids()
+            )
+            raise RuntimeError(
+                f"max_ticks={max_ticks} exhausted; stuck uids: {stuck}"
+            )
+        return self.completed
+
+    @property
+    def completed(self) -> List[Request]:
+        return sorted(
+            (r for e in self.engines for r in e.completed),
+            key=lambda r: r.uid,
+        )
+
+    @property
+    def terminated(self) -> List[Request]:
+        return sorted(
+            (r for e in self.engines for r in e.terminated),
+            key=lambda r: r.uid,
+        )
+
+    # --- observability -------------------------------------------------
+
+    def merged_metrics(self) -> EngineMetrics:
+        """Cross-replica :class:`EngineMetrics`: counters sum,
+        ``peak_pages_in_use`` is the per-replica max (disjoint pools),
+        and the wall-clock accumulators take the max over replicas (the
+        parallel-makespan model — replicas tick concurrently on real
+        hardware). Request records concatenate in uid order."""
+        out = EngineMetrics()
+        counter_names = [
+            n for n, d in vars(EngineMetrics).items()
+            if type(d).__name__ == "_CounterAttr"
+        ]
+        for e in self.engines:
+            m = e.metrics
+            for n in counter_names:
+                setattr(out, n, getattr(out, n) + getattr(m, n))
+            out.peak_pages_in_use = max(
+                out.peak_pages_in_use, m.peak_pages_in_use
+            )
+            out.prefill_time = max(out.prefill_time, m.prefill_time)
+            out.decode_time = max(out.decode_time, m.decode_time)
+            out.requests_recorded += m.requests_recorded
+        for rec in sorted(
+            (r for e in self.engines for r in e.metrics.request_records),
+            key=lambda r: r["uid"],
+        ):
+            out.request_records.append(rec)
+        return out
+
+    def merged_registry(self) -> MetricsRegistry:
+        """One registry holding every replica's namespaced
+        ``replica{r}/serve_*`` series *plus* the stripped cross-replica
+        ``serve_*`` aggregates (counters/histograms summed, gauges
+        max'd) — safe to ``prometheus_text()`` without double-counting
+        a gauge as a sum. Engines sharing one observability registry
+        (the namespaces keep them collision-free) are merged once."""
+        regs: List[MetricsRegistry] = []
+        for e in self.engines:
+            e.metrics.sync_registry()
+            reg = e.metrics.registry
+            if reg is None:
+                # engines without observability: rebuild the mirrored
+                # registry from the host-side counters on the fly
+                reg = MetricsRegistry()
+                m = EngineMetrics(registry=reg, replica=e.replica_id)
+                for n, v in e.metrics._counters.items():
+                    setattr(m, n, v)
+                m.prefill_time = e.metrics.prefill_time
+                m.decode_time = e.metrics.decode_time
+                m.sync_registry()
+            if all(reg is not r for r in regs):
+                regs.append(reg)
+        out = MetricsRegistry()
+        for reg in regs:
+            out.merge(reg)
+            # aggregate pass: only the replica-namespaced series fold
+            # into the cross-replica names (None skips the rest).
+            out.merge(
+                reg,
+                rename=lambda n: (
+                    strip_replica_prefix(n)
+                    if strip_replica_prefix(n) != n else None
+                ),
+            )
+        return out

@@ -73,7 +73,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.distributed import sharding as shd
 from repro.models import LMModel
@@ -160,7 +160,7 @@ class _CounterAttr:
     def __set__(self, obj, value):
         obj._counters[self.name] = int(value)
         if obj.registry is not None:
-            obj.registry.counter("serve_" + self.name).value = int(value)
+            obj.registry.counter(obj._ns + self.name).value = int(value)
 
 
 class _GaugeAttr(_CounterAttr):
@@ -170,7 +170,7 @@ class _GaugeAttr(_CounterAttr):
     def __set__(self, obj, value):
         obj._counters[self.name] = int(value)
         if obj.registry is not None:
-            obj.registry.gauge("serve_" + self.name).set(int(value))
+            obj.registry.gauge(obj._ns + self.name).set(int(value))
 
 
 class EngineMetrics:
@@ -185,6 +185,12 @@ class EngineMetrics:
     streaming histograms at record time), and each request carries only
     a bounded tail of raw inter-token gaps — a week-long run cannot
     grow host memory without bound.
+
+    ``replica`` namespaces every registry name as
+    ``replica{r}/serve_*`` so N engine replicas can share one registry
+    (or be merged into one with :meth:`MetricsRegistry.merge`) without
+    silently summing incompatible gauges — a mesh run's peak pages is
+    the per-replica max, never the sum.
     """
 
     prefill_tokens = _CounterAttr()
@@ -209,7 +215,12 @@ class EngineMetrics:
     shed_requests = _CounterAttr()
 
     def __init__(self, registry: Optional[MetricsRegistry] = None,
-                 max_request_records: int = 1024):
+                 max_request_records: int = 1024,
+                 replica: Optional[int] = None):
+        self.replica = replica
+        self._ns = (
+            "serve_" if replica is None else f"replica{replica}/serve_"
+        )
         self.registry = registry
         self._counters: Dict[str, int] = {}
         self.prefill_time = 0.0
@@ -235,23 +246,24 @@ class EngineMetrics:
         return self.prefix_hits / max(self.prefix_lookups, 1)
 
     def _hist(self, name: str):
-        return self.registry.histogram(name, DEFAULT_LATENCY_BOUNDS)
+        return self.registry.histogram(self._ns + name,
+                                       DEFAULT_LATENCY_BOUNDS)
 
     def observe_itl(self, dt: float) -> None:
         """Stream one inter-token gap into the registry histogram (the
         bounded raw tail lives on the request)."""
         if self.registry is not None:
-            self._hist("serve_itl_seconds").observe(dt)
+            self._hist("itl_seconds").observe(dt)
 
     def sync_registry(self) -> None:
         """Push the float time accumulators into the registry (integer
         counters mirror on every write and need no sync)."""
         if self.registry is None:
             return
-        self.registry.gauge("serve_prefill_time_seconds").set(
+        self.registry.gauge(self._ns + "prefill_time_seconds").set(
             self.prefill_time
         )
-        self.registry.gauge("serve_decode_time_seconds").set(
+        self.registry.gauge(self._ns + "decode_time_seconds").set(
             self.decode_time
         )
 
@@ -275,8 +287,8 @@ class EngineMetrics:
         self.request_records.append(rec)
         self.requests_recorded += 1
         if self.registry is not None:
-            self._hist("serve_queue_wait_seconds").observe(qw)
-            self._hist("serve_ttft_seconds").observe(ttft)
+            self._hist("queue_wait_seconds").observe(qw)
+            self._hist("ttft_seconds").observe(ttft)
 
     def latency_stats(self) -> Dict[str, float]:
         """p50/p95 of queue wait, TTFT and inter-token latency (seconds)
@@ -478,9 +490,13 @@ class ServeLoop:
         audit: bool = False,
         stall_patience: Optional[int] = None,
         observability: Optional[Observability] = None,
+        mesh: Optional[Mesh] = None,
+        replica_id: Optional[int] = None,
     ):
         self.model = model
         self.params = params
+        self.mesh = mesh
+        self.replica_id = replica_id
         self.batch_slots = batch_slots
         self.paged = model.supports_paged if paged is None else bool(paged)
         if self.paged and not model.supports_paged:
@@ -558,6 +574,8 @@ class ServeLoop:
             self.layout = None
             self.allocator = None
             self.cache = model.init_cache(batch_slots, max_len)
+        if mesh is not None:
+            self._install_mesh(mesh)
         self.cache_index = jnp.zeros((batch_slots,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.slot_keys = jax.random.split(self._base_rng, batch_slots)
@@ -568,7 +586,8 @@ class ServeLoop:
         self.pending: List[Request] = []
         self.completed: List[Request] = []
         self.metrics = EngineMetrics(
-            registry=observability.registry if observability else None
+            registry=observability.registry if observability else None,
+            replica=replica_id,
         )
         # --- lifecycle / fault-tolerance state (DESIGN.md §7) ---------
         #: bounded admission queue: `submit` raises QueueFull (or sheds
@@ -752,7 +771,118 @@ class ServeLoop:
             if self.slots[i] is not None and expired(self.slots[i]):
                 self._evict_slot(i, "expired", "deadline exceeded")
 
+    def _install_mesh(self, mesh: Mesh) -> None:
+        """Pin params/cache to ``mesh`` and rebuild the jitted step
+        functions with explicit shardings (serve-TP, DESIGN.md §9).
+
+        Params stay **replicated**: sharding weights would reassociate
+        the output-projection contraction (a cross-device psum) and
+        break the bit-identity contract against the single-device run.
+        Only the page-pool leaves shard — KV heads over 'model' when
+        divisible, page-aligned pool rows otherwise — and the fused
+        kernels engage their shard_map path off the active mesh at
+        trace time: each device streams only its head-shard's survivor
+        blocks, then all-gathers the exact per-head outputs, so
+        everything downstream computes replicated and mesh streams stay
+        bit-identical to the single-device paged run.
+        """
+        if not self.paged:
+            raise ValueError("mesh serving requires the paged cache")
+        if "data" in mesh.axis_names and mesh.shape["data"] > 1:
+            # The data axis is the *replica* axis: one engine = one
+            # replica. Letting a lone engine batch-shard its slots over
+            # 'data' would change XLA's local shapes (and therefore
+            # reduction vectorization) and break the bit-identity
+            # contract against the single-device run.
+            raise ValueError(
+                "ServeLoop takes a TP-only mesh (data axis == 1); use "
+                "ReplicatedServeLoop to span the data axis"
+            )
+        repl = NamedSharding(mesh, P())
+        p_spec = jax.tree.map(lambda _: repl, self.params)
+        c_spec = shd.paged_cache_shardings(
+            self.cache, mesh, self.layout.page_size
+        )
+        self.params = jax.device_put(self.params, p_spec)
+        self.cache = jax.device_put(self.cache, c_spec)
+        model = self.model
+
+        # Each wrapper below is a *fresh function object per engine*:
+        # replica engines share the model instance, and jitting the
+        # bound method directly would share the jaxpr trace cache
+        # across replicas — the first replica's trace bakes its
+        # submesh into the model's internal shard_maps, and every
+        # later replica would lower that alien mesh against its own
+        # devices ("incompatible devices for jitted computation").
+        def _step(params, cache, inputs, cache_index):
+            return model.decode_step(params, cache, inputs, cache_index)
+
+        self.step_fn = jax.jit(
+            _step,
+            in_shardings=(p_spec, c_spec, None, None),
+            out_shardings=(None, c_spec),
+            donate_argnums=(1,),
+        )
+        if self.prefill_fn is not None:
+            def _prefill(params, cache, inputs, cache_index):
+                return model.prefill(params, cache, inputs, cache_index)
+
+            self.prefill_fn = jax.jit(
+                _prefill,
+                in_shardings=(p_spec, c_spec, None, None),
+                out_shardings=(None, c_spec),
+                donate_argnums=(1,),
+            )
+        if self.step_fn_t is not None:
+            def _step_t(params, cache, inputs, cache_index):
+                return model.decode_step(
+                    params, cache, inputs, cache_index, telemetry=True
+                )
+
+            self.step_fn_t = jax.jit(
+                _step_t,
+                in_shardings=(p_spec, c_spec, None, None),
+                out_shardings=(None, c_spec, None),
+                donate_argnums=(1,),
+            )
+        if self.prefill_fn_t is not None:
+            def _prefill_t(params, cache, inputs, cache_index):
+                return model.prefill(
+                    params, cache, inputs, cache_index, telemetry=True
+                )
+
+            self.prefill_fn_t = jax.jit(
+                _prefill_t,
+                in_shardings=(p_spec, c_spec, None, None),
+                out_shardings=(None, c_spec, None),
+                donate_argnums=(1,),
+            )
+
+        def _reset(cache, mask):
+            return model.reset_pages(cache, mask)
+
+        self._reset_pages_fn = jax.jit(
+            _reset,
+            in_shardings=(c_spec, None),
+            out_shardings=c_spec,
+            donate_argnums=(0,),
+        )
+
     def _dispatch(self, fn, *args):
+        """Dispatch with the engine's mesh active (trace-time signal for
+        the fused kernels' shard_map path — and for nothing else: the
+        mesh is restored before returning so N replica engines on
+        disjoint submeshes can interleave ticks on one host)."""
+        if self.mesh is None:
+            return self._dispatch_impl(fn, *args)
+        prev = shd.get_active_mesh()
+        shd.set_active_mesh(self.mesh)
+        try:
+            return self._dispatch_impl(fn, *args)
+        finally:
+            shd.set_active_mesh(prev)
+
+    def _dispatch_impl(self, fn, *args):
         """One jitted step dispatch under the engine's RetryPolicy.
 
         The injector's fault site sits *before* the jitted call: an

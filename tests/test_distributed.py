@@ -419,3 +419,265 @@ class TestFusedPrefillSharded:
         """)
         assert result["completed"] == 3
         assert result["identical"]
+
+
+_SERVE_HELPERS = """
+from repro.configs.base import ModelConfig
+from repro.core import EnergonConfig
+from repro.models import LMModel
+from repro.runtime import ReplicatedServeLoop, Request, ServeLoop
+
+def build(impl="pallas"):
+    cfg = ModelConfig(
+        name=f"mesh-serve-{impl}", family="dense", num_layers=2,
+        d_model=32, num_heads=4, num_kv_heads=2, head_dim=8, d_ff=64,
+        vocab_size=64, dtype="float32", remat="none",
+        energon=EnergonConfig(impl=impl, pruning_ratio=2.0,
+                              query_block=8, key_block=8,
+                              decode_key_block=8, min_prune_layer=1,
+                              filter_cache_min_len=0))
+    model = LMModel(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+def trace():
+    rng = np.random.default_rng(1)
+    reqs = [(u, rng.integers(1, 63, size=int(L)).tolist(),
+             0.7 if u % 3 == 0 else 0.0)
+            for u, L in enumerate((12, 24, 6, 40, 17, 9, 30, 21))]
+    shared = rng.integers(1, 63, size=16).tolist()
+    reqs += [(100 + i, shared + rng.integers(1, 63, size=4).tolist(), 0.0)
+             for i in range(2)]
+    return reqs
+
+def drain(engine):
+    for u, prompt, temp in trace():
+        engine.submit(Request(uid=u, prompt=list(prompt),
+                              max_new_tokens=6, temperature=temp))
+    engine.run_until_drained()
+    return {str(r.uid): list(r.tokens_out) for r in engine.completed}
+"""
+
+
+class TestMeshServeBitIdentity:
+    def test_tp_mesh_streams_bit_identical(self):
+        """A lone engine on a TP mesh (head-sharded pools, shard_map
+        fused kernels, all-gathered outputs) must stream bit-identically
+        to the single-device paged run — greedy *and* stochastic, with
+        prefix sharing on, and both ample and preempting pools. The
+        preempted mesh run must also equal the ample single-device run
+        (preempted ≡ ample composes with sharded ≡ unsharded)."""
+        result = run_subprocess(_SERVE_HELPERS + textwrap.dedent("""
+        model, params = build("pallas")
+        kw = dict(batch_slots=4, max_len=64, rng=jax.random.PRNGKey(7))
+        mesh = make_mesh_compat((1, 2), ("data", "model"))
+        ref = drain(ServeLoop(model, params, **kw))
+        tp = drain(ServeLoop(model, params, mesh=mesh, **kw))
+        ref_pre = drain(ServeLoop(model, params, num_pages=12, **kw))
+        tp_pre_eng = ServeLoop(model, params, mesh=mesh, num_pages=12,
+                               **kw)
+        tp_pre = drain(tp_pre_eng)
+        print(json.dumps({
+            "tp_eq_single": tp == ref,
+            "tp_preempt_eq_single_preempt": tp_pre == ref_pre,
+            "preempted_eq_ample_on_mesh": tp_pre == ref,
+            "preemptions": tp_pre_eng.metrics.preemptions,
+        }))
+        """))
+        assert result["tp_eq_single"]
+        assert result["tp_preempt_eq_single_preempt"]
+        assert result["preempted_eq_ample_on_mesh"]
+        assert result["preemptions"] > 0  # the contract was exercised
+
+    def test_shared_equals_unshared_on_tp_mesh(self):
+        """Prefix sharing must stay invisible to outputs under the
+        sharded pools: shared ≡ unshared streams on a TP mesh, with
+        sharing actually engaged (hits > 0)."""
+        result = run_subprocess(_SERVE_HELPERS + textwrap.dedent("""
+        model, params = build("pallas")
+        # 2 slots + 3 prefix families: later family members admit only
+        # after an earlier one prefilled and registered its pages
+        def shared_trace():
+            tok = lambda fam, j: (fam * 97 + j * 31) % 61 + 1
+            return [(u, [tok(u % 3, j) for j in range(40)]
+                        + [tok(u % 3 + 5, u * 17 + j)
+                           for j in range((u * 7) % 13)],
+                     0.8 if u % 2 else 0.0)
+                    for u in range(6)]
+        def drain2(engine):
+            for u, prompt, temp in shared_trace():
+                engine.submit(Request(uid=u, prompt=list(prompt),
+                                      max_new_tokens=6,
+                                      temperature=temp))
+            engine.run_until_drained()
+            return {str(r.uid): list(r.tokens_out)
+                    for r in engine.completed}
+        # num_pages > slots*max_blocks: headroom so finished requests'
+        # registered pages survive as cached (the default exactly-full
+        # pool evicts them before the next family member admits)
+        kw = dict(batch_slots=2, max_len=64, prefill_chunk=8,
+                  num_pages=32, rng=jax.random.PRNGKey(7))
+        mesh = make_mesh_compat((1, 2), ("data", "model"))
+        shared_eng = ServeLoop(model, params, mesh=mesh,
+                               prefix_sharing=True, **kw)
+        shared = drain2(shared_eng)
+        unshared = drain2(ServeLoop(model, params, mesh=mesh,
+                                    prefix_sharing=False, **kw))
+        print(json.dumps({
+            "identical": shared == unshared,
+            "hits": shared_eng.metrics.prefix_hits,
+            "skipped": shared_eng.metrics.prefill_tokens_skipped,
+        }))
+        """))
+        assert result["identical"]
+        assert result["hits"] > 0
+        assert result["skipped"] > 0
+
+    def test_lone_engine_rejects_data_axis(self):
+        """One engine = one replica: a lone ServeLoop must refuse a
+        mesh with data > 1 (batch-sharding a lone engine's slots over
+        'data' changes XLA's local reduction shapes and would break
+        bit-identity); ReplicatedServeLoop is the way to span it."""
+        result = run_subprocess(_SERVE_HELPERS + textwrap.dedent("""
+        model, params = build("mpmrf_block")
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
+        try:
+            ServeLoop(model, params, batch_slots=2, max_len=64,
+                      mesh=mesh)
+            msg = ""
+        except ValueError as e:
+            msg = str(e)
+        print(json.dumps({"msg": msg}))
+        """))
+        assert "ReplicatedServeLoop" in result["msg"]
+
+
+class TestReplicatedServe:
+    def test_replica_streams_placement_invariant(self):
+        """RNG streams fold from the shared base key by uid, so a
+        request's tokens cannot depend on which replica ran it: the
+        same trace through 1 (single engine), 2×TP2 and 4×TP1 replica
+        layouts must produce bit-identical streams — while the
+        placements themselves genuinely differ between layouts."""
+        result = run_subprocess(_SERVE_HELPERS + textwrap.dedent("""
+        model, params = build("mpmrf_block")
+        kw = dict(batch_slots=4, max_len=64, rng=jax.random.PRNGKey(7))
+        ref = drain(ServeLoop(model, params, **kw))
+        r2 = ReplicatedServeLoop(
+            model, params,
+            mesh=make_mesh_compat((2, 2), ("data", "model")), **kw)
+        s2 = drain(r2)
+        r4 = ReplicatedServeLoop(
+            model, params,
+            mesh=make_mesh_compat((4, 1), ("data", "model")), **kw)
+        s4 = drain(r4)
+        print(json.dumps({
+            "two_eq_single": s2 == ref,
+            "four_eq_single": s4 == ref,
+            "placements_differ": r2.placement != r4.placement,
+            "spread2": len(set(r2.placement.values())),
+            "spread4": len(set(r4.placement.values())),
+        }))
+        """))
+        assert result["two_eq_single"]
+        assert result["four_eq_single"]
+        assert result["placements_differ"]  # invariance is non-vacuous
+        assert result["spread2"] == 2       # both replicas saw work
+        assert result["spread4"] >= 3
+
+    def test_merged_metrics_and_registry(self):
+        """Cross-replica accounting: counters sum, peak pages take the
+        per-replica max (disjoint pools — a sum would fabricate memory
+        pressure), and the merged registry carries both the namespaced
+        per-replica series and the stripped aggregates."""
+        result = run_subprocess(_SERVE_HELPERS + textwrap.dedent("""
+        model, params = build("mpmrf_block")
+        loop = ReplicatedServeLoop(
+            model, params,
+            mesh=make_mesh_compat((2, 2), ("data", "model")),
+            batch_slots=4, max_len=64, rng=jax.random.PRNGKey(7))
+        drain(loop)
+        m = loop.merged_metrics()
+        per = [e.metrics for e in loop.engines]
+        reg = loop.merged_registry()
+        names = reg.names()
+        print(json.dumps({
+            "decode_sum_ok": m.decode_tokens == sum(
+                x.decode_tokens for x in per),
+            "peak_is_max": m.peak_pages_in_use == max(
+                x.peak_pages_in_use for x in per),
+            "peak_not_sum": m.peak_pages_in_use < sum(
+                x.peak_pages_in_use for x in per),
+            "has_ns": any(n.startswith("replica1/serve_")
+                          for n in names),
+            "has_agg": "serve_decode_tokens" in names,
+            "agg_ok": reg.counter("serve_decode_tokens").value
+                == m.decode_tokens,
+            "agg_peak_ok": reg.gauge("serve_peak_pages_in_use").value
+                == m.peak_pages_in_use,
+        }))
+        """))
+        assert all(result.values()), result
+
+
+class TestReplicaPlacementHost:
+    """Host-side placement + metrics-merge units (no devices needed)."""
+
+    def test_replica_home_stable_and_spread(self):
+        from repro.runtime import replica_home
+
+        homes = [replica_home(u, 4) for u in range(256)]
+        assert homes == [replica_home(u, 4) for u in range(256)]
+        counts = [homes.count(r) for r in range(4)]
+        # the multiplicative hash must not starve a replica
+        assert min(counts) > 0.15 * len(homes) / 2, counts
+
+    def test_registry_merge_semantics(self):
+        from repro.observability.metrics import (
+            MetricsRegistry, strip_replica_prefix,
+        )
+
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.counter("replica0/serve_x").value = 3
+        b.counter("replica1/serve_x").value = 4
+        a.gauge("replica0/serve_peak").set(7)
+        b.gauge("replica1/serve_peak").set(5)
+        a.histogram("replica0/serve_h", (1.0, 2.0)).observe(0.5)
+        b.histogram("replica1/serve_h", (1.0, 2.0)).observe(1.5)
+
+        merged = MetricsRegistry()
+        for src in (a, b):
+            merged.merge(src)
+            merged.merge(src, rename=lambda n: (
+                strip_replica_prefix(n)
+                if strip_replica_prefix(n) != n else None
+            ))
+        assert merged.counter("serve_x").value == 7
+        assert merged.counter("replica0/serve_x").value == 3
+        assert merged.gauge("serve_peak").value == 7  # max, not 12
+        h = merged.histogram("serve_h", (1.0, 2.0))
+        assert h.count == 2 and h.counts[0] == 1 and h.counts[1] == 1
+        assert h.min == 0.5 and h.max == 1.5
+
+    def test_merge_rejects_mismatched_bounds(self):
+        from repro.observability.metrics import MetricsRegistry
+
+        a, b = MetricsRegistry(), MetricsRegistry()
+        a.histogram("h", (1.0, 2.0)).observe(0.5)
+        b.histogram("h", (1.0, 3.0)).observe(0.5)
+        with pytest.raises(ValueError):
+            a.merge(b)
+
+    def test_engine_metrics_replica_namespace(self):
+        from repro.observability.metrics import MetricsRegistry
+        from repro.runtime import EngineMetrics
+
+        reg = MetricsRegistry()
+        m0 = EngineMetrics(registry=reg, replica=0)
+        m1 = EngineMetrics(registry=reg, replica=1)
+        plain = EngineMetrics(registry=reg)
+        m0.decode_tokens += 5
+        m1.decode_tokens += 7
+        plain.decode_tokens += 1
+        assert reg.counter("replica0/serve_decode_tokens").value == 5
+        assert reg.counter("replica1/serve_decode_tokens").value == 7
+        assert reg.counter("serve_decode_tokens").value == 1
