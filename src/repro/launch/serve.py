@@ -48,6 +48,18 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=64)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--scheduler", choices=("hybrid", "sync"),
+                    default="hybrid",
+                    help="hybrid (default): each tick interleaves one "
+                         "prefill chunk wave with the decode step, so "
+                         "long admissions never freeze live streams; "
+                         "sync: the pre-hybrid whole-wave-per-admission "
+                         "schedule (same per-uid streams, bit for bit)")
+    ap.add_argument("--admission-lookahead", type=int, default=0,
+                    metavar="K",
+                    help="let up to K queued requests behind a head too "
+                         "big for the free pool admit ahead of it "
+                         "(0 = strict policy order)")
     ap.add_argument("--unpaged", action="store_true",
                     help="force the contiguous batch×max_len cache")
     ap.add_argument("--num-pages", type=int, default=None,
@@ -148,6 +160,8 @@ def main():
     engine_kw = dict(
         batch_slots=args.batch_slots, max_len=args.max_len,
         eos_token=cfg.vocab_size - 1, prefill_chunk=args.prefill_chunk,
+        scheduler=args.scheduler,
+        admission_lookahead=args.admission_lookahead,
         paged=paged, num_pages=args.num_pages,
         prefix_sharing=(False if (args.no_prefix_sharing or args.unpaged)
                         else None),
@@ -204,7 +218,8 @@ def main():
     lat = m.latency_stats()
     print(f"[serve] latency: ttft p50/p95 "
           f"{lat['ttft_p50']*1e3:.1f}/{lat['ttft_p95']*1e3:.1f} ms, "
-          f"itl p50/p95 {lat['itl_p50']*1e3:.1f}/{lat['itl_p95']*1e3:.1f} ms, "
+          f"itl p50/p95 {lat['itl_p50']*1e3:.1f}/{lat['itl_p95']*1e3:.1f} ms "
+          f"(decode-attributed p95 {lat['itl_decode_p95']*1e3:.1f} ms), "
           f"queue p95 {lat['queue_wait_p95']*1e3:.1f} ms")
     if eng0.paged:
         pool = attention_cache_bytes(eng0.cache)

@@ -31,7 +31,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 #: Event names with a duration, rendered as complete ("X") spans on the
 #: scheduler lane.
-SPAN_EVENTS = ("decode_tick", "prefill_wave")
+SPAN_EVENTS = ("decode_tick", "prefill_wave", "prefill_tick")
 
 #: Event names rendered as Chrome counter ("C") tracks.
 COUNTER_EVENTS = ("pool_occupancy", "queue_depth", "live_slots")

@@ -17,6 +17,7 @@ from repro.runtime.paged_cache import (  # noqa: F401
     attention_cache_bytes,
     clone_page_rows,
 )
+from repro.runtime.pending import PendingQueue  # noqa: F401
 from repro.runtime.replicated_serve import (  # noqa: F401
     ReplicatedServeLoop,
     replica_home,

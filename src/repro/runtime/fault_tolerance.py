@@ -26,7 +26,13 @@ every fault site (page allocation, step dispatch, logits, tick pacing,
 the preemption policy) consults the injector, whose draws come from one
 seeded numpy Generator — a given (engine config, trace, seed) triple
 replays the exact same fault schedule on every run, so chaos failures
-reproduce in CI instead of flaking.
+reproduce in CI instead of flaking. Under the hybrid scheduler the same
+sites fire *inside* hybrid ticks: ``poison_prefill`` at each job's
+completion tail (between chunk waves, not only at admission),
+``poison_decode``/``step_delay`` on the interleaved decode step, and
+storms/alloc denials against slots that may be mid-prefill — the
+fault-invisibility contract (survivors stream bit-identically to the
+fault-free run) is scheduler-independent.
 """
 
 from __future__ import annotations

@@ -22,7 +22,10 @@ concern:
   replica ran it, or on its batch neighbours. Combined with each
   engine's preempted ≡ ample and shared ≡ unshared contracts, a
   request's token stream on an N-replica mesh is bit-identical to the
-  same request on a single-device engine.
+  same request on a single-device engine. The same holds across
+  schedulers: replicas inherit the constructor's ``scheduler`` /
+  ``admission_lookahead`` kwargs, and hybrid ticks (one prefill chunk
+  wave interleaved with decode) preserve the per-uid streams exactly.
 * **Metrics merge, not mix.** :meth:`merged_metrics` sums the extensive
   counters (tokens, dispatches, preemptions); ``peak_pages_in_use`` is
   the max over replicas — the pools are disjoint, summing watermarks

@@ -17,17 +17,37 @@ continuous-batching engine:
   frees pages eagerly. All allocator decisions are host-side and
   deterministic (lowest free page first, admission order decides
   youth), so a given trace preempts identically on every run.
-* **Admission** runs the model's chunked-prefill path: every slot
-  admitted in a tick is prefilled together, chunk c of all their
-  prompts per jitted call — a whole admission wave costs
-  ceil(max_L / prefill_chunk) dispatches. Ragged final chunks and idle
-  slots reuse the same compiled shape via position sentinels. Recurrent
-  families (ssm/hybrid) fall back to token-by-token admission (and to
-  the unpaged contiguous cache — their state is O(1) per slot).
-* **Decode** advances every live slot by one token per tick (the paper's
-  l=1 pipeline, §IV-D) with per-slot RNG streams and per-slot
-  temperature sampling. RNG streams are deterministic in (uid, tokens
-  sampled so far), so a preempted request resumes its stream exactly.
+* **Admission** runs the model's chunked-prefill path: in-flight
+  prompts prefill together, chunk c of all their prompts per jitted
+  call. Ragged final chunks and idle slots reuse the same compiled
+  shape via position sentinels. Recurrent families (ssm/hybrid) fall
+  back to token-by-token admission (and to the unpaged contiguous
+  cache — their state is O(1) per slot). Admission *order* is policy:
+  preempted requeues first, then priority classes high→low with
+  per-tenant round-robin fairness inside a class
+  (:class:`~repro.runtime.pending.PendingQueue`); with the defaults
+  (priority 0, tenant "") that is exact FIFO. ``admission_lookahead``
+  bounds how many queued candidates past a too-big head may admit
+  instead of waiting behind it.
+* **Hybrid tick** (``scheduler="hybrid"``, the default): each tick
+  dispatches a bounded budget — at most *one* prefill chunk covering
+  every mid-prefill slot (each at its own chunk offset) interleaved
+  with the decode step over decode-state slots — mirroring the paper's
+  stall-free two-stage pipeline (§IV, Fig. 9). Admitting a 2k-token
+  prompt costs live streams a few chunk-sized stalls instead of one
+  ceil(L/C)-dispatch freeze. ``scheduler="sync"`` restores the old
+  whole-wave-per-tick admission; the two schedules produce
+  **bit-identical per-uid token streams** (per-slot computation is
+  batch-neighbour independent and RNG streams depend only on
+  (uid, #samples)), so the hybrid/sync choice is purely a latency
+  policy — enforced by the hybrid ≡ sync differential tests.
+* **Decode** advances every decode-state slot by one token per tick
+  (the paper's l=1 pipeline, §IV-D) with per-slot RNG streams and
+  per-slot temperature sampling. RNG streams are deterministic in
+  (uid, tokens sampled so far), so a preempted request resumes its
+  stream exactly. Committed tokens surface immediately through
+  ``Request.on_token`` streaming callbacks — callers need not wait for
+  drain.
 * **Prefix sharing** (paged default): admission looks the prompt up in
   the allocator's token-chunk prefix trie and attaches the longest
   cached prefix by block-table aliasing — those pages' prefill chunks
@@ -68,7 +88,7 @@ import functools
 import itertools
 import time
 from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -87,6 +107,7 @@ from repro.runtime.fault_tolerance import (
     retry_step,
 )
 from repro.runtime.paged_cache import PageAllocator, PagedLayout
+from repro.runtime.pending import PendingQueue
 
 
 class QueueFull(RuntimeError):
@@ -112,11 +133,21 @@ class Request:
     prompt: List[int]
     max_new_tokens: int = 32
     temperature: float = 0.0
-    #: load-shedding rank: higher survives; ties shed youngest first
+    #: admission + load-shedding rank: higher admits first and survives
+    #: shedding; ties shed youngest first
     priority: int = 0
+    #: fairness domain: within a priority class, tenants take turns at
+    #: admission (round-robin) so one flooding tenant cannot starve
+    #: another; "" (the default) keeps single-tenant traces exact FIFO
+    tenant: str = ""
     #: TTL in seconds from submission; the engine evicts the request at
     #: any state once it expires (None = no deadline)
     deadline_s: Optional[float] = None
+    #: streaming hook, called as ``on_token(req, tok)`` the moment each
+    #: token commits (first token included) — tokens surface as they
+    #: are generated, not at drain. Runs on the engine's tick path, so
+    #: it must be cheap and must not raise.
+    on_token: Optional[Callable[["Request", int], None]] = None
     tokens_out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     #: lifecycle: pending → prefill → decode (→ preempted → prefill …)
@@ -137,6 +168,15 @@ class Request:
     _itl: "deque[float]" = dataclasses.field(
         default_factory=lambda: deque(maxlen=512)
     )
+    #: decode-attributed inter-token gaps: the wall gap minus the time
+    #: the engine spent in prefill phases between the two commits —
+    #: "how slow is decode" with scheduler stalls factored out
+    _itl_decode: "deque[float]" = dataclasses.field(
+        default_factory=lambda: deque(maxlen=512)
+    )
+    #: engine prefill-time watermark at this request's last commit
+    #: (tick-phase attribution for ``_itl_decode``)
+    _pf_mark: float = 0.0
 
 
 def _pct(vals: List[float], p: float) -> float:
@@ -249,11 +289,18 @@ class EngineMetrics:
         return self.registry.histogram(self._ns + name,
                                        DEFAULT_LATENCY_BOUNDS)
 
-    def observe_itl(self, dt: float) -> None:
-        """Stream one inter-token gap into the registry histogram (the
-        bounded raw tail lives on the request)."""
+    def observe_itl(self, dt: float,
+                    decode_dt: Optional[float] = None) -> None:
+        """Stream one inter-token gap into the registry histograms (the
+        bounded raw tails live on the request). ``dt`` is the wall gap
+        the caller experienced; ``decode_dt``, when the engine attributes
+        tick phases, is the same gap minus time spent in prefill waves —
+        the *truthful* decode latency (an admission stall inflates
+        ``itl_seconds`` but not ``itl_decode_seconds``)."""
         if self.registry is not None:
             self._hist("itl_seconds").observe(dt)
+            if decode_dt is not None:
+                self._hist("itl_decode_seconds").observe(decode_dt)
 
     def sync_registry(self) -> None:
         """Push the float time accumulators into the registry (integer
@@ -283,6 +330,7 @@ class EngineMetrics:
         rec = {
             "uid": req.uid, "queue_wait": qw, "ttft": ttft,
             "itl": list(req._itl),
+            "itl_decode": list(req._itl_decode),
         }
         self.request_records.append(rec)
         self.requests_recorded += 1
@@ -296,11 +344,17 @@ class EngineMetrics:
         qw = [r["queue_wait"] for r in self.request_records]
         tt = [r["ttft"] for r in self.request_records]
         itl = [x for r in self.request_records for x in r["itl"]]
+        itl_d = [
+            x for r in self.request_records
+            for x in r.get("itl_decode", ())
+        ]
         return {
             "requests": float(self.requests_recorded),
             "queue_wait_p50": _pct(qw, 50), "queue_wait_p95": _pct(qw, 95),
             "ttft_p50": _pct(tt, 50), "ttft_p95": _pct(tt, 95),
             "itl_p50": _pct(itl, 50), "itl_p95": _pct(itl, 95),
+            "itl_decode_p50": _pct(itl_d, 50),
+            "itl_decode_p95": _pct(itl_d, 95),
         }
 
     def summary(self) -> str:
@@ -436,14 +490,16 @@ def _sample_wave(
 
 
 def _sample_step(
-    logits: jax.Array, temps: jax.Array, keys: jax.Array
+    logits: jax.Array, temps: jax.Array, keys: jax.Array,
+    active: jax.Array,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Decode-tick sampling: `_sample_wave` with every slot active.
+    """Decode-tick sampling: `_sample_wave` over the ``active`` slots.
+    Only active slots' keys advance — under the hybrid scheduler a
+    mid-prefill slot shares the batch with decoding neighbours, and its
+    admission-time key must survive those ticks untouched or its first
+    token would diverge from the synchronous schedule.
     ``logits [B, 1, V]``; returns (tokens, new_keys, finite)."""
-    return _sample_wave(
-        logits[:, -1, :], temps, keys,
-        jnp.ones((keys.shape[0],), bool),
-    )
+    return _sample_wave(logits[:, -1, :], temps, keys, active)
 
 
 @jax.jit
@@ -465,6 +521,26 @@ def _advance_key(key: jax.Array, n: jax.Array) -> jax.Array:
     )
 
 
+@dataclasses.dataclass
+class _PrefillJob:
+    """One slot's in-flight chunked prefill under the hybrid scheduler:
+    the admission tick allocates pages and creates the job; each
+    subsequent tick's single chunk wave advances ``pos`` by one chunk
+    until the job covers ``seq`` — then the slot samples its first
+    token (fresh jobs), registers its prefix and flips to decode,
+    exactly as the synchronous wave would have."""
+
+    req: Request
+    #: full token sequence being written (prompt, plus prior
+    #: generations for a resumed request)
+    seq: List[int]
+    resumed: bool
+    #: leading tokens restored by prefix-cache attach (never dispatched)
+    skip: int
+    #: next absolute token offset to prefill (starts at ``skip``)
+    pos: int
+
+
 class ServeLoop:
     """Continuous-batching chunked-prefill / sparse-decode engine over a
     paged (default when supported) or contiguous KV cache."""
@@ -479,6 +555,8 @@ class ServeLoop:
         eos_token: int = 0,
         rng: Optional[jax.Array] = None,
         prefill_chunk: int = 64,
+        scheduler: str = "hybrid",
+        admission_lookahead: int = 0,
         paged: Optional[bool] = None,
         num_pages: Optional[int] = None,
         prefix_sharing: Optional[bool] = None,
@@ -527,6 +605,24 @@ class ServeLoop:
         self.max_len = rows
         self.eos = eos_token
         self.prefill_chunk = max(1, min(prefill_chunk, max_len))
+        if scheduler not in ("hybrid", "sync"):
+            raise ValueError(
+                f"scheduler must be 'hybrid' or 'sync', got {scheduler!r}"
+            )
+        #: "hybrid" (default): one prefill chunk wave per tick,
+        #: interleaved with decode. "sync": the admission tick runs the
+        #: whole prefill wave before decode (the pre-hybrid schedule;
+        #: kept for differential tests and latency A/Bs — per-uid token
+        #: streams are bit-identical either way).
+        self.scheduler = scheduler
+        self._hybrid = scheduler == "hybrid"
+        #: queued candidates the admission pass may *fail* on before
+        #: giving up for the tick: 0 = strict policy order (a too-big
+        #: queue head blocks everyone behind it, the old behavior);
+        #: k > 0 lets up to k smaller requests behind it admit.
+        self.admission_lookahead = max(0, int(admission_lookahead))
+        #: slot → in-flight hybrid prefill job
+        self._prefill_jobs: Dict[int, _PrefillJob] = {}
         self._base_rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.step_fn = jax.jit(model.decode_step, donate_argnums=(1,))
         self.prefill_fn = make_prefill_step(model)
@@ -583,7 +679,7 @@ class ServeLoop:
         self._lengths = np.zeros((batch_slots,), np.int64)  # host mirror
         self._slot_order: List[Optional[int]] = [None] * batch_slots
         self._admit_seq = itertools.count()
-        self.pending: List[Request] = []
+        self.pending = PendingQueue()
         self.completed: List[Request] = []
         self.metrics = EngineMetrics(
             registry=observability.registry if observability else None,
@@ -681,16 +777,13 @@ class ServeLoop:
             # is the one shed — rejected with QueueFull.
             victim = None
             if self.load_shedding and self.pending:
-                victim = min(
-                    self.pending,
-                    key=lambda r: (r.priority, -r._submit_seq),
-                )
+                victim = self.pending.shed_victim()
             if victim is None or victim.priority >= req.priority:
                 raise QueueFull(
                     f"admission queue at limit ({self.queue_limit}); "
                     f"request uid={req.uid} rejected"
                 )
-            self.pending.remove(victim)
+            self.pending.remove(victim.uid)
             self._finish_terminal(
                 victim, "shed",
                 f"load-shed for higher-priority uid={req.uid}",
@@ -705,11 +798,10 @@ class ServeLoop:
         set, the prefix trie stays attachable), so survivors' streams
         are untouched. Returns False when ``uid`` is unknown or already
         terminal."""
-        for req in self.pending:
-            if req.uid == uid:
-                self.pending.remove(req)
-                self._finish_terminal(req, "cancelled")
-                return True
+        req = self.pending.remove(uid)
+        if req is not None:
+            self._finish_terminal(req, "cancelled")
+            return True
         for i, req in enumerate(self.slots):
             if req is not None and req.uid == uid:
                 self._evict_slot(i, "cancelled")
@@ -753,8 +845,9 @@ class ServeLoop:
     def _expire_deadlines(self):
         """Evict every request whose TTL has lapsed — at any state.
         Queued requests (including preempted-requeued ones, whose clock
-        never reset) are dropped in place; live slots are evicted with
-        their pages freed."""
+        never reset) pop off the queue's deadline heap — O(expired),
+        not O(queue) per tick; live slots (few) are scanned directly
+        and evicted with their pages freed, mid-prefill included."""
         now = time.perf_counter()
 
         def expired(req: Request) -> bool:
@@ -764,8 +857,7 @@ class ServeLoop:
                 and now - req._t_submit > req.deadline_s
             )
 
-        for req in [r for r in self.pending if expired(r)]:
-            self.pending.remove(req)
+        for req in self.pending.pop_expired(now):
             self._finish_terminal(req, "expired", "deadline exceeded")
         for i in range(self.batch_slots):
             if self.slots[i] is not None and expired(self.slots[i]):
@@ -936,15 +1028,24 @@ class ServeLoop:
         ]
         n = self._injector.preempt_storm(len(live))
         for _ in range(n):
-            victim = max(
-                (j for j in range(self.batch_slots)
-                 if self.slots[j] is not None),
-                key=lambda j: self._slot_order[j],
-                default=None,
-            )
+            victim = self._preempt_victim()
             if victim is None:
                 break
             self._preempt(victim)
+
+    def _preempt_victim(self) -> Optional[int]:
+        """Deterministic preemption policy: lowest priority class
+        first, ties broken youngest (latest admission) — with uniform
+        priorities this is exactly the old youngest-first rule. Both
+        decode-growth exhaustion and injected storms use it, and a
+        mid-prefill slot is as evictable as a decoding one (its job is
+        dropped and it re-admits fresh)."""
+        return max(
+            (j for j in range(self.batch_slots)
+             if self.slots[j] is not None),
+            key=lambda j: (-self.slots[j].priority, self._slot_order[j]),
+            default=None,
+        )
 
     def _replayed_key(self, uid: int, n_sampled: int) -> jax.Array:
         """Per-request RNG stream, deterministic in (uid, #samples):
@@ -1009,99 +1110,50 @@ class ServeLoop:
         return skip, matched[:n_attach], clone_src
 
     def _admit(self):
+        """Fill free slots from the queue in admission-policy order.
+
+        Candidate selection is the queue's policy (preempted requeues,
+        then priority classes with tenant round-robin); the pass
+        examines at most ``free_slots + admission_lookahead`` queued
+        candidates and tolerates ``admission_lookahead`` allocation
+        failures before giving up for the tick — lookahead 0 (default)
+        reproduces the old strict order, where a head too big for the
+        free pool blocks everything behind it.
+
+        Under the synchronous scheduler the whole chunked prefill wave
+        runs here; under the hybrid scheduler this only *allocates*
+        (pages, slot, RNG key) and enqueues a :class:`_PrefillJob` —
+        `_prefill_tick` then advances every job one chunk per tick.
+        """
         chunked, sequential = [], []
         admitted_slots: List[int] = []
         new_pages: List[int] = []
         now = time.perf_counter()
-        for i in range(self.batch_slots):
-            if self.slots[i] is not None or not self.pending:
-                continue
-            req = self.pending[0]
-            resumed = bool(req.tokens_out)
-            # a resumed (preempted) request re-prefills everything it
-            # had written: prompt + generated tokens minus the pending
-            # one (tokens_out[-1] is its _next_input, not yet written).
-            seq_tokens = (
-                req.prompt + req.tokens_out[:-1] if resumed else req.prompt
+        free = [
+            i for i in range(self.batch_slots) if self.slots[i] is None
+        ]
+        candidates = (
+            self.pending.admission_order(
+                len(free) + self.admission_lookahead
             )
-            skip = 0
-            if self.paged:
-                attach, clone_src = [], None
-                use_chunked = resumed or (
-                    self.prefill_fn is not None and len(req.prompt) > 1
-                )
-                if self.sharing and use_chunked and len(seq_tokens) > 1:
-                    skip, attach, clone_src = self._plan_prefix_attach(
-                        seq_tokens, resumed
-                    )
-                # attach-then-alloc with rollback: shared pages are
-                # refcounted *before* fresh allocation so an eviction
-                # can never reclaim a page this admission depends on;
-                # on pool exhaustion every acquired reference is
-                # released and the request waits at the queue head.
-                pair = None
-                for p in attach:
-                    self.allocator.share(i, p)
-                if clone_src is not None:
-                    self.allocator.share(i, clone_src)
-                    pair = self.allocator.cow(i, len(attach))
-                    if pair is not None:
-                        # copy *now*: the cow just dropped the source
-                        # to refcount 0 (cached), so a later allocation
-                        # in this very pass may evict it into new_pages
-                        # — and the end-of-admission zeroing must never
-                        # beat the clone to its source.
-                        self.cache = self.model.clone_pages(
-                            self.cache, [pair[0]], [pair[1]]
-                        )
-                pages = None
-                if clone_src is None or pair is not None:
-                    pages = self._ensure_capacity_inj(
-                        i, max(len(seq_tokens), 1)
-                    )
-                if pages is None:
-                    # FIFO head-of-line: wait for pages to free up
-                    self.allocator.free_slot(i)
+            if free and self.pending else []
+        )
+        misses = 0
+        cand_iter = iter(candidates)
+        for i in free:
+            req = next(cand_iter, None)
+            admitted = False
+            while req is not None:
+                if self._try_admit(i, req, now, new_pages,
+                                   admitted_slots, chunked, sequential):
+                    admitted = True
                     break
-                new_pages += pages
-                if self.sharing and use_chunked and len(seq_tokens) > 1:
-                    self.metrics.prefix_lookups += 1
-                if pair is not None:
-                    self.metrics.cow_clones += 1
-                    self._emit("cow_clone", slot=i, uid=req.uid,
-                               src=pair[0], dst=pair[1], site="admit")
-                if skip > 0:
-                    self.metrics.prefix_hits += 1
-                    self.metrics.pages_shared += len(attach) + (
-                        clone_src is not None
-                    )
-                    self.metrics.prefill_tokens_skipped += skip
-            self.pending.pop(0)
-            self.slots[i] = req
-            req.state = "prefill"
-            self._slot_order[i] = next(self._admit_seq)
-            self._emit("admit", slot=i, uid=req.uid, resumed=resumed,
-                       prompt_len=len(seq_tokens), skip=skip)
-            if req._t_admit is None:
-                req._t_admit = now
-            # per-request RNG stream: deterministic in uid (and, for
-            # resumed requests, in how many tokens were sampled), not in
-            # what else happens to share the batch.
-            self.slot_keys = self.slot_keys.at[i].set(
-                self._replayed_key(req.uid, len(req.tokens_out))
-            )
-            self._temps[i] = req.temperature
-            self.cache_index = self.cache_index.at[i].set(0)
-            self._lengths[i] = 0
-            admitted_slots.append(i)
-            if resumed:
-                if seq_tokens:
-                    chunked.append((i, req, seq_tokens, True, skip))
-                # else: nothing was ever written; _next_input resumes it
-            elif self.prefill_fn is not None and len(req.prompt) > 1:
-                chunked.append((i, req, seq_tokens, False, skip))
-            else:
-                sequential.append((i, req))
+                misses += 1
+                if misses > self.admission_lookahead:
+                    break
+                req = next(cand_iter, None)
+            if not admitted:
+                break
         if self.paged:
             # paged slot hygiene happens per *page*, at allocation:
             # fresh pages are zeroed, attached pages carry live shared
@@ -1125,9 +1177,134 @@ class ServeLoop:
                 self.cache, jnp.asarray(reset_mask)
             )
         if sequential:
+            # recurrent-family admission stays synchronous under both
+            # schedulers: token-by-token restore has no chunk structure
+            # to interleave
             self._sequential_prefill_wave(sequential)
         if chunked:
-            self._prefill_slots(chunked)
+            if self._hybrid:
+                self._enqueue_prefill_jobs(chunked)
+            else:
+                self._prefill_slots(chunked)
+
+    def _try_admit(self, i: int, req: Request, now: float,
+                   new_pages: List[int], admitted_slots: List[int],
+                   chunked: List, sequential: List) -> bool:
+        """Attempt to admit ``req`` into free slot ``i``: prefix attach
+        then page allocation, with rollback. On pool exhaustion every
+        acquired reference is released, the request stays queued, and
+        the caller's lookahead budget decides whether another candidate
+        gets a try. Returns True iff ``req`` now owns the slot."""
+        resumed = bool(req.tokens_out)
+        # a resumed (preempted) request re-prefills everything it
+        # had written: prompt + generated tokens minus the pending
+        # one (tokens_out[-1] is its _next_input, not yet written).
+        seq_tokens = (
+            req.prompt + req.tokens_out[:-1] if resumed else req.prompt
+        )
+        skip = 0
+        if self.paged:
+            attach, clone_src = [], None
+            use_chunked = resumed or (
+                self.prefill_fn is not None and len(req.prompt) > 1
+            )
+            if self.sharing and use_chunked and len(seq_tokens) > 1:
+                skip, attach, clone_src = self._plan_prefix_attach(
+                    seq_tokens, resumed
+                )
+            # attach-then-alloc with rollback: shared pages are
+            # refcounted *before* fresh allocation so an eviction
+            # can never reclaim a page this admission depends on;
+            # on pool exhaustion every acquired reference is
+            # released and the request stays queued.
+            pair = None
+            for p in attach:
+                self.allocator.share(i, p)
+            if clone_src is not None:
+                self.allocator.share(i, clone_src)
+                pair = self.allocator.cow(i, len(attach))
+                if pair is not None:
+                    # copy *now*: the cow just dropped the source
+                    # to refcount 0 (cached), so a later allocation
+                    # in this very pass may evict it into new_pages
+                    # — and the end-of-admission zeroing must never
+                    # beat the clone to its source.
+                    self.cache = self.model.clone_pages(
+                        self.cache, [pair[0]], [pair[1]]
+                    )
+            pages = None
+            if clone_src is None or pair is not None:
+                pages = self._ensure_capacity_inj(
+                    i, max(len(seq_tokens), 1)
+                )
+            if pages is None:
+                # not enough free pages for this candidate
+                self.allocator.free_slot(i)
+                return False
+            new_pages += pages
+            if self.sharing and use_chunked and len(seq_tokens) > 1:
+                self.metrics.prefix_lookups += 1
+            if pair is not None:
+                self.metrics.cow_clones += 1
+                self._emit("cow_clone", slot=i, uid=req.uid,
+                           src=pair[0], dst=pair[1], site="admit")
+            if skip > 0:
+                self.metrics.prefix_hits += 1
+                self.metrics.pages_shared += len(attach) + (
+                    clone_src is not None
+                )
+                self.metrics.prefill_tokens_skipped += skip
+        self.pending.remove(req.uid)
+        self.pending.note_admitted(req)
+        self.slots[i] = req
+        req.state = "prefill"
+        self._slot_order[i] = next(self._admit_seq)
+        self._emit("admit", slot=i, uid=req.uid, resumed=resumed,
+                   prompt_len=len(seq_tokens), skip=skip)
+        if req._t_admit is None:
+            req._t_admit = now
+        # per-request RNG stream: deterministic in uid (and, for
+        # resumed requests, in how many tokens were sampled), not in
+        # what else happens to share the batch.
+        self.slot_keys = self.slot_keys.at[i].set(
+            self._replayed_key(req.uid, len(req.tokens_out))
+        )
+        self._temps[i] = req.temperature
+        self.cache_index = self.cache_index.at[i].set(0)
+        self._lengths[i] = 0
+        admitted_slots.append(i)
+        if resumed:
+            if seq_tokens:
+                chunked.append((i, req, seq_tokens, True, skip))
+            else:
+                # nothing was ever written; _next_input resumes it and
+                # there is no prefill phase to run
+                req.state = "decode"
+        elif self.prefill_fn is not None and len(req.prompt) > 1:
+            chunked.append((i, req, seq_tokens, False, skip))
+        else:
+            sequential.append((i, req))
+        return True
+
+    def _enqueue_prefill_jobs(self, admitted):
+        """Hybrid admission tail: turn this tick's admissions into
+        per-slot :class:`_PrefillJob` state instead of running the wave
+        inline. A fully-covered resumed slot (prefix attach restored
+        everything) has no chunks to run and completes immediately —
+        pure block-table aliasing, exactly like the synchronous path's
+        zero-chunk wave."""
+        for i, req, seq, resumed, skip in admitted:
+            if skip >= len(seq):
+                self.cache_index = self.cache_index.at[i].set(len(seq))
+                self._lengths[i] = len(seq)
+                if self.paged and self.sharing:
+                    self.allocator.register_prefix(i, seq)
+                req.state = "decode"
+            else:
+                self._prefill_jobs[i] = _PrefillJob(
+                    req=req, seq=seq, resumed=resumed, skip=skip,
+                    pos=skip,
+                )
 
     def _prefill_slots(self, admitted):
         """Batched chunked prefill for every slot admitted this tick:
@@ -1207,10 +1384,21 @@ class ServeLoop:
             # one host sync for the whole wave; stats are tiny [L, B, 4]
             for st in jax.device_get(stats_chunks):
                 self.obs.record_prefill_stats(np.asarray(st))
+        self._complete_prefill(admitted, last_logits)
+
+    def _complete_prefill(self, entries, last_logits):
+        """Shared tail of a synchronous wave and of hybrid chunk
+        completion, in the exact order the contracts rely on: sample
+        every *fresh* finishing slot's first token in one `_sample_wave`
+        call (the ``poison_prefill`` chaos site sits just before it),
+        quarantine non-finite slots **before** prefix registration (a
+        faulted slot's pages must never enter the trie), register every
+        surviving slot's prefix, then commit first tokens and flip to
+        decode. ``entries`` is a list of ``(i, req, seq, resumed, skip)``
+        whose prefill finished; ``last_logits`` maps fresh slots to the
+        logits of their final prompt token."""
         toks = None
         if last_logits:
-            # sample every *fresh* admitted slot's first token in one
-            # call
             zero_row = jnp.zeros_like(next(iter(last_logits.values())))
             logits_mat = jnp.stack([
                 last_logits.get(i, zero_row)
@@ -1221,12 +1409,12 @@ class ServeLoop:
                 mask[i] = True
             if self._injector is not None:
                 doomed = self._injector.poison_prefill([
-                    req.uid for _, req, _, resumed, _ in admitted
+                    req.uid for _, req, _, resumed, _ in entries
                     if not resumed
                 ])
                 if doomed:
                     pmask = np.zeros((self.batch_slots,), bool)
-                    for i, req, _, resumed, _ in admitted:
+                    for i, req, _, resumed, _ in entries:
                         if not resumed and req.uid in doomed:
                             pmask[i] = True
                     logits_mat = _poison_logits(
@@ -1241,21 +1429,107 @@ class ServeLoop:
             # pages must never enter the trie for other requests to
             # attach. Idle rows are zero (finite) so only real fresh
             # slots can trip the guard.
-            for i, req, _, resumed, _ in admitted:
+            for i, req, _, resumed, _ in entries:
                 if not resumed and not bool(finite[i]):
                     self._evict_slot(i, "failed", "non-finite logits")
         if self.paged and self.sharing:
             # content-address every page the wave filled. Registration
             # happens only now — mid-wave, a sharer could have read a
             # page its writer had not finished.
-            for i, req, seq, _, _ in admitted:
+            for i, req, seq, _, _ in entries:
                 if self.slots[i] is req:
                     self.allocator.register_prefix(i, seq)
-        for i, req, _, resumed, _ in admitted:
+        for i, req, _, resumed, _ in entries:
             if not resumed and self.slots[i] is req:
                 self._commit_token(i, req, int(toks[i]))
             if self.slots[i] is req:
                 req.state = "decode"
+
+    def _prefill_tick(self):
+        """Hybrid scheduler: advance every in-flight prefill job by
+        exactly **one** chunk — all jobs share a single jitted dispatch,
+        each at its own chunk offset (position sentinels idle the other
+        slots, the same compiled shape as the synchronous wave). Jobs
+        whose sequence is now fully written run the shared completion
+        tail (`_complete_prefill`): first-token sampling, chaos poison,
+        quarantine, prefix registration, commit, state → decode.
+
+        Per-slot attention is independent of batch neighbours and the
+        slot's RNG key only advances when *it* samples, so splitting the
+        wave across ticks — with decode steps in between — produces the
+        same per-uid streams as the synchronous schedule, bit for bit.
+        """
+        jobs = sorted(self._prefill_jobs.items())
+        if not jobs:
+            return
+        C = self.prefill_chunk
+        t0 = time.perf_counter()
+        bt = self._device_block_table() if self.paged else None
+        toks = np.zeros((self.batch_slots, C), np.int32)
+        # position sentinel max_len ⇒ no cache write, output ignored
+        # (idle/decoding slots and ragged tails share one compiled
+        # shape).
+        pos = np.full((self.batch_slots, C), self.max_len, np.int32)
+        consumed: Dict[int, int] = {}
+        for i, job in jobs:
+            part = job.seq[job.pos:job.pos + C]
+            toks[i, :len(part)] = part
+            pos[i, :len(part)] = job.pos + np.arange(len(part))
+            consumed[i] = len(part)
+        inputs = {
+            "tokens": jnp.asarray(toks), "positions": jnp.asarray(pos),
+        }
+        if bt is not None:
+            inputs["block_table"] = bt
+        use_t = self._telemetry and self.prefill_fn_t is not None
+        stats = None
+        if use_t:
+            logits, self.cache, stats = self._dispatch(
+                self.prefill_fn_t,
+                self.params, self.cache, inputs, self.cache_index,
+            )
+        else:
+            logits, self.cache = self._dispatch(
+                self.prefill_fn,
+                self.params, self.cache, inputs, self.cache_index,
+            )
+        self.metrics.prefill_dispatches += 1
+        self._emit("prefill_chunk", site="prefill",
+                   chunk=min((j.pos - j.skip) // C for _, j in jobs),
+                   slots=len(jobs))
+        finished = []
+        last_logits = {}
+        for i, job in jobs:
+            lo, job.pos = job.pos, job.pos + consumed[i]
+            # per-chunk accounting (the sync wave counts per slot at
+            # wave end — same totals) keeps the stall detector's
+            # progress marker advancing on prefill-only ticks
+            self.metrics.prefill_tokens += consumed[i]
+            if job.pos >= len(job.seq):
+                finished.append(
+                    (i, job.req, job.seq, job.resumed, job.skip)
+                )
+                if not job.resumed:
+                    last_logits[i] = logits[i, len(job.seq) - 1 - lo]
+        # sync before stopping the clock: prefill_time must reflect
+        # device time for the ITL tick-phase attribution to be truthful
+        jax.block_until_ready(
+            list(last_logits.values()) if last_logits else logits
+        )
+        self.metrics.prefill_time += time.perf_counter() - t0
+        self._emit("prefill_tick", site="prefill",
+                   dur=time.perf_counter() - t0, slots=len(jobs),
+                   finished=len(finished))
+        if use_t and stats is not None:
+            self.obs.record_prefill_stats(
+                np.asarray(jax.device_get(stats))
+            )
+        for i, *_ in finished:
+            job = self._prefill_jobs.pop(i)
+            self.cache_index = self.cache_index.at[i].set(len(job.seq))
+            self._lengths[i] = len(job.seq)
+        if finished:
+            self._complete_prefill(finished, last_logits)
 
     def _sequential_prefill_wave(self, admitted):
         """Token-by-token admission for models without a chunked-prefill
@@ -1300,6 +1574,7 @@ class ServeLoop:
 
     def _release_slot(self, i: int):
         """Clear slot state; in paged mode its pages free *eagerly*."""
+        self._prefill_jobs.pop(i, None)
         self.slots[i] = None
         self._temps[i] = 0.0
         self.cache_index = self.cache_index.at[i].set(0)
@@ -1317,10 +1592,14 @@ class ServeLoop:
         req.state = "preempted"
         # requeue bypasses the queue limit: evicting a live slot must
         # never be able to fail.
-        self.pending.insert(0, req)
+        self.pending.requeue_front(req)
         self.metrics.preemptions += 1
+        # a fresh slot preempted mid-prefill has no sampled token yet:
+        # it re-admits as fresh and nothing it wrote survives
         self._emit("preempt", slot=victim, uid=req.uid,
-                   written=len(req.prompt) + len(req.tokens_out) - 1)
+                   written=max(
+                       len(req.prompt) + len(req.tokens_out) - 1, 0
+                   ))
 
     def _ensure_decode_capacity(self, live: List[int]) -> List[int]:
         """Every live slot must own the page its next token's KV row
@@ -1365,12 +1644,7 @@ class ServeLoop:
                             )
                 if got is not None:
                     break
-                victim = max(
-                    (j for j in range(self.batch_slots)
-                     if self.slots[j] is not None),
-                    key=lambda j: self._slot_order[j],
-                )
-                self._preempt(victim)
+                self._preempt(self._preempt_victim())
         if fresh:
             self.cache = self._reset_pages(fresh)
         return [i for i in live if self.slots[i] is not None]
@@ -1381,11 +1655,24 @@ class ServeLoop:
             req._t_first = now
         elif req._t_last is not None:
             dt = now - req._t_last
+            # tick-phase attribution: subtract the engine prefill time
+            # that elapsed between this request's commits — admission
+            # waves (sync) and chunk waves (hybrid) stall the stream
+            # but are *scheduler* latency, not decode latency. The raw
+            # wall gap stays in `itl`; `itl_decode` is the truthful
+            # decode histogram the SLO bench reads.
+            stall = max(self.metrics.prefill_time - req._pf_mark, 0.0)
+            decode_dt = max(dt - stall, 0.0)
             req._itl.append(dt)
-            self.metrics.observe_itl(dt)
+            req._itl_decode.append(decode_dt)
+            self.metrics.observe_itl(dt, decode_dt)
         req._t_last = now
+        req._pf_mark = self.metrics.prefill_time
         req.tokens_out.append(tok)
         req._next_input = tok
+        if req.on_token is not None:
+            # streaming: the token surfaces now, not at drain
+            req.on_token(req, tok)
         # a request generating m tokens writes prompt + m - 1 rows (the
         # final token is sampled but never appended to the cache), so
         # m ≤ rows - len(prompt) + 1 always fits.
@@ -1412,28 +1699,45 @@ class ServeLoop:
         if self.audit and self.paged:
             self.allocator.check_invariants()
 
+    def _end_tick(self):
+        """Uniform tick epilogue: every `tick()` call counts exactly
+        once (prefill-only and idle ticks included — the observability
+        series append once per tick, so `len(series) == ticks` holds on
+        every path), then audit + per-tick series."""
+        self.metrics.ticks += 1
+        self._audit_tick()
+        self._obs_tick_end()
+
     def tick(self):
-        """One engine iteration: expire deadlines, admit, decode one
-        token for all live slots (quarantining any slot whose logits go
-        non-finite)."""
+        """One engine iteration, budget-bounded: expire deadlines,
+        admit (allocation only under the hybrid scheduler), advance
+        in-flight prefills by at most one chunk wave, then decode one
+        token for every decode-state slot (quarantining any slot whose
+        logits go non-finite). Under ``scheduler="sync"`` admission
+        runs its entire prefill wave inline instead and every live slot
+        is in decode state by the time the decode step dispatches."""
         if self.obs is not None:
             self.obs.trace.tick = self.metrics.ticks
         self._expire_deadlines()
         if self._injector is not None:
             self._injected_preempt_storm()
         self._admit()
-        live = [i for i, r in enumerate(self.slots) if r is not None]
+        if self._hybrid and self._prefill_jobs:
+            self._prefill_tick()
+        live = [
+            i for i, r in enumerate(self.slots)
+            if r is not None
+            and (not self._hybrid or r.state == "decode")
+        ]
         if not live:
-            self._audit_tick()
-            self._obs_tick_end()
+            self._end_tick()
             return
         if self.paged:
             live = self._ensure_decode_capacity(live)
             self.metrics.peak_pages_in_use = \
                 self.allocator.peak_pages_in_use
             if not live:
-                self._audit_tick()
-                self._obs_tick_end()
+                self._end_tick()
                 return
         t0 = time.perf_counter()
         tokens = np.full((self.batch_slots, 1), self.eos, np.int32)
@@ -1446,16 +1750,29 @@ class ServeLoop:
         }
         if self.paged:
             inputs["block_table"] = self._device_block_table()
+        # Unpaged decode writes K/V *positionally* at cache_index with no
+        # active gating ("self-healing": an idle slot's garbage row is
+        # overwritten by the next prefill before it can be read). Under
+        # the hybrid scheduler an inactive slot can be *mid-prefill* —
+        # rows already written by earlier chunks must not be clobbered —
+        # so inactive slots get the max_len sentinel, whose one-hot
+        # write row is all zeros (no write). The paged path already
+        # drops idle writes via its write_mask.
+        step_index = self.cache_index
+        if not self.paged:
+            step_index = jnp.where(
+                jnp.asarray(active), self.cache_index, self.max_len
+            )
         step_stats = None
         if self._telemetry and self.step_fn_t is not None:
             logits, self.cache, step_stats = self._dispatch(
                 self.step_fn_t,
-                self.params, self.cache, inputs, self.cache_index,
+                self.params, self.cache, inputs, step_index,
             )
         else:
             logits, self.cache = self._dispatch(
                 self.step_fn,
-                self.params, self.cache, inputs, self.cache_index,
+                self.params, self.cache, inputs, step_index,
             )
         self.cache_index = self.cache_index + jnp.asarray(active, jnp.int32)
         self._lengths += active
@@ -1489,7 +1806,8 @@ class ServeLoop:
                         pmask[i] = True
                 logits = _poison_logits(logits, jnp.asarray(pmask))
         next_tokens, self.slot_keys, finite = _sample_step(
-            logits, jnp.asarray(self._temps), self.slot_keys
+            logits, jnp.asarray(self._temps), self.slot_keys,
+            inputs["active"],
         )
         if step_stats is not None:
             # stats ride the device_get the engine already pays for the
@@ -1522,9 +1840,7 @@ class ServeLoop:
                 continue
             self.metrics.decode_tokens += 1
             self._commit_token(i, req, int(next_tokens[i]))
-        self.metrics.ticks += 1
-        self._audit_tick()
-        self._obs_tick_end()
+        self._end_tick()
 
     # --- draining ------------------------------------------------------
     def _has_work(self) -> bool:

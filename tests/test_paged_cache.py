@@ -971,6 +971,11 @@ class TestCancellationPrefixSharing:
         kw.setdefault("batch_slots", 2)
         kw.setdefault("max_len", 96)
         kw.setdefault("prefill_chunk", 8)
+        # sync scheduler: these schedules count ticks assuming a whole
+        # prefill wave per admission tick ("uid 0 prefills + registers"
+        # in one tick). Hybrid mid-prefill cancellation has its own
+        # coverage in test_hybrid_scheduler.py.
+        kw.setdefault("scheduler", "sync")
         return ServeLoop(model, params, eos_token=cfg.vocab_size - 1,
                          paged=True, audit=True, **kw)
 

@@ -476,9 +476,13 @@ class TestServeEngine:
 
     def test_dispatch_count_for_long_prompt(self):
         """Admitting a 256-token prompt with chunk 64 costs ≤ 5 jitted
-        model calls (the seed engine issued ~256 decode steps)."""
+        model calls (the seed engine issued ~256 decode steps). The
+        whole-wave-in-one-tick shape is the *sync* scheduler's contract;
+        the hybrid scheduler's one-chunk-per-tick budget has its own
+        test (test_hybrid_scheduler.py)."""
         cfg, engine = self._engine(
-            batch_slots=2, max_len=512, prefill_chunk=64
+            batch_slots=2, max_len=512, prefill_chunk=64,
+            scheduler="sync",
         )
         calls = {"prefill": 0, "decode": 0}
         orig_prefill, orig_step = engine.prefill_fn, engine.step_fn
@@ -504,9 +508,12 @@ class TestServeEngine:
 
     def test_batched_admission_shares_prefill_dispatches(self):
         """All slots admitted in one tick prefill together: an admission
-        wave costs ceil(max_L/chunk) dispatches, not sum(ceil(L_i/chunk))."""
+        wave costs ceil(max_L/chunk) dispatches, not sum(ceil(L_i/chunk)).
+        (Sync scheduler: the hybrid tick shares dispatches the same way
+        but spreads them one chunk wave per tick.)"""
         cfg, engine = self._engine(
-            batch_slots=4, max_len=128, prefill_chunk=16
+            batch_slots=4, max_len=128, prefill_chunk=16,
+            scheduler="sync",
         )
         rng = np.random.default_rng(2)
         for uid, L in enumerate((48, 33, 20)):
